@@ -1,0 +1,85 @@
+"""Beyond-paper: Griffin scored on the 10 assigned LM architectures.
+
+Each architecture's per-layer GEMMs (QKV/O, FFN or expert FFN, recurrent
+projections, enc/dec blocks) are extracted from its config and evaluated
+under the paper's cycle model for the four execution categories, assuming
+80% magnitude-pruned weights (DNN.B), ReLU-variant activations at 50%
+(DNN.A), or both.  Attention score/context GEMMs are runtime x runtime so
+weight preprocessing is inapplicable there (DESIGN.md Section 5); the
+recurrent state paths of xLSTM / RG-LRU are skipped (not weight GEMMs).
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+from repro.configs import all_configs
+from repro.configs.base import ModelConfig
+from repro.core import CoreConfig, GRIFFIN, Mode
+from repro.core.evaluate import GemmShape, Workload
+from repro.core.hybrid import category_design_speedup, running_spec
+from repro.core.spec import SPARSE_AB_STAR
+
+from .common import Timer, emit, write_csv
+
+G = GemmShape
+SEQ = 512          # tokens per evaluation slice (cycle model scale)
+
+
+def arch_gemms(cfg: ModelConfig, seq: int = SEQ) -> Tuple[GemmShape, ...]:
+    D, H, KVH, hd, F = (cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                        cfg.hd, cfg.d_ff)
+    L = cfg.num_layers
+    gs: List[GemmShape] = [
+        G(seq, D, H * hd, count=L), G(seq, D, KVH * hd, count=2 * L),
+        G(seq, H * hd, D, count=L),
+        # attention scores/context: runtime x runtime (A-side only)
+        G(seq, hd, min(seq, cfg.window or seq), count=H * L, b_static=False),
+        G(seq, min(seq, cfg.window or seq), hd, count=H * L, b_static=False),
+    ]
+    if cfg.moe:
+        # active expert GEMMs only (top_k of E)
+        act = cfg.moe.top_k
+        gs += [G(seq * act, D, F, count=2 * L), G(seq * act, F, D, count=L)]
+    elif F:
+        gs += [G(seq, D, F, count=2 * L), G(seq, F, D, count=L)]
+    if cfg.family == "ssm":
+        din = int(cfg.proj_factor * D)
+        gs = [G(seq, D, 2 * din, count=L), G(seq, din, D, count=L),
+              G(seq, din // H, din // H, count=3 * H * L)]
+    if cfg.family == "hybrid":
+        R = cfg.lru_width or D
+        gs += [G(seq, D, R, count=2 * L // 3 * 2), G(seq, R, D, count=L)]
+    if cfg.is_encdec:
+        gs += [G(cfg.enc_frames, D, H * hd, count=4 * cfg.encoder_layers),
+               G(cfg.enc_frames, D, F, count=2 * cfg.encoder_layers)]
+    return tuple(gs)
+
+
+def run(fast: bool = True) -> None:
+    core = CoreConfig()
+    rows = []
+    archs = sorted(all_configs())
+    if fast:
+        archs = archs[:4]
+    for name in archs:
+        cfg = all_configs()[name]
+        gemms = arch_gemms(cfg)
+        for mode, (a_s, b_s) in [(Mode.B, (0.0, 0.8)), (Mode.A, (0.5, 0.0)),
+                                 (Mode.AB, (0.5, 0.8))]:
+            wl = Workload(name, gemms, a_s, b_s)
+            with Timer() as t:
+                sp_g = category_design_speedup(GRIFFIN, [wl], core, seed=5,
+                                               mode=mode)
+                sp_ab = category_design_speedup(SPARSE_AB_STAR, [wl], core,
+                                                seed=5, mode=mode)
+            rows.append({"arch": name, "mode": mode.value,
+                         "griffin_speedup": round(sp_g, 3),
+                         "dual_downgrade_speedup": round(sp_ab, 3),
+                         "morph_gain_pct": round(100 * (sp_g / sp_ab - 1), 1)})
+            emit(f"bench_archs/{name}/{mode.value}", t.us,
+                 f"griffin={sp_g:.2f};dual={sp_ab:.2f}")
+    print(f"# bench_archs -> {write_csv('bench_archs', rows)}")
+
+
+if __name__ == "__main__":
+    run(fast=False)

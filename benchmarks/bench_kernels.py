@@ -1,0 +1,76 @@
+"""Kernel micro-benchmarks: Pallas (interpret mode on CPU) vs jnp oracle.
+
+Interpret-mode wall time is NOT TPU performance — the derived column that
+matters is the *grid compaction* (fraction of MXU block-work the Griffin
+kernel skips), which is exactly the speedup term a real TPU realizes, plus
+the balance-shuffle effect on padded grid depth.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.evaluate import MaskModel
+from repro.kernels import dense_matmul, griffin_matmul, preprocess_weights
+from repro.kernels.dense_gemm.ref import dense_matmul_ref
+
+from .common import Timer, emit, write_csv
+
+
+def run(fast: bool = True) -> None:
+    rng = np.random.default_rng(0)
+    mm = MaskModel()
+    rows = []
+    m, k, n = (64, 512, 512) if fast else (128, 1024, 1024)
+    bk = bn = 64
+    unit = 16
+    a = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    w_dense = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+
+    out = dense_matmul(a, w_dense, block_m=64, block_n=64, block_k=64,
+                       interpret=True)
+    out.block_until_ready()
+    with Timer() as t:
+        dense_matmul(a, w_dense, block_m=64, block_n=64, block_k=64,
+                     interpret=True).block_until_ready()
+    ref = dense_matmul_ref(a, w_dense)
+    err = float(jnp.max(jnp.abs(out - ref)))
+    emit("kernels/dense_gemm", t.us, f"max_err={err:.1e}")
+    rows.append({"kernel": "dense_gemm", "us": t.us, "err": err})
+
+    for sparsity in (0.5, 0.8):
+        # channel-clustered pruning pattern (the realistic case)
+        mask = mm.weight_mask(k // bk, n // unit, 1 - sparsity, rng)
+        w = np.asarray(w_dense).copy()
+        wb = w.reshape(k // bk, bk, n // unit, unit)
+        wb *= mask[:, None, :, None]
+        w = wb.reshape(k, n)
+        for balance in (False, True):
+            gw = preprocess_weights(w, block_k=bk, block_n=bn, unit=unit,
+                                    balance=balance)
+            for dual in (False, True):
+                av = np.asarray(a).copy()
+                if dual:
+                    av[:, : k // 4] = 0       # bursty activation zeros
+                out = griffin_matmul(jnp.asarray(av), gw, block_m=64,
+                                     dual=dual, interpret=True)
+                out.block_until_ready()
+                with Timer() as t:
+                    griffin_matmul(jnp.asarray(av), gw, block_m=64,
+                                   dual=dual, interpret=True
+                                   ).block_until_ready()
+                err = float(jnp.max(jnp.abs(out - av @ w)))
+                name = (f"kernels/griffin_spmm/s{int(sparsity*100)}"
+                        f"{'_bal' if balance else ''}{'_dual' if dual else ''}")
+                emit(name, t.us,
+                     f"compaction={gw.compaction:.2f};"
+                     f"density={gw.density:.2f};max_err={err:.1e}")
+                rows.append({"kernel": name, "us": t.us,
+                             "compaction": gw.compaction,
+                             "density": gw.density, "err": err})
+    print(f"# bench_kernels -> {write_csv('bench_kernels', rows)}")
+
+
+if __name__ == "__main__":
+    run(fast=False)

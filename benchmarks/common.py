@@ -1,0 +1,36 @@
+"""Shared benchmark utilities: CSV emission + timing."""
+from __future__ import annotations
+
+import csv
+import os
+import time
+from typing import Dict, List, Sequence
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "out")
+
+
+def write_csv(name: str, rows: Sequence[Dict]) -> str:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, name + ".csv")
+    if rows:
+        keys = list(rows[0].keys())
+        with open(path, "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=keys)
+            w.writeheader()
+            for r in rows:
+                w.writerow({k: r.get(k, "") for k in keys})
+    return path
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    """The run.py contract: ``name,us_per_call,derived`` CSV lines."""
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.us = (time.perf_counter() - self.t0) * 1e6

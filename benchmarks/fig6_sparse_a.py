@@ -1,0 +1,46 @@
+"""Figure 6: Sparse.A design-space exploration (activation-only sparsity).
+
+Same axes as fig5 on the DNN.A category (fan-in budget <= 8); checks the
+paper's Section VI-B observations (da3 cost, shuffle boost, da1>=4 limit).
+"""
+from __future__ import annotations
+
+from repro.core import CoreConfig, Mode
+from repro.core.dse import enumerate_sparse_a, score
+from repro.core.spec import CNVLUTIN, sparse_a, SPARTEN_A
+
+from .common import Timer, emit, write_csv
+
+PAPER_CLAIMS = {
+    (2, 1, 0, True): 1.83, (3, 1, 0, True): 1.89, (2, 1, 1, True): 1.94,
+    (2, 1, 2, True): 1.97, (4, 0, 1, False): 1.28, (4, 0, 1, True): 1.79,
+}
+
+
+def run(fast: bool = True) -> None:
+    core = CoreConfig()
+    designs = [sparse_a(*k[:3], shuffle=k[3]) for k in PAPER_CLAIMS]
+    designs += [SPARTEN_A, CNVLUTIN]   # Cnvlutin: time-only A skipping (Section VII)
+    if not fast:
+        seen = {d.label() for d in designs}
+        designs += [d for d in enumerate_sparse_a() if d.label() not in seen]
+    rows = []
+    for d in designs:
+        with Timer() as t:
+            row = score(d, Mode.A, core, seed=2)
+        key = (d.da1, d.da2, d.da3, d.shuffle)
+        row["paper_speedup"] = PAPER_CLAIMS.get(key, "")
+        rows.append(row)
+        emit(f"fig6/{d.label()}", t.us,
+             f"speedup={row['speedup']:.2f};paper={row['paper_speedup']};"
+             f"tops_w={row['tops_w']:.1f}")
+    path = write_csv("fig6", rows)
+    by = {r["design"]: r["speedup"] for r in rows}
+    off, on = by.get("A(4,0,1,off)"), by.get("A(4,0,1,on)")
+    if off and on:
+        print(f"# obs3: shuffle boost {100*(on/off-1):.0f}% (paper: 40%)")
+    print(f"# fig6 -> {path}")
+
+
+if __name__ == "__main__":
+    run(fast=False)

@@ -1,0 +1,67 @@
+"""Figure 8 + Section VI-D/F: overall comparison across the four DNN
+categories — the paper's headline result.
+
+Griffin (hybrid) vs Sparse.AB* (downgrade), Sparse.A*/B*, TCL.B, TDash.AB,
+SparTen.AB and the dense baseline, scored on DNN.dense / DNN.B / DNN.A /
+DNN.AB.  Reports Griffin-vs-SparTen power-efficiency ratios (paper: 1.2 /
+3.0 / 3.1 / 1.4x) and the sparsity tax (paper: 29%/24% vs 42%/80%).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.core import CoreConfig, GRIFFIN, Mode
+from repro.core.dse import score
+from repro.core.efficiency import sparsity_tax
+from repro.core.spec import (DENSE_BASELINE, SPARSE_A_STAR, SPARSE_AB_STAR,
+                             SPARSE_B_STAR, SPARTEN_AB, TCL_B, TDASH_AB)
+
+from .common import Timer, emit, write_csv
+
+DESIGNS = [DENSE_BASELINE, SPARSE_B_STAR, TCL_B, SPARSE_A_STAR,
+           SPARSE_AB_STAR, GRIFFIN, TDASH_AB, SPARTEN_AB]
+MODES = [Mode.DENSE, Mode.B, Mode.A, Mode.AB]
+PAPER_GRIFFIN_VS_SPARTEN = {Mode.DENSE: 1.2, Mode.B: 3.0, Mode.A: 3.1,
+                            Mode.AB: 1.4}
+
+
+def run(fast: bool = True) -> None:
+    core = CoreConfig()
+    rows = []
+    table: Dict = {}
+    for d in DESIGNS:
+        name = d.name if hasattr(d, "name") and isinstance(d.name, str) \
+            else d.label()
+        for mode in MODES:
+            with Timer() as t:
+                row = score(d, mode, core, seed=4)
+            rows.append(row)
+            table[(name, mode)] = row
+            emit(f"fig8/{name}/{mode.value}", t.us,
+                 f"speedup={row['speedup']:.2f};tops_w={row['tops_w']:.2f};"
+                 f"tops_mm2={row['tops_mm2']:.2f}")
+    path = write_csv("fig8", rows)
+    print(f"# fig8 -> {path}")
+    print("# Griffin vs SparTen.AB power efficiency (paper 1.2/3.0/3.1/1.4):")
+    for mode in MODES:
+        g = table[("Griffin", mode)]["tops_w"]
+        s = table[("SparTen.AB", mode)]["tops_w"]
+        print(f"#   {mode.value:6s}: {g / s:.2f}x "
+              f"(paper {PAPER_GRIFFIN_VS_SPARTEN[mode]}x)")
+    tax_g = sparsity_tax(GRIFFIN)
+    tax_s = sparsity_tax(SPARTEN_AB)
+    print(f"# sparsity tax Griffin {100*tax_g['power_tax']:.0f}%/"
+          f"{100*tax_g['area_tax']:.0f}% (paper 29%/24%); SparTen "
+          f"{100*tax_s['power_tax']:.0f}%/{100*tax_s['area_tax']:.0f}% "
+          f"(paper 42%/80%)")
+    # hybrid-vs-downgrade (Table III): the morphing gain
+    for mode, conf in ((Mode.B, "conf.B"), (Mode.A, "conf.A")):
+        g = table[("Griffin", mode)]["speedup"]
+        ab = table[("Sparse.AB*", mode)]["speedup"]
+        print(f"# morph gain {conf}: {100*(g/ab-1):.0f}% speedup over "
+              f"downgraded Sparse.AB* (paper: 25% power eff for conf.B, "
+              f"23% for conf.A)")
+
+
+if __name__ == "__main__":
+    run(fast=False)

@@ -1,0 +1,53 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines; per-figure CSVs land in
+benchmarks/out/.  ``--full`` runs the complete design-space enumerations
+(minutes); the default is the paper-claims subset (fast CI mode).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="full DSE enumerations (slow)")
+    ap.add_argument("--only", default="",
+                    help="comma list: fig5,fig6,fig7,fig8,table4,table7,"
+                         "archs,kernels")
+    args = ap.parse_args()
+
+    from . import (bench_archs, bench_kernels, fig5_sparse_b, fig6_sparse_a,
+                   fig7_sparse_ab, fig8_overall, table4_networks,
+                   table7_breakdown)
+    suites = {
+        "table4": table4_networks.run,
+        "table7": table7_breakdown.run,
+        "fig5": fig5_sparse_b.run,
+        "fig6": fig6_sparse_a.run,
+        "fig7": fig7_sparse_ab.run,
+        "fig8": fig8_overall.run,
+        "archs": bench_archs.run,
+        "kernels": bench_kernels.run,
+    }
+    only = [s for s in args.only.split(",") if s]
+    print("name,us_per_call,derived")
+    failed = []
+    for name, fn in suites.items():
+        if only and name not in only:
+            continue
+        try:
+            fn(fast=not args.full)
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"# FAILED suites: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Table IV: benchmark networks — dense-latency validation.
+
+Our im2col GEMM-stream reconstructions must produce the paper's dense cycle
+counts (the baseline all speedups normalize to)."""
+from __future__ import annotations
+
+from repro.core import CoreConfig
+from repro.core.workloads import paper_dense_latency, paper_workloads
+
+from .common import Timer, emit, write_csv
+
+
+def run(fast: bool = True) -> None:
+    core = CoreConfig()
+    rows = []
+    for w in paper_workloads():
+        with Timer() as t:
+            dense = w.dense_cycles(core)
+        ref = paper_dense_latency(w.name)
+        rows.append({"network": w.name, "dense_cycles": dense,
+                     "paper_cycles": ref, "ratio": dense / ref,
+                     "b_sparsity": w.b_sparsity, "a_sparsity": w.a_sparsity})
+        emit(f"table4/{w.name}", t.us,
+             f"dense={dense:.3e};paper={ref:.1e};ratio={dense/ref:.2f}")
+    print(f"# table4 -> {write_csv('table4', rows)}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,32 @@
+"""Table VII: power/area breakdown — the fitted 7nm cost model vs the
+paper's synthesis results, with per-design residuals."""
+from __future__ import annotations
+
+from repro.core import GRIFFIN, PRESETS, power_area
+from repro.core.overhead import TABLE_VII_TOTALS
+
+from .common import Timer, emit, write_csv
+
+
+def run(fast: bool = True) -> None:
+    rows = []
+    for name, (p_ref, a_ref) in TABLE_VII_TOTALS.items():
+        design = GRIFFIN if name == "Griffin" else PRESETS[name]
+        with Timer() as t:
+            pa = power_area(design)
+        rows.append({
+            "design": name, "power_mw": round(pa.power_mw, 1),
+            "paper_power_mw": p_ref,
+            "power_err_pct": round(100 * (pa.power_mw / p_ref - 1), 1),
+            "area_kum2": round(pa.area_kum2, 1), "paper_area_kum2": a_ref,
+            "area_err_pct": round(100 * (pa.area_kum2 / a_ref - 1), 1),
+            **{f"p_{k}": round(v, 2) for k, v in pa.breakdown_power.items()},
+        })
+        emit(f"table7/{name}", t.us,
+             f"power={pa.power_mw:.0f}mW({rows[-1]['power_err_pct']:+.0f}%);"
+             f"area={pa.area_kum2:.0f}kum2({rows[-1]['area_err_pct']:+.0f}%)")
+    print(f"# table7 -> {write_csv('table7', rows)}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,13 @@
+"""Serving example: block-prune a model offline (the paper's Sparse.B
+preprocessing), let the hybrid runtime pick the execution mode, and decode
+batched requests.
+
+  python examples/sparse_serve.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.serve import main
+
+main(["--arch", "llama3.2-1b", "--reduced", "--batch", "4",
+      "--prompt-len", "32", "--gen-len", "16", "--sparsity", "0.8"])

@@ -1,0 +1,14 @@
+"""End-to-end training example: a small LM for a few hundred steps on CPU,
+with checkpoint/restart and a Griffin pruning schedule.
+
+  python examples/train_lm.py            # ~2 min on CPU
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.train import main
+
+main(["--arch", "llama3.2-1b", "--reduced", "--steps", "200",
+      "--batch", "8", "--seq", "128", "--lr", "3e-3",
+      "--ckpt-dir", "/tmp/repro_ckpt", "--ckpt-every", "100",
+      "--prune-sparsity", "0.5"])

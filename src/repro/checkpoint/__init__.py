@@ -1,0 +1,1 @@
+from .checkpoint import (PreemptionGuard, latest_step, restore, save)

@@ -1,0 +1,6 @@
+"""Assigned-architecture configs (exact published dims) + shapes registry."""
+from .base import (ModelConfig, MoEConfig, ShapeConfig, SHAPES,
+                   all_configs, applicable_shapes, get_config, register)
+
+__all__ = ["ModelConfig", "MoEConfig", "ShapeConfig", "SHAPES",
+           "all_configs", "applicable_shapes", "get_config", "register"]

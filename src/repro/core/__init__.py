@@ -1,0 +1,29 @@
+"""Griffin core: the paper's contribution as a composable library.
+
+- spec:       parametric architecture definitions (borrowing distances)
+- scheduler:  the cycle model (greedy on-the-fly + static packing bound)
+- evaluate:   GEMM / network / category cycle evaluation
+- functional: executes schedules numerically (exactness oracle)
+- overhead:   Table II structures + calibrated 7nm power/area model
+- efficiency: effective TOPS/W & TOPS/mm^2 (Definition V.1)
+- dse:        design-space exploration (Figures 5-7)
+- hybrid:     Griffin morphing (Section IV-B)
+- workloads:  Table IV benchmark networks as GEMM streams
+"""
+from .spec import (CoreConfig, HybridSpec, Mode, SparseSpec, DENSE_BASELINE,
+                   GRIFFIN, PRESETS, SPARSE_A_STAR, SPARSE_AB_STAR,
+                   SPARSE_B_STAR, sparse_a, sparse_ab, sparse_b)
+from .evaluate import (GemmCycles, GemmShape, MaskModel, Workload,
+                       gemm_cycles, network_speedup, category_speedup)
+from .hybrid import design_speedup, running_spec, select_mode
+from .efficiency import Efficiency, efficiency, sparsity_tax
+from .overhead import power_area, structure
+
+__all__ = [
+    "CoreConfig", "HybridSpec", "Mode", "SparseSpec", "DENSE_BASELINE",
+    "GRIFFIN", "PRESETS", "SPARSE_A_STAR", "SPARSE_AB_STAR", "SPARSE_B_STAR",
+    "sparse_a", "sparse_ab", "sparse_b", "GemmCycles", "GemmShape",
+    "MaskModel", "Workload", "gemm_cycles", "network_speedup",
+    "category_speedup", "design_speedup", "running_spec", "select_mode",
+    "Efficiency", "efficiency", "sparsity_tax", "power_area", "structure",
+]

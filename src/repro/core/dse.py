@@ -1,0 +1,103 @@
+"""Design-space exploration (paper Section VI, Figures 5-7).
+
+Enumerates each architecture family under the paper's MUX fan-in budgets
+(<=8 for single-sparse, <=16 for dual), scores every point on its benchmark
+category (speedup, power, area, effective TOPS/W and TOPS/mm^2) and extracts
+the Pareto frontier.  Results are plain dict rows, written as CSV by the
+benchmark drivers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from .efficiency import efficiency, sparsity_tax
+from .evaluate import MaskModel, DEFAULT_MASK_MODEL
+from .hybrid import category_design_speedup
+from .overhead import power_area, structure
+from .spec import (CoreConfig, HybridSpec, Mode, SparseSpec, sparse_a,
+                   sparse_b, sparse_ab)
+from .workloads import category_workloads
+
+
+def enumerate_sparse_b(max_fanin: int = 8, max_db1: int = 8) -> List[SparseSpec]:
+    """Sparse.B family with AMUX fan-in (1+db1)(1+db2) <= max_fanin."""
+    out = []
+    for db1 in range(1, max_db1 + 1):
+        for db2 in range(0, max_fanin):
+            if (1 + db1) * (1 + db2) > max_fanin:
+                continue
+            for db3 in (0, 1, 2):
+                for sh in (False, True):
+                    out.append(sparse_b(db1, db2, db3, shuffle=sh))
+    return out
+
+
+def enumerate_sparse_a(max_fanin: int = 8, max_da1: int = 4) -> List[SparseSpec]:
+    """Sparse.A family with AMUX fan-in (1+da1)(1+da2)(1+da3) <= max_fanin."""
+    out = []
+    for da1 in range(1, max_da1 + 1):
+        for da2 in (0, 1, 2):
+            for da3 in (0, 1, 2):
+                if (1 + da1) * (1 + da2) * (1 + da3) > max_fanin:
+                    continue
+                for sh in (False, True):
+                    out.append(sparse_a(da1, da2, da3, shuffle=sh))
+    return out
+
+
+def enumerate_sparse_ab(max_fanin: int = 16) -> List[SparseSpec]:
+    """Sparse.AB family with AMUX fan-in <= max_fanin.
+
+    Section VI-C prunes da3 > 0 (it inflates AMUX fan-in, unlike db3) and
+    da1 > 2 (larger da1 needs deeper BBUF); we enumerate the same region.
+    """
+    out = []
+    for da1 in (1, 2):
+        for db1 in (1, 2, 3, 4):
+            L = (1 + da1) * (1 + db1)
+            for da2 in (0, 1):
+                for db2 in (0, 1):
+                    fanin = 1 + (L - 1) * (1 + da2 + db2)
+                    if fanin > max_fanin:
+                        continue
+                    for db3 in (0, 1, 2):
+                        for sh in (False, True):
+                            out.append(sparse_ab(da1, da2, 0, db1, db2, db3,
+                                                 shuffle=sh))
+    return out
+
+
+def score(design: Union[SparseSpec, HybridSpec], mode: Mode,
+          core: CoreConfig = CoreConfig(), seed: int = 0,
+          mask_model: MaskModel = DEFAULT_MASK_MODEL,
+          dense_too: bool = True) -> Dict[str, float]:
+    """One DSE row: speedup on the category + costs + efficiency."""
+    wls = category_workloads(mode)
+    sp = category_design_speedup(design, wls, core, seed=seed,
+                                 mask_model=mask_model)
+    eff = efficiency(design, sp, core)
+    name = design.name if isinstance(design, HybridSpec) else design.label()
+    row = {
+        "design": name, "mode": mode.value, "speedup": sp,
+        "power_mw": eff.power_mw, "area_kum2": eff.area_kum2,
+        "tops_w": eff.tops_w, "tops_mm2": eff.tops_mm2,
+    }
+    if dense_too:
+        dense_eff = efficiency(design, 1.0, core)
+        row["dense_tops_w"] = dense_eff.tops_w
+        row["dense_tops_mm2"] = dense_eff.tops_mm2
+    return row
+
+
+def pareto(rows: Sequence[Dict[str, float]], x: str, y: str
+           ) -> List[Dict[str, float]]:
+    """Rows not dominated in the (maximize x, maximize y) sense."""
+    out = []
+    for r in rows:
+        if not any((o[x] >= r[x] and o[y] >= r[y] and
+                    (o[x] > r[x] or o[y] > r[y])) for o in rows):
+            out.append(r)
+    return sorted(out, key=lambda r: -r[x])

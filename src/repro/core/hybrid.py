@@ -1,0 +1,60 @@
+"""Griffin hybrid morphing (paper Section IV-B, Table III, Table VI).
+
+A hybrid design is one physical core (the dual-sparse base determines the
+silicon) that *morphs* per workload category: the 9-entry ABUF, BBUF, extra
+adder tree and MUX network bought for dual sparsity are re-purposed as a
+deeper single-sided window when only one tensor is sparse.  A plain dual
+design instead *downgrades* (ignores the idle resources).
+
+``select_mode`` is the runtime policy: it measures tensor sparsity and picks
+the execution mode — this is also what the framework layer uses per GEMM
+(see repro.sparsity / kernels.griffin ops).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Union
+
+import numpy as np
+
+from .evaluate import MaskModel, DEFAULT_MASK_MODEL, network_speedup, Workload
+from .spec import CoreConfig, HybridSpec, Mode, SparseSpec
+
+# Sparsity below this threshold is not worth skipping (metadata/arbitration
+# overheads would dominate); the paper treats ~<5% as dense.
+SPARSE_THRESHOLD = 0.05
+
+
+def select_mode(a_sparsity: float, b_sparsity: float,
+                threshold: float = SPARSE_THRESHOLD) -> Mode:
+    return Mode.of(a_sparsity > threshold, b_sparsity > threshold)
+
+
+def running_spec(design: Union[SparseSpec, HybridSpec], mode: Mode
+                 ) -> SparseSpec:
+    """The configuration the core actually runs for a model category."""
+    if isinstance(design, HybridSpec):
+        return design.spec_for(mode)
+    return design.degrade_to(mode)
+
+
+def design_speedup(design: Union[SparseSpec, HybridSpec], wl: Workload,
+                   core: CoreConfig, seed: int = 0,
+                   mode: Optional[Mode] = None,
+                   mask_model: MaskModel = DEFAULT_MASK_MODEL) -> float:
+    """Speedup of a (possibly hybrid) design on one workload."""
+    mode = mode or wl.mode
+    spec = running_spec(design, mode)
+    return network_speedup(spec, wl, core, seed=seed, mode=mode,
+                           mask_model=mask_model)
+
+
+def category_design_speedup(design: Union[SparseSpec, HybridSpec],
+                            workloads: Sequence[Workload], core: CoreConfig,
+                            seed: int = 0, mode: Optional[Mode] = None,
+                            mask_model: MaskModel = DEFAULT_MASK_MODEL
+                            ) -> float:
+    sp = [design_speedup(design, w, core, seed=seed + i, mode=mode,
+                         mask_model=mask_model)
+          for i, w in enumerate(workloads)]
+    return float(np.exp(np.mean(np.log(sp))))

@@ -1,0 +1,267 @@
+"""The borrowing scheduler: the paper's cycle model.
+
+The dense core executes a GEMM output tile by streaming T = ceil(K/K0)
+*K-chunks*; each cycle one chunk's worth of MACs executes.  A sparse
+architecture keeps a window of ``1 + d1`` consecutive chunks resident in the
+operand buffer (ABUF/BBUF); each cycle every multiplier slot may execute one
+effectual operation *borrowed* from anywhere in that window subject to the
+routing limits:
+
+  - time     (d1): the window spans chunks [f, f + d1]; the front f may
+                   advance by at most ``1 + d1`` chunks per cycle (this is
+                   also why the paper's ideal speedup is ``1 + d1`` and why
+                   SRAM bandwidth must scale with speedup, Section V);
+  - lane     (d2): an element in lane ``l`` may execute on lane ``l - dl``
+                   for ``dl in [0, d2]`` (one-sided window; the MUX fan-in
+                   formulas in Table II count ``1 + d2`` candidates);
+  - cross-PE (d3): an element belonging to PE-group coordinate ``g`` may
+                   execute on PE ``g - dg`` for ``dg in [0, d3]``, which
+                   requires an extra adder tree to route the partial sum back.
+
+Placement is greedy with the priority mechanism of Bit-Tactical [13]: oldest
+chunk first (so the window can slide), then smallest lane distance, then
+cross-PE.  The window cannot slide past an incomplete chunk (its buffer entry
+is still live), which reproduces the stalls the paper attributes to
+ABUF/BBUF fullness.
+
+This single primitive scores every architecture family in the paper:
+``Sparse.B`` runs it over the weight mask (G = N0 columns), ``Sparse.A`` over
+the activation mask (G = M0 rows), and ``Sparse.AB`` runs it twice (offline B
+compaction, then on-the-fly scheduling of the A side over the compacted
+stream) — see :mod:`repro.core.evaluate`.
+
+Everything is vectorized over a leading ``tiles`` axis with numpy; the only
+Python-level loop is over executed cycles.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Schedule:
+    """Result of scheduling one batch of tiles.
+
+    cycles:   (tiles,) int  — executed cycles per tile.
+    placement (optional, when ``record=True``): for every source element
+      (tiles, T, K0, G):
+        cyc:  executed cycle index (-1 where mask is False / unplaced)
+        lane: target lane it executes on
+        grp:  target PE-group coordinate it executes on
+    """
+
+    cycles: np.ndarray
+    cyc: Optional[np.ndarray] = None
+    lane: Optional[np.ndarray] = None
+    grp: Optional[np.ndarray] = None
+
+
+def shuffle_lanes(mask: np.ndarray, chunk_axis: int = 1, lane_axis: int = 2,
+                  rot: int = 4) -> np.ndarray:
+    """Paper Section III 'Load Balancing': local rotation shuffling.
+
+    Element at (chunk t, lane l) relocates to lane
+    ``rot*(l//rot) + (l + t) % rot`` — a t-dependent rotation inside groups of
+    ``rot`` consecutive lanes, implementable with (K0/rot) rot x rot
+    crossbars.  Both A and B are shuffled identically along K, so correctness
+    is preserved; the point is to spread a persistently-hot lane (a dense
+    input channel) over its rotation group.
+    """
+    k0 = mask.shape[lane_axis]
+    rot = min(rot, k0)
+    t_idx = np.arange(mask.shape[chunk_axis])
+    l_idx = np.arange(k0)
+    new_lane = (l_idx[None, :] // rot) * rot + (l_idx[None, :] + t_idx[:, None]) % rot
+    out = np.empty_like(mask)
+    mask_m = np.moveaxis(mask, (chunk_axis, lane_axis), (0, 1))
+    out_m = np.moveaxis(out, (chunk_axis, lane_axis), (0, 1))
+    t_b = np.broadcast_to(t_idx[:, None], new_lane.shape)
+    out_m[t_b, new_lane] = mask_m
+    return out
+
+
+def _offsets(d2: int, d3: int) -> List[Tuple[int, int]]:
+    offs = [(dl, dg) for dg in range(d3 + 1) for dl in range(d2 + 1)]
+    offs.sort(key=lambda o: (o[1], o[0]))  # own slot, then lane, then cross-PE
+    return offs
+
+
+def schedule(mask: np.ndarray, d1: int, d2: int, d3: int,
+             shuffle: bool = False, record: bool = False) -> Schedule:
+    """Greedy sliding-window scheduling of a nonzero mask.
+
+    mask: (tiles, T, K0, G) boolean — True where an effectual operation exists.
+    Returns per-tile executed-cycle counts (and placements if ``record``).
+    """
+    if mask.ndim != 4:
+        raise ValueError(f"mask must be (tiles, T, K0, G), got {mask.shape}")
+    if shuffle:
+        mask = shuffle_lanes(mask, chunk_axis=1, lane_axis=2)
+    ntiles, T, K0, G = mask.shape
+    if T == 0:
+        return Schedule(cycles=np.zeros(ntiles, dtype=np.int64))
+
+    R = mask.copy()                                    # remaining elements
+    chunk_any = R.any(axis=(2, 3))                     # (tiles, T)
+    rem = chunk_any.any(axis=1)                        # tiles still working
+    f = np.zeros(ntiles, dtype=np.int64)               # window front
+    cycles = np.zeros(ntiles, dtype=np.int64)
+    offs = _offsets(d2, d3)
+    win = d1 + 1
+    t_grid = np.arange(T)
+    tile_ix = np.arange(ntiles)
+
+    if record:
+        rec_cyc = np.full(mask.shape, -1, dtype=np.int32)
+        rec_lane = np.full(mask.shape, -1, dtype=np.int16)
+        rec_grp = np.full(mask.shape, -1, dtype=np.int16)
+
+    # fast-forward leading all-zero chunks (they cost ceil(run/win) cycles)
+    def _advance(front: np.ndarray, active: np.ndarray) -> np.ndarray:
+        """Next front: earliest incomplete chunk, at most ``win`` ahead."""
+        cand = np.where(chunk_any & (t_grid[None, :] >= front[:, None]),
+                        t_grid[None, :], T)
+        nxt = cand.min(axis=1)
+        return np.where(active, np.minimum(nxt, front + win), front)
+
+    # initial leading-zeros jump is folded into the main loop accounting: the
+    # first cycle's window starts at chunk 0 like the hardware's.
+    while rem.any():
+        occ = np.zeros((ntiles, K0, G), dtype=bool)
+        occ[~rem] = True                               # freeze finished tiles
+        for dt in range(win):                          # oldest chunk first
+            tt = f + dt
+            valid = rem & (tt < T)
+            if not valid.any():
+                break
+            ttc = np.minimum(tt, T - 1)
+            chunk = R[tile_ix, ttc] & valid[:, None, None]   # (tiles, K0, G)
+            if not chunk.any():
+                continue
+            for (dl, dg) in offs:
+                # source element (l, g) -> slot (l - dl, (g - dg) mod G):
+                # lanes are a one-sided window (Table II fan-in 1 + d2), PE
+                # borrowing is a ring within the window group (column n
+                # borrows from n+dg mod G, one adder-tree hop).
+                src = chunk[:, dl:, :] if dl else chunk
+                src = np.roll(src, -dg, axis=2) if dg else src
+                occ_v = occ[:, :K0 - dl, :] if dl else occ
+                put = src & ~occ_v
+                if not put.any():
+                    continue
+                if dl:
+                    occ[:, :K0 - dl, :] |= put
+                else:
+                    occ |= put
+                taken = np.roll(put, dg, axis=2) if dg else put
+                if dl:
+                    chunk[:, dl:, :] &= ~taken
+                else:
+                    chunk &= ~taken
+                if record:
+                    ti, lt, gt = np.nonzero(put)     # target coords
+                    ls, gs = lt + dl, (gt + dg) % G  # source coords
+                    rec_cyc[ti, ttc[ti], ls, gs] = cycles[ti].astype(np.int32)
+                    rec_lane[ti, ttc[ti], ls, gs] = lt.astype(np.int16)
+                    rec_grp[ti, ttc[ti], ls, gs] = gt.astype(np.int16)
+            R[tile_ix[valid], ttc[valid]] = chunk[valid]
+            chunk_any[tile_ix[valid], ttc[valid]] = chunk[valid].any(axis=(1, 2))
+        cycles[rem] += 1
+        f = _advance(f, rem)
+        rem = rem & chunk_any.any(axis=1)
+
+    # trailing (and fully-zero) chunk runs still stream through the window
+    tail = np.maximum(T - f, 0)
+    cycles += -(-tail // win)
+    if record:
+        return Schedule(cycles=cycles, cyc=rec_cyc, lane=rec_lane, grp=rec_grp)
+    return Schedule(cycles=cycles)
+
+
+def dense_cycles(T: int) -> int:
+    """Cycles the dense baseline needs for the same stream."""
+    return T
+
+
+def static_pack_cycles(mask: np.ndarray, d1: int, d2: int, d3: int,
+                       shuffle: bool = False) -> np.ndarray:
+    """Offline (preprocessing-time) packing model for the static B stream.
+
+    Bit-Tactical-style preprocessing schedules each lane's *compressed*
+    stream offline; a lane therefore never idles while it still has work,
+    except when the activation window pins it: every element executed at
+    cycle c must have its original chunk within ``1 + d1`` chunks of the
+    cycle's window base, and bases advance monotonically.  The achievable
+    makespan is the classic window-capacity bound:
+
+      cycles = max(  ceil(T / (1+d1)),                           # travel
+                     max over chunk intervals I, lane groups g:
+                        ceil(count_g(I) / cap_g) + travel(T - span(I)) )
+
+    where lanes are *fungible* within a group when the shuffler (rotation
+    groups of 4) and/or lane borrowing (d2) can move work between them, and
+    d3 additionally pools the (1+d3) columns of the window group.
+
+    mask: (tiles, T, K0, G) — G is the (1+d3)-column window group.
+    Returns per-tile cycle counts.  This is a tight *achievable* bound for
+    offline packing (it is what the paper's preprocessing step computes),
+    whereas :func:`schedule` models the on-the-fly datapath.
+    """
+    ntiles, T, K0, G = mask.shape
+    if T == 0:
+        return np.zeros(ntiles, dtype=np.int64)
+    win = d1 + 1
+    # fungibility width along lanes
+    w = min(K0, (4 if shuffle else 1) * (1 + d2))
+    ngrp = -(-K0 // w)
+    pad_k = ngrp * w
+    m = np.zeros((ntiles, T, pad_k, G), dtype=np.int32)
+    m[:, :, :K0, :] = mask
+    # pool counts: per (tile, chunk, lane-group); d3 pools the whole G axis
+    counts = m.reshape(ntiles, T, ngrp, w, G).sum(axis=(3, 4))  # (tiles,T,ngrp)
+    cap = w * G
+    # prefix sums over chunks for all interval counts
+    P = np.concatenate([np.zeros((ntiles, 1, ngrp), np.int64),
+                        np.cumsum(counts, axis=1)], axis=1)      # (tiles,T+1,ngrp)
+    # count_g([u,v]) = P[v+1] - P[u].  The full (T x T) interval grid is
+    # O(T^2); a strided grid (always including u=0 and v=T) finds the
+    # binding interval to within the stride while keeping the lane-total and
+    # travel bounds exact.
+    best = np.zeros(ntiles, dtype=np.int64)
+    travel_total = -(-T // win)
+    stride = 1 if T <= 32 else 3
+    us = np.unique(np.concatenate([np.arange(0, T, stride), [0]]))
+    vs = np.unique(np.concatenate([np.arange(stride, T + 1, stride), [T]]))
+    cnt = P[:, None, vs, :] - P[:, us, None, :]     # (tiles, nu, nv, ngrp)
+    spanv = vs[None, :, None] - us[:, None, None]   # chunks in interval
+    ok = spanv > 0
+    need = -(-cnt // cap)
+    rest = T - (spanv + d1)
+    trav = np.where(rest > 0, -(-rest // win), 0)
+    tot = np.where(ok[None], need + trav[None], 0)
+    best = np.maximum(best, tot.max(axis=(1, 2, 3)))
+    return np.maximum(best, travel_total).astype(np.int64)
+
+
+def sparten_tile_cycles(eff_counts: np.ndarray, pe_m: int = 32, pe_n: int = 32
+                        ) -> np.ndarray:
+    """SparTen-style per-PE intersection model.
+
+    SparTen [18] assigns one output-stationary MAC per (m, n) output and skips
+    to the next effectual (both-nonzero) pair with (very deep) prefix-sum
+    buffers — no lane or cross-PE routing.  A wave of pe_m x pe_n outputs
+    finishes when its slowest PE drains, so
+
+      cycles(wave) = max_{(m,n) in wave} popcount(Amask[m] & Bmask[:, n]).
+
+    eff_counts: (M, N) effectual-pair counts.  Returns per-wave cycles.
+    """
+    M, N = eff_counts.shape
+    mt, nt = -(-M // pe_m), -(-N // pe_n)
+    pad = np.zeros((mt * pe_m, nt * pe_n), dtype=eff_counts.dtype)
+    pad[:M, :N] = eff_counts
+    waves = pad.reshape(mt, pe_m, nt, pe_n).transpose(0, 2, 1, 3)
+    return np.maximum(waves.max(axis=(2, 3)), 1)

@@ -1,0 +1,1 @@
+from .pipeline import CorpusDataset, DataConfig, Prefetcher, make_iterator, synth_batch

@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the performance-critical GEMM paths.
+
+- dense_gemm:   the optimized dense baseline (blocked MXU matmul).
+- griffin_spmm: the paper's sparse technique, TPU-adapted — offline
+  block-compaction of weights with scalar-prefetch metadata (Sparse.B),
+  optional on-the-fly A-block skipping (dual), and column balancing
+  (shuffle).  See DESIGN.md Section 3 for the granularity adaptation.
+
+Kernels are validated against their ref.py oracles in interpret mode on CPU
+and target TPU v5e block shapes (128-aligned) for real runs.
+"""
+from .dense_gemm.ops import dense_matmul
+from .griffin_spmm.ops import (GriffinWeights, auto_matmul, balance_columns,
+                               griffin_matmul, preprocess_weights)
+
+__all__ = ["dense_matmul", "GriffinWeights", "auto_matmul",
+           "balance_columns", "griffin_matmul", "preprocess_weights"]

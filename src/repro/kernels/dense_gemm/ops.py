@@ -1,0 +1,46 @@
+"""Jit'd public wrapper for the dense GEMM kernel (padding + defaults)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import dense_matmul_kernel
+
+# MXU-aligned defaults for TPU v5e; interpret mode (CPU validation) uses the
+# same shapes so the BlockSpec logic is exercised identically.
+DEFAULT_BLOCK_M = 128
+DEFAULT_BLOCK_N = 128
+DEFAULT_BLOCK_K = 128
+
+
+def _pad_to(x: jax.Array, mult0: int, mult1: int) -> jax.Array:
+    p0 = (-x.shape[0]) % mult0
+    p1 = (-x.shape[1]) % mult1
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)))
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
+                                             "interpret"))
+def dense_matmul(a: jax.Array, b: jax.Array, *,
+                 block_m: int = DEFAULT_BLOCK_M,
+                 block_n: int = DEFAULT_BLOCK_N,
+                 block_k: int = DEFAULT_BLOCK_K,
+                 interpret: bool = False) -> jax.Array:
+    """C = A @ B via the Pallas blocked kernel (arbitrary shapes, padded)."""
+    m, n = a.shape[0], b.shape[1]
+    bm, bn, bk = (min(block_m, _rup(m)), min(block_n, _rup(n)),
+                  min(block_k, _rup(a.shape[1])))
+    ap = _pad_to(a, bm, bk)
+    bp = _pad_to(b, bk, bn)
+    out = dense_matmul_kernel(ap, bp, block_m=bm, block_n=bn, block_k=bk,
+                              interpret=interpret)
+    return out[:m, :n]
+
+
+def _rup(x: int, base: int = 8) -> int:
+    """Round up to a lane-aligned size so tiny test shapes still tile."""
+    return max(base, -(-x // base) * base)

@@ -1,0 +1,7 @@
+"""Pure-jnp oracle for the dense GEMM kernel."""
+import jax.numpy as jnp
+
+
+def dense_matmul_ref(a, b, out_dtype=None):
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(
+        out_dtype or a.dtype)

@@ -1,0 +1,160 @@
+"""Public ops for Griffin sparse execution on TPU.
+
+``preprocess_weights`` is the paper's offline B preprocessing (Fig. 2/3
+step 1) at TPU block granularity; ``balance_columns`` is the load-balancing
+shuffle; ``griffin_matmul`` executes; ``auto_matmul`` is the hybrid-morphing
+entry point that picks dense / B-sparse / dual per call (core.hybrid).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ...core.hybrid import select_mode
+from ...core.spec import Mode
+from ..dense_gemm.ops import dense_matmul
+from .kernel import griffin_spmm_kernel
+
+DEFAULT_BLOCK_M = 128
+DEFAULT_BLOCK_K = 128
+DEFAULT_BLOCK_N = 128
+
+
+@dataclasses.dataclass
+class GriffinWeights:
+    """Block-compacted weight representation + metadata (device arrays)."""
+
+    b_comp: jax.Array        # (max_cnt*block_k, N_padded)
+    kidx: jax.Array          # (n_tiles, max_cnt) int32
+    cnt: jax.Array           # (n_tiles,) int32
+    col_perm: Optional[np.ndarray]   # applied to columns (None = identity)
+    k: int                   # original K (padded)
+    n: int                   # original N (unpadded)
+    block_k: int
+    block_n: int
+
+    @property
+    def density(self) -> float:
+        n_tiles, max_cnt = self.kidx.shape
+        total_blocks = (self.k // self.block_k) * n_tiles
+        return float(np.asarray(self.cnt).sum()) / max(total_blocks, 1)
+
+    @property
+    def compaction(self) -> float:
+        """Grid-depth compaction vs dense: max_cnt / nb_k (lower is better)."""
+        return self.kidx.shape[1] / (self.k // self.block_k)
+
+
+def balance_columns(w_padded: np.ndarray, block_k: int, block_n: int,
+                    unit: int) -> np.ndarray:
+    """Unit-column permutation: the paper's load-balancing shuffle at tile
+    granularity.
+
+    A kernel N tile spans ``block_n / unit`` pruning units; a K block of the
+    tile survives if *any* of its units is nonzero there, so the grid depth
+    is the max over tiles of the union pattern size.  Grouping units with
+    *similar* K patterns (lexicographic sort of their block-mask bitmaps)
+    keeps unions tight and equalizes counts.  Returns a column permutation.
+    """
+    pk, pn = w_padded.shape
+    nb_k = pk // block_k
+    nu = pn // unit
+    # unit pattern bitmap: (nu, nb_k)
+    pat = (w_padded.reshape(nb_k, block_k, nu, unit) != 0).any(axis=(1, 3)).T
+    order = np.lexsort(pat.T[::-1])          # cluster similar patterns
+    perm = (order[:, None] * unit + np.arange(unit)[None, :]).reshape(-1)
+    return perm
+
+
+def preprocess_weights(w: np.ndarray, *, block_k: int = DEFAULT_BLOCK_K,
+                       block_n: int = DEFAULT_BLOCK_N,
+                       balance: bool = True,
+                       unit: Optional[int] = None) -> GriffinWeights:
+    """Offline B preprocessing: drop all-zero (bk x bn) blocks, build the
+    per-N-tile metadata, optionally balance unit-columns across tiles.
+
+    ``unit`` is the pruning granularity along N (defaults to block_n / 4,
+    min 8): weights are expected pruned in (block_k x unit) blocks, e.g. by
+    repro.sparsity.block_prune.
+    """
+    w = np.asarray(w)
+    k, n = w.shape
+    pk = -(-k // block_k) * block_k
+    pn = -(-n // block_n) * block_n
+    wp = np.zeros((pk, pn), dtype=w.dtype)
+    wp[:k, :n] = w
+    nb_k, nb_n = pk // block_k, pn // block_n
+    unit = unit or max(8, block_n // 4)
+
+    col_perm = None
+    if balance and pn > block_n and pn % unit == 0:
+        full_perm = balance_columns(wp, block_k, block_n, unit)
+        wp = wp[:, full_perm]
+        col_perm = full_perm
+
+    blk_nz = (wp.reshape(nb_k, block_k, nb_n, block_n) != 0).any(axis=(1, 3))
+    cnt = blk_nz.sum(axis=0).astype(np.int32)                 # (nb_n,)
+    max_cnt = max(int(cnt.max()), 1)
+    kidx = np.zeros((nb_n, max_cnt), dtype=np.int32)
+    b_comp = np.zeros((max_cnt * block_k, pn), dtype=w.dtype)
+    for j in range(nb_n):
+        ks = np.flatnonzero(blk_nz[:, j])
+        kidx[j, :len(ks)] = ks
+        if len(ks) < max_cnt:                                 # clamp padding
+            kidx[j, len(ks):] = ks[-1] if len(ks) else 0
+        for kc, kb in enumerate(ks):
+            b_comp[kc * block_k:(kc + 1) * block_k,
+                   j * block_n:(j + 1) * block_n] = \
+                wp[kb * block_k:(kb + 1) * block_k,
+                   j * block_n:(j + 1) * block_n]
+    return GriffinWeights(
+        b_comp=jnp.asarray(b_comp), kidx=jnp.asarray(kidx),
+        cnt=jnp.asarray(cnt), col_perm=col_perm, k=pk, n=n,
+        block_k=block_k, block_n=block_n)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "dual", "interpret",
+                                             "block_k", "block_n", "n"))
+def _run(a, b_comp, kidx, cnt, inv_perm, *, block_m, block_k, block_n, n,
+         dual, interpret):
+    out = griffin_spmm_kernel(a, b_comp, kidx, cnt, block_m=block_m,
+                              block_k=block_k, block_n=block_n, dual=dual,
+                              interpret=interpret)
+    if inv_perm is not None:
+        out = out[:, inv_perm]
+    return out[:, :n]
+
+
+def griffin_matmul(a: jax.Array, gw: GriffinWeights, *,
+                   block_m: int = DEFAULT_BLOCK_M, dual: bool = False,
+                   interpret: bool = False) -> jax.Array:
+    """C = A @ W_pruned from the compacted representation."""
+    m, k = a.shape
+    bm = min(block_m, max(8, -(-m // 8) * 8))
+    pm = -(-m // bm) * bm
+    ap = jnp.pad(a, ((0, pm - m), (0, gw.k - k)))
+    inv = None
+    if gw.col_perm is not None:
+        inv = jnp.asarray(np.argsort(gw.col_perm))
+    out = _run(ap, gw.b_comp, gw.kidx, gw.cnt, inv, block_m=bm,
+               block_k=gw.block_k, block_n=gw.block_n, n=gw.n, dual=dual,
+               interpret=interpret)
+    return out[:m]
+
+
+def auto_matmul(a: jax.Array, w, gw: Optional[GriffinWeights] = None, *,
+                a_sparsity: float = 0.0, b_sparsity: float = 0.0,
+                interpret: bool = False) -> jax.Array:
+    """Hybrid-morphing entry point (paper Section IV-B at the op level):
+    measure/declare tensor sparsity, pick the execution mode, run the same
+    core in dense / Sparse.B / dual configuration."""
+    mode = select_mode(a_sparsity, b_sparsity)
+    if mode in (Mode.B, Mode.AB) and gw is not None:
+        return griffin_matmul(a, gw, dual=(mode == Mode.AB),
+                              interpret=interpret)
+    return dense_matmul(a, w, interpret=interpret)

@@ -1,0 +1,279 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import: jax locks the device
+# count at first initialization, and the dry-run needs 512 placeholder host
+# devices to build the production meshes.  (Smoke tests and benchmarks must
+# NOT see this: the flag lives only here.)
+
+"""Multi-pod dry-run driver.
+
+For every (architecture x input shape x mesh) cell this driver proves the
+distribution config is coherent without hardware:
+
+  - ``check`` pass: full-depth (scan-based) lowering + compile on the
+    single-pod 16x16 mesh AND the 2x16x16 multi-pod mesh;
+    ``compiled.memory_analysis()`` proves the per-device footprint fits.
+  - ``cost`` pass: unrolled depth-1/2 (and, for time-recurrent families,
+    two sequence lengths) lowerings on the single-pod mesh;
+    ``cost_analysis()`` + HLO collective parsing extrapolate the exact
+    per-step FLOPs / bytes / collective bytes for the roofline
+    (see repro.roofline.analysis for why extrapolation is needed).
+
+Results append to a JSONL file; the driver is restartable (--only-missing).
+
+Usage:
+  python -m repro.launch.dryrun --all --out results/dryrun.jsonl
+  python -m repro.launch.dryrun --arch mixtral-8x7b --shape train_4k \
+      --passes check_single,check_multi,cost
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, all_configs, applicable_shapes
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch.mesh import chips, make_production_mesh
+from repro.models import build_model, input_specs
+from repro.optim.adamw import AdamWConfig
+from repro.roofline.analysis import (CostSample, extrapolate, model_flops_for,
+                                     roofline_terms, sample_costs)
+from repro.runtime.sharding import shard_batch, shard_cache, shard_params
+from repro.runtime.train import init_state, make_train_step, state_shardings
+
+
+# ---------------------------------------------------------------------------
+# lowering builders
+# ---------------------------------------------------------------------------
+
+def lower_cell(cfg: ModelConfig, shape: ShapeConfig, mesh,
+               fsdp_train: bool = True, fsdp_serve: bool = False,
+               n_micro: int = 1):
+    """Lower the cell's step function with production shardings."""
+    api = build_model(cfg)
+    rep = NamedSharding(mesh, P())
+    if shape.kind == "train":
+        step = make_train_step(api, AdamWConfig(), n_micro=n_micro)
+        st_sh = state_shardings(api, mesh, fsdp_train)
+        st_shapes = jax.eval_shape(
+            lambda: init_state(api, jax.random.PRNGKey(0)))
+        b_shapes = input_specs(cfg, shape)
+        b_sh = shard_batch(b_shapes, mesh)
+        m_sh = {"loss": rep, "grad_norm": rep, "lr": rep}
+        jfn = jax.jit(step, in_shardings=(st_sh, b_sh),
+                      out_shardings=(st_sh, m_sh))
+        return jfn.lower(st_shapes, b_shapes)
+    p_shapes = jax.eval_shape(api.init, jax.random.PRNGKey(0))
+    p_sh = shard_params(p_shapes, mesh, fsdp=fsdp_serve)
+    if shape.kind == "prefill":
+        b_shapes = input_specs(cfg, shape)
+        b_sh = shard_batch(b_shapes, mesh)
+        cache_shapes = jax.eval_shape(
+            lambda: api.init_cache(shape.global_batch, shape.seq_len))
+        c_sh = shard_cache(cache_shapes, mesh, shape.global_batch)
+
+        def fn(params, batch):
+            return api.prefill(params, batch, cache_len=shape.seq_len)
+
+        jfn = jax.jit(fn, in_shardings=(p_sh, b_sh),
+                      out_shardings=(c_sh, None))
+        return jfn.lower(p_shapes, b_shapes)
+    # decode: one new token against a seq_len cache
+    cache_shapes = jax.eval_shape(
+        lambda: api.init_cache(shape.global_batch, shape.seq_len))
+    c_sh = shard_cache(cache_shapes, mesh, shape.global_batch)
+    tok_shapes = input_specs(cfg, shape)["token"]
+    tok_sh = shard_batch(tok_shapes, mesh)
+    jfn = jax.jit(api.decode_step,
+                  in_shardings=(p_sh, c_sh, tok_sh),
+                  out_shardings=(None, c_sh))
+    return jfn.lower(p_shapes, cache_shapes, tok_shapes)
+
+
+# ---------------------------------------------------------------------------
+# cost-pass variants (see roofline.analysis docstring)
+# ---------------------------------------------------------------------------
+
+def _cost_cfg(cfg: ModelConfig, shape: ShapeConfig, depth_units: int
+              ) -> ModelConfig:
+    """Reduced-depth, scan-free variant at full width/batch."""
+    kv = shape.seq_len if shape.kind != "decode" else cfg.kv_chunk
+    kw: Dict[str, Any] = dict(scan_layers=False, kv_chunk=kv,
+                              loss_chunk=shape.seq_len)
+    if cfg.family == "audio":
+        kw.update(num_layers=depth_units, encoder_layers=depth_units)
+    elif cfg.family == "hybrid":
+        kw.update(num_layers=len(cfg.block_pattern) * depth_units)
+    elif cfg.family == "ssm":
+        kw.update(num_layers=len(cfg.xlstm_pattern) * depth_units)
+    else:
+        kw.update(num_layers=depth_units)
+    return dataclasses.replace(cfg, **kw)
+
+
+def _depth_units(cfg: ModelConfig) -> float:
+    if cfg.family == "audio":
+        return cfg.num_layers                       # (enc+dec) pairs
+    if cfg.family == "hybrid":
+        return cfg.num_layers / len(cfg.block_pattern)   # 38/3 incl. tail
+    if cfg.family == "ssm":
+        return cfg.num_layers / len(cfg.xlstm_pattern)
+    return cfg.num_layers
+
+
+def _needs_seq_delta(cfg: ModelConfig, shape: ShapeConfig) -> bool:
+    """Only xLSTM keeps trip>1 inner scans (mLSTM chunk scan + sLSTM step
+    scan) under the cost config; its cost is exactly linear in S."""
+    return cfg.family == "ssm" and shape.kind != "decode"
+
+
+def cost_pass(cfg: ModelConfig, shape: ShapeConfig, mesh) -> CostSample:
+    units = _depth_units(cfg)
+    if not _needs_seq_delta(cfg, shape):
+        f1 = sample_costs(lower_cell(_cost_cfg(cfg, shape, 1), shape,
+                                     mesh).compile())
+        f2 = sample_costs(lower_cell(_cost_cfg(cfg, shape, 2), shape,
+                                     mesh).compile())
+        return extrapolate(f1, f2, units)
+    # 2D (depth x sequence) extrapolation for time-recurrent families
+    s1 = 128
+    su = shape.seq_len / s1
+    sh1 = dataclasses.replace(shape, seq_len=s1)
+    sh2 = dataclasses.replace(shape, seq_len=2 * s1)
+    f11 = sample_costs(lower_cell(_cost_cfg(cfg, sh1, 1), sh1, mesh).compile())
+    f21 = sample_costs(lower_cell(_cost_cfg(cfg, sh1, 2), sh1, mesh).compile())
+    f12 = sample_costs(lower_cell(_cost_cfg(cfg, sh2, 1), sh2, mesh).compile())
+    f22 = sample_costs(lower_cell(_cost_cfg(cfg, sh2, 2), sh2, mesh).compile())
+    base_L = extrapolate(f11, f21, units)      # full depth at s1
+    alt_L = extrapolate(f12, f22, units)       # full depth at 2*s1
+    return extrapolate(base_L, alt_L, su)      # extend to full S
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+def all_cells() -> List[Tuple[str, str, Optional[str]]]:
+    """(arch, shape, skip_reason) for all 40 assigned cells."""
+    out = []
+    for arch, cfg in sorted(all_configs().items()):
+        app = set(applicable_shapes(cfg))
+        for sname in SHAPES:
+            reason = None
+            if sname not in app:
+                reason = "full-attention arch: long_500k requires " \
+                    "sub-quadratic attention (DESIGN.md Section 5)"
+            out.append((arch, sname, reason))
+    return out
+
+
+def run_pass(arch: str, sname: str, pass_name: str) -> Dict[str, Any]:
+    cfg = all_configs()[arch]
+    shape = SHAPES[sname]
+    api = build_model(cfg)
+    rec: Dict[str, Any] = {"arch": arch, "shape": sname, "pass": pass_name,
+                           "status": "ok"}
+    t0 = time.time()
+    if pass_name in ("check_single", "check_multi"):
+        mesh = make_production_mesh(multi_pod=(pass_name == "check_multi"))
+        # memory-fit microbatching for the big train cells (the cost pass
+        # keeps n_micro=1: totals are microbatch-invariant, while-loop
+        # bodies are counted once)
+        n_micro = 1
+        if shape.kind == "train":
+            per_dev = shape.global_batch // 16
+            n_micro = {True: min(per_dev, 16), False: min(per_dev, 8)}[
+                cfg.d_model >= 8192]
+        rec["n_micro"] = n_micro
+        lowered = lower_cell(cfg, shape, mesh, n_micro=n_micro)
+        compiled = lowered.compile()
+        ma = compiled.memory_analysis()
+        print(f"[{arch} x {sname} x {pass_name}] memory_analysis: {ma}")
+        rec.update(
+            chips=chips(mesh),
+            arg_bytes_per_dev=int(ma.argument_size_in_bytes),
+            temp_bytes_per_dev=int(ma.temp_size_in_bytes),
+            out_bytes_per_dev=int(ma.output_size_in_bytes),
+            code_bytes=int(ma.generated_code_size_in_bytes),
+        )
+        ca = compiled.cost_analysis()
+        print(f"[{arch} x {sname} x {pass_name}] cost_analysis flops="
+              f"{ca.get('flops', 0):.3e} (scan bodies counted once; "
+              f"see cost pass for true totals)")
+        from repro.roofline.analysis import collective_bytes
+        rec["collectives_present"] = sorted(
+            collective_bytes(compiled.as_text()).keys())
+    elif pass_name == "cost":
+        mesh = make_production_mesh(multi_pod=False)
+        costs = cost_pass(cfg, shape, mesh)
+        n = chips(mesh)
+        mf = model_flops_for(shape.kind, api.param_count(),
+                             shape.global_batch, shape.seq_len)
+        terms = roofline_terms(costs, mf, n)
+        rec.update(
+            chips=n,
+            flops_per_dev=costs.flops, bytes_per_dev=costs.bytes_accessed,
+            coll_bytes_per_dev=costs.coll_total,
+            coll_breakdown={k: float(v) for k, v in costs.coll.items()},
+            compute_s=terms.compute_s, memory_s=terms.memory_s,
+            collective_s=terms.collective_s, dominant=terms.dominant,
+            model_flops=mf, useful_ratio=terms.useful_ratio,
+            roofline_fraction=terms.roofline_fraction,
+        )
+    rec["elapsed_s"] = round(time.time() - t0, 2)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--passes", default="check_single,check_multi,cost")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun.jsonl")
+    ap.add_argument("--only-missing", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    done = set()
+    if args.only_missing and os.path.exists(args.out):
+        with open(args.out) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                    if r.get("status") in ("ok", "skipped"):
+                        done.add((r["arch"], r["shape"], r["pass"]))
+                except json.JSONDecodeError:
+                    pass
+
+    cells = all_cells() if args.all else [(args.arch, args.shape, None)]
+    passes = args.passes.split(",")
+    with open(args.out, "a") as out:
+        for arch, sname, skip in cells:
+            for pname in passes:
+                if (arch, sname, pname) in done:
+                    continue
+                if skip is not None:
+                    rec = {"arch": arch, "shape": sname, "pass": pname,
+                           "status": "skipped", "reason": skip}
+                else:
+                    try:
+                        rec = run_pass(arch, sname, pname)
+                    except Exception as e:          # record, keep going
+                        rec = {"arch": arch, "shape": sname, "pass": pname,
+                               "status": "error", "error": repr(e),
+                               "trace": traceback.format_exc()[-2000:]}
+                out.write(json.dumps(rec) + "\n")
+                out.flush()
+                print(f"{arch} x {sname} x {pname}: {rec['status']} "
+                      f"({rec.get('elapsed_s', 0)}s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Production meshes.
+
+Defined as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state.  The single-pod production mesh is 16x16 =
+256 chips ("data", "model"); the multi-pod mesh is 2x16x16 = 512 chips with
+a leading "pod" axis that shards only the batch (data parallelism across
+pods; parameters replicate across pods so cross-pod traffic is gradient
+reduction only).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def chips(mesh) -> int:
+    import numpy as np
+    return int(np.prod(list(mesh.shape.values())))

@@ -1,0 +1,118 @@
+"""End-to-end training driver.
+
+On real hardware this runs the production mesh; on CPU it drives a reduced
+config end-to-end (examples/train_lm.py uses it to train a ~small model for
+a few hundred steps).  Features exercised: sharded train step, deterministic
+sharded data, checkpoint/restart (atomic + retention), preemption handling,
+straggler detection hooks, optional Griffin pruning schedule.
+
+  PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b --reduced \
+      --steps 200 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import PreemptionGuard, latest_step, restore, save
+from repro.configs import get_config
+from repro.configs.base import ShapeConfig
+from repro.data import DataConfig, make_iterator
+from repro.models import build_model
+from repro.optim.adamw import AdamWConfig
+from repro.runtime.elastic import plan_mesh
+from repro.runtime.straggler import StragglerDetector
+from repro.runtime.train import (TrainState, apply_prune, init_state,
+                                 jit_train_step, make_train_step,
+                                 state_shardings)
+from repro.runtime.sharding import shard_batch
+from repro.sparsity.pruning import PruneSchedule
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--prune-sparsity", type=float, default=0.0)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    api = build_model(cfg)
+    shape = ShapeConfig("cli", args.seq, args.batch, "train")
+    mesh = plan_mesh(len(jax.devices()), args.model_parallel)
+    opt = AdamWConfig(lr=args.lr, warmup_steps=min(20, args.steps // 5),
+                      total_steps=args.steps)
+
+    guard = PreemptionGuard()
+    guard.install()
+
+    batch_shapes = {
+        "tokens": jax.ShapeDtypeStruct((args.batch, args.seq), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((args.batch, args.seq), jnp.int32)}
+    if cfg.is_encdec:
+        batch_shapes["frames"] = jax.ShapeDtypeStruct(
+            (args.batch, cfg.enc_frames, cfg.d_model), jnp.float32)
+    b_sh = shard_batch(batch_shapes, mesh)
+    step_fn, st_sh = jit_train_step(api, opt, mesh, b_sh)
+
+    start = 0
+    if args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
+        template = jax.eval_shape(
+            lambda: init_state(api, jax.random.PRNGKey(0)))
+        state = restore(args.ckpt_dir, template, shardings=st_sh)
+        start = int(np.asarray(state.step))
+        print(f"restored step {start} from {args.ckpt_dir}")
+    else:
+        state = init_state(api, jax.random.PRNGKey(0))
+
+    prune = (PruneSchedule(args.prune_sparsity, begin_step=args.steps // 4,
+                           ramp_steps=args.steps // 2, block_k=128, unit=32)
+             if args.prune_sparsity > 0 else None)
+
+    it = make_iterator(cfg, shape, DataConfig(seed=0), start_step=start)
+    detector = StragglerDetector(num_hosts=1)
+    t_last = time.time()
+    for step in range(start, args.steps):
+        batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+        state, metrics = step_fn(state, batch)
+        dt = time.time() - t_last
+        t_last = time.time()
+        detector.record(0, dt)
+        if prune is not None and step % 25 == 0:
+            state = apply_prune(state, prune,
+                                match=lambda k: any(s in k for s in
+                                                    ("w_gate", "w_up",
+                                                     "w_down", "wq", "wk",
+                                                     "wv", "wo")))
+        if step % args.log_every == 0:
+            print(f"step {step}: loss={float(metrics['loss']):.4f} "
+                  f"gnorm={float(metrics['grad_norm']):.3f} "
+                  f"lr={float(metrics['lr']):.2e} ({dt*1e3:.0f} ms)")
+        if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+            save(args.ckpt_dir, step + 1, state)
+        if guard.should_stop:
+            if args.ckpt_dir:
+                save(args.ckpt_dir, step + 1, state)
+            print("preemption requested: checkpointed and exiting")
+            break
+    it.close()
+    print(f"final loss: {float(metrics['loss']):.4f}")
+
+
+if __name__ == "__main__":
+    main()

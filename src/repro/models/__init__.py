@@ -1,0 +1,5 @@
+"""Model zoo: GQA transformers (dense/VLM/MoE), xLSTM, RG-LRU hybrid,
+Whisper enc-dec — all scan-based, pure-functional pytree params."""
+from .registry import ModelApi, build_model, input_specs
+
+__all__ = ["ModelApi", "build_model", "input_specs"]

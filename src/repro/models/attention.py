@@ -1,0 +1,249 @@
+"""Memory-efficient GQA attention in pure JAX (flash-style chunking).
+
+Train/prefill attention never materializes the (S x S) score matrix: the KV
+axis is processed in chunks under ``lax.scan`` with an online softmax
+(running max / normalizer), so the live footprint is O(S * chunk).  Causal
+and sliding-window masking are applied per chunk.  Decode attends one query
+against the cache with a length mask.
+
+GQA: queries have H heads, keys/values KVH <= H heads; query heads are
+grouped onto kv heads via reshape (no repetition of KV in memory).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _chunk_attn(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool,
+                window: Optional[int], q_offset, kv_offset, kv_valid: int,
+                scale: float) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One (q-block, kv-chunk) tile of online softmax.
+
+    q: (B, Sq, KVH, G, hd)   k/v: (B, Sk, KVH, hd)
+    Returns (scores_exp @ v, running max, running sum) pieces.
+    """
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    qpos = q_offset + jnp.arange(q.shape[1])
+    kpos = kv_offset + jnp.arange(k.shape[1])
+    mask = (kpos < kv_valid)[None, :] & jnp.ones((q.shape[1], 1), dtype=bool)
+    if causal:
+        mask = mask & (qpos[:, None] >= kpos[None, :])
+    if window is not None:
+        mask = mask & (qpos[:, None] - kpos[None, :] < window)
+    logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    m = logits.max(axis=-1)                            # (B,KVH,G,Sq)
+    p = jnp.exp(logits - m[..., None])
+    p = jnp.where(mask[None, None, None], p, 0.0)
+    l = p.sum(axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bkgqd", p, v.astype(jnp.float32))
+    return o, m, l
+
+
+def _flash_fwd_scan(qg, k, v, *, causal, window, q_offset, kv_chunk, Sk):
+    B, Sq, KVH, G, hd = qg.shape
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    nchunks = k.shape[1] // kv_chunk
+    kc = k.reshape(B, nchunks, kv_chunk, KVH, hd).swapaxes(0, 1)
+    vc = v.reshape(B, nchunks, kv_chunk, KVH, hd).swapaxes(0, 1)
+
+    def body(carry, kv):
+        m_prev, l_prev, acc, idx = carry
+        kcur, vcur = kv
+        kv_off = idx * kv_chunk
+        o, m, l = _chunk_attn(qg, kcur, vcur, causal=causal, window=window,
+                              q_offset=q_offset, kv_offset=kv_off,
+                              kv_valid=Sk, scale=scale)
+        m_new = jnp.maximum(m_prev, m)
+        a_prev = jnp.exp(m_prev - m_new)
+        a_cur = jnp.exp(m - m_new)
+        l_new = l_prev * a_prev + l * a_cur
+        acc = acc * a_prev[..., None] + o * a_cur[..., None]
+        return (m_new, l_new, acc, idx + 1), None
+
+    m0 = jnp.full((B, KVH, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KVH, G, Sq), jnp.float32)
+    acc0 = jnp.zeros((B, KVH, G, Sq, hd), jnp.float32)
+    (m_f, l_f, acc, _), _ = jax.lax.scan(body, (m0, l0, acc0, 0), (kc, vc))
+    out = acc / jnp.maximum(l_f, 1e-30)[..., None]       # (B,KVH,G,Sq,hd)
+    lse = m_f + jnp.log(jnp.maximum(l_f, 1e-30))         # (B,KVH,G,Sq)
+    return out, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _flash(qg, k, v, causal, window, q_offset, kv_chunk, sk_valid):
+    out, _ = _flash_fwd_scan(qg, k, v, causal=causal, window=window,
+                             q_offset=q_offset, kv_chunk=kv_chunk,
+                             Sk=sk_valid)
+    return out
+
+
+def _flash_fwd(qg, k, v, causal, window, q_offset, kv_chunk, sk_valid):
+    out, lse = _flash_fwd_scan(qg, k, v, causal=causal, window=window,
+                               q_offset=q_offset, kv_chunk=kv_chunk,
+                               Sk=sk_valid)
+    return out, (qg, k, v, out, lse)
+
+
+def _flash_bwd(causal, window, q_offset, kv_chunk, sk_valid, res, dout):
+    """Flash-style backward: recompute per-KV-chunk probabilities from the
+    saved log-sum-exp; nothing S^2-sized is ever stored.  This is what keeps
+    the train/prefill activation footprint O(S * hd) per layer (EXPERIMENTS
+    Section Perf, iteration 1)."""
+    qg, k, v, out, lse = res
+    B, Sq, KVH, G, hd = qg.shape
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    nchunks = k.shape[1] // kv_chunk
+    kc = k.reshape(B, nchunks, kv_chunk, KVH, hd).swapaxes(0, 1)
+    vc = v.reshape(B, nchunks, kv_chunk, KVH, hd).swapaxes(0, 1)
+    do = dout.astype(jnp.float32)                        # (B,KVH,G,Sq,hd)
+    Dv = (do * out).sum(axis=-1)                         # (B,KVH,G,Sq)
+    q32 = qg.astype(jnp.float32)
+    qpos = q_offset + jnp.arange(Sq)
+
+    def body(carry, kv):
+        dq, idx = carry
+        kcur, vcur = kv
+        kv_off = idx * kv_chunk
+        logits = jnp.einsum("bqkgd,bskd->bkgqs", q32,
+                            kcur.astype(jnp.float32)) * scale
+        kpos = kv_off + jnp.arange(kv_chunk)
+        mask = (kpos < sk_valid)[None, :] & jnp.ones((Sq, 1), dtype=bool)
+        if causal:
+            mask = mask & (qpos[:, None] >= kpos[None, :])
+        if window is not None:
+            mask = mask & (qpos[:, None] - kpos[None, :] < window)
+        p = jnp.exp(logits - lse[..., None])
+        p = jnp.where(mask[None, None, None], p, 0.0)
+        dv_c = jnp.einsum("bkgqs,bkgqd->bskd", p, do)
+        dp = jnp.einsum("bkgqd,bskd->bkgqs", do, vcur.astype(jnp.float32))
+        ds = p * (dp - Dv[..., None])
+        dq = dq + jnp.einsum("bkgqs,bskd->bqkgd", ds,
+                             kcur.astype(jnp.float32)) * scale
+        dk_c = jnp.einsum("bkgqs,bqkgd->bskd", ds, q32) * scale
+        return (dq, idx + 1), (dk_c, dv_c)
+
+    dq0 = jnp.zeros_like(q32)
+    (dq, _), (dks, dvs) = jax.lax.scan(body, (dq0, 0), (kc, vc))
+    dk = dks.swapaxes(0, 1).reshape(k.shape)
+    dv = dvs.swapaxes(0, 1).reshape(v.shape)
+    return dq.astype(qg.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True, window: Optional[int] = None,
+              q_offset: int = 0, kv_chunk: int = 1024) -> jax.Array:
+    """q: (B, Sq, H, hd); k, v: (B, Sk, KVH, hd).  Returns (B, Sq, H, hd).
+
+    Flash-style: online softmax over KV chunks with a custom VJP that
+    recomputes chunk probabilities in the backward pass (live footprint
+    O(S * chunk) forward AND backward; the S^2 score matrix never exists).
+    ``q_offset`` is the absolute position of q[:,0] relative to k[:,0].
+    """
+    B, Sq, H, hd = q.shape
+    _, Sk, KVH, _ = k.shape
+    G = H // KVH
+    qg = q.reshape(B, Sq, KVH, G, hd)
+    kv_chunk = min(kv_chunk, Sk)
+    nchunks = -(-Sk // kv_chunk)
+    pad = nchunks * kv_chunk - Sk
+    if pad:
+        # padded keys are masked by position (kpos >= Sk fails the causal
+        # test only when q_offset+Sq <= Sk; mask explicitly via window-safe
+        # NEG_INF by extending with +inf positions): simplest is to pad and
+        # rely on causal mask when Sk >= Sq + q_offset; otherwise mask here.
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    out = _flash(qg, k, v, causal, window, q_offset, kv_chunk, Sk)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, hd)
+    return out.astype(q.dtype)
+
+
+def local_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    window: int, q_chunk: int = 256) -> jax.Array:
+    """Banded (block-local) causal attention: each query attends to at most
+    ``window`` previous keys.  Exactly linear in S (no masked-out S^2 work):
+    the sequence is tiled into window-sized blocks and block i attends only
+    to blocks {i-1, i}.  Used by recurrentgemma's local-attention layers.
+    """
+    B, S, H, hd = q.shape
+    KVH = k.shape[2]
+    G = H // KVH
+    W = window
+    nb = -(-S // W)
+    pad = nb * W - S
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    qb = q.reshape(B, nb, W, KVH, G, hd)
+    kb = k.reshape(B, nb, W, KVH, hd)
+    vb = v.reshape(B, nb, W, KVH, hd)
+    prev_k = jnp.pad(kb, ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))[:, :-1]
+    prev_v = jnp.pad(vb, ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))[:, :-1]
+    kcat = jnp.concatenate([prev_k, kb], axis=2)         # (B, nb, 2W, KVH, hd)
+    vcat = jnp.concatenate([prev_v, vb], axis=2)
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    qc = min(q_chunk, W)
+    nqc = W // qc
+
+    def body(_, sub):
+        qs, qoff = sub                                   # (B, nb, qc, KVH, G, hd)
+        logits = jnp.einsum("bnqkgd,bnskd->bnkgqs", qs, kcat,
+                            preferred_element_type=jnp.float32) * scale
+        qpos = qoff + jnp.arange(qc)                     # within-block + block
+        kpos = jnp.arange(2 * W) - W
+        m = (qpos[:, None] >= kpos[None, :]) & \
+            (qpos[:, None] - kpos[None, :] < W)
+        logits = jnp.where(m[None, None, None, None], logits, NEG_INF)
+        # block 0 has no previous block: its kpos < 0 keys are zero padding
+        blk_valid = (jnp.arange(nb)[:, None] > 0) | (kpos[None, :] >= 0)
+        logits = jnp.where(blk_valid[None, :, None, None, None], logits,
+                           NEG_INF)
+        p = jax.nn.softmax(logits, axis=-1)
+        o = jnp.einsum("bnkgqs,bnskd->bnkgqd", p, vcat.astype(jnp.float32))
+        return None, o
+
+    subs = jnp.moveaxis(qb.reshape(B, nb, nqc, qc, KVH, G, hd), 2, 0)
+    offs = jnp.arange(nqc) * qc
+    _, outs = jax.lax.scan(body, None, (subs, offs))
+    # outs: (nqc, B, nb, KVH, G, qc, hd) -> (B, nb, nqc, qc, KVH, G, hd)
+    out = jnp.moveaxis(outs, 0, 2).transpose(0, 1, 2, 5, 3, 4, 6)
+    out = out.reshape(B, nb * W, H, hd)[:, :S]
+    return out.astype(q.dtype)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     pos: jax.Array, *, window: Optional[int] = None
+                     ) -> jax.Array:
+    """Single-step attention against a (B, S, KVH, hd) cache.
+
+    ``pos`` is the current position (number of valid cache entries); for a
+    rolling sliding-window cache pass window=None and a fully-valid cache.
+    q: (B, 1, H, hd).
+    """
+    B, _, H, hd = q.shape
+    _, S, KVH, _ = k_cache.shape
+    G = H // KVH
+    qg = q.reshape(B, KVH, G, hd)
+    logits = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache,
+                        preferred_element_type=jnp.float32)
+    logits = logits / jnp.sqrt(hd).astype(jnp.float32)
+    idx = jnp.arange(S)
+    valid = idx[None, :] <= pos if jnp.ndim(pos) else idx <= pos
+    if window is not None:
+        valid = valid & (idx > pos - window)
+    logits = jnp.where(valid[None, None, None] if valid.ndim == 1
+                       else valid[:, None, None, :], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, H, hd).astype(q.dtype)

@@ -1,0 +1,106 @@
+"""Shared model components: norms, rope, initializers, tree utilities."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Dict[str, Any]
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0
+         ) -> jax.Array:
+    """Rotary embedding.  x: (..., seq, heads, head_dim), positions: (seq,)
+    or broadcastable to (..., seq)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = (1.0 / theta) ** (jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs   # (..., seq, half)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def dense_init(key, in_dim: int, out_dim: int, dtype=jnp.float32,
+               scale: Optional[float] = None) -> jax.Array:
+    scale = scale if scale is not None else 1.0 / np.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, out_dim), jnp.float32) *
+            scale).astype(dtype)
+
+
+def stack_layers(init_one: Callable[[jax.Array], Params], key: jax.Array,
+                 n: int) -> Params:
+    """Initialize n layers and stack each leaf along a leading axis, the
+    layout ``lax.scan`` consumes.  n == 0 yields empty-stacked leaves (scan
+    over length-0 xs is a no-op), so irregular depth patterns degrade
+    gracefully in reduced configs."""
+    if n == 0:
+        proto = jax.eval_shape(init_one, key)
+        return jax.tree.map(
+            lambda x: jnp.zeros((0,) + x.shape, x.dtype), proto)
+    keys = jax.random.split(key, n)
+    layers = [init_one(k) for k in keys]
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *layers)
+
+
+def layer_scan(use_scan: bool, body: Callable, carry, xs):
+    """``lax.scan`` over stacked layers, or an unrolled python loop.
+
+    The unrolled form exists for the roofline cost pass: XLA's
+    HloCostAnalysis counts a while-loop body once regardless of trip count,
+    so per-layer costs are extracted from *unrolled* lowers of 1 vs 2 layers
+    (launch/dryrun.py) while production compiles use the scan (compile time
+    independent of depth).
+    """
+    n = jax.tree.leaves(xs)[0].shape[0]
+    if use_scan or n == 0:
+        # length-0 stacks produce structurally-correct empty ys via scan
+        return jax.lax.scan(body, carry, xs)
+    ys = []
+    for i in range(n):
+        xi = jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, xi)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *zs: jnp.stack(zs, 0), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+def remat_fn(cfg, body: Callable) -> Callable:
+    """Apply the configured rematerialization policy to a layer body."""
+    if not cfg.remat:
+        return body
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(body)
+
+
+def act_fn(name: str) -> Callable[[jax.Array], jax.Array]:
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu,
+            "gelu_tanh": functools.partial(jax.nn.gelu, approximate=True),
+            }[name]
+
+
+def param_count(params: Params) -> int:
+    return int(sum(np.prod(p.shape) for p in jax.tree.leaves(params)))
+
+
+def cast_tree(params: Params, dtype) -> Params:
+    return jax.tree.map(
+        lambda p: p.astype(dtype) if jnp.issubdtype(p.dtype, jnp.floating)
+        else p, params)

@@ -1,0 +1,87 @@
+"""Mixture-of-Experts FFN: einsum-dispatch (Shazeer-style) with capacity.
+
+The dispatch/combine tensors are built with one-hot einsums so GSPMD can
+shard the expert axis (expert parallelism) or the FFN axis (tensor
+parallelism) and derive the all-to-all / all-gather pattern itself.  FLOPs
+are proportional to E * C ~= tokens * capacity_factor * top_k, i.e. the
+*active* expert compute, not the full E * tokens product.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import MoEConfig
+from .common import act_fn, dense_init
+
+
+def init_moe(key, d_model: int, d_ff: int, moe: MoEConfig, dtype) -> Dict:
+    ks = jax.random.split(key, 4)
+    E = moe.num_experts
+    return {
+        "router": dense_init(ks[0], d_model, E, dtype),
+        "w_gate": jnp.stack([dense_init(jax.random.fold_in(ks[1], e),
+                                        d_model, d_ff, dtype)
+                             for e in range(E)]),
+        "w_up": jnp.stack([dense_init(jax.random.fold_in(ks[2], e),
+                                      d_model, d_ff, dtype)
+                           for e in range(E)]),
+        "w_down": jnp.stack([dense_init(jax.random.fold_in(ks[3], e),
+                                        d_ff, d_model, dtype)
+                             for e in range(E)]),
+    }
+
+
+def moe_ffn(p: Dict, x: jax.Array, moe: MoEConfig, act: str = "silu"
+            ) -> Tuple[jax.Array, jax.Array]:
+    """x: (N, D) token major.  Returns (out (N, D), aux load-balance loss).
+
+    Scatter/gather ("sort-based") dispatch: tokens are placed into a dense
+    (E*C, D) expert buffer by computed slot ids and gathered back after the
+    expert FFNs.  Nothing (N, E, C)-sized ever exists — the one-hot-einsum
+    dispatch of Mesh-TF materializes exactly that tensor, which at
+    mixtral x train_4k is ~40 TB/device (EXPERIMENTS.md Section Perf,
+    iteration 2).  Under GSPMD the scatter/gather lower to the expected
+    all-to-alls when the expert buffer is expert-sharded.
+    """
+    N, D = x.shape
+    E, K = moe.num_experts, moe.top_k
+    C = max(1, int(N * moe.capacity_factor * K / E))
+    gates = jnp.einsum("nd,de->ne", x, p["router"],
+                       preferred_element_type=jnp.float32)
+    probs_full = jax.nn.softmax(gates, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs_full, K)           # (N, K)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    e_flat = top_e.reshape(N * K)
+    # position of each (token, k) slot within its expert, in token order:
+    # rank among equal-expert slots = stable-sort inverse
+    order = jnp.argsort(e_flat, stable=True)              # group by expert
+    counts = jnp.bincount(e_flat, length=E)
+    starts = jnp.cumsum(counts) - counts                  # (E,)
+    rank_in_expert = jnp.zeros(N * K, jnp.int32).at[order].set(
+        jnp.arange(N * K, dtype=jnp.int32)) - starts[e_flat].astype(jnp.int32)
+    keep = rank_in_expert < C
+    slot = jnp.where(keep, e_flat * C + rank_in_expert, E * C)  # E*C = dropped
+    # scatter tokens into the expert buffer (unique slots: plain set)
+    buf = jnp.zeros((E * C + 1, D), x.dtype)
+    xk = jnp.broadcast_to(x[:, None], (N, K, D)).reshape(N * K, D)
+    # kept slots are unique; dropped tokens pile into the dump row, which is
+    # never read (so their gradient is exactly zero, as it must be)
+    buf = buf.at[slot].add(xk, mode="drop")
+    xe = buf[:E * C].reshape(E, C, D)
+    h = act_fn(act)(jnp.einsum("ecd,edf->ecf", xe, p["w_gate"])) * \
+        jnp.einsum("ecd,edf->ecf", xe, p["w_up"])
+    ye = jnp.einsum("ecf,efd->ecd", h.astype(x.dtype), p["w_down"])
+    # gather back and combine with routing weights
+    y_buf = jnp.concatenate([ye.reshape(E * C, D),
+                             jnp.zeros((1, D), ye.dtype)], axis=0)
+    yk = y_buf[slot].reshape(N, K, D).astype(jnp.float32)
+    w = (top_p * keep.reshape(N, K)).astype(jnp.float32)
+    out = (yk * w[..., None]).sum(axis=1)
+    # Switch-style load-balance auxiliary
+    me = probs_full.mean(axis=0)
+    fe = jnp.bincount(e_flat, length=E).astype(jnp.float32) / (N * K) * E
+    aux = (me * fe).sum() * E
+    return out.astype(x.dtype), aux.astype(jnp.float32)

@@ -1,0 +1,312 @@
+"""RecurrentGemma [arXiv:2402.19427]: RG-LRU recurrent blocks + local
+attention (MQA, window 2048) in a (rec, rec, attn) pattern, GeGLU MLPs.
+
+The RG-LRU diagonal linear recurrence is evaluated with
+``lax.associative_scan`` (log-depth, fully counted by cost analysis); decode
+carries O(1) recurrent + conv state plus a rolling window cache for the
+attention layers, which is what makes long_500k decode O(window).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .attention import decode_attention, local_attention
+from .common import act_fn, dense_init, layer_scan, rms_norm, rope, stack_layers
+
+Params = Dict[str, Any]
+LRU_C = 8.0
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU + conv
+# ---------------------------------------------------------------------------
+
+def init_rec_block(cfg: ModelConfig, key) -> Params:
+    dt = jnp.dtype(cfg.dtype)
+    D = cfg.d_model
+    R = cfg.lru_width or D
+    ks = jax.random.split(key, 8)
+    return {
+        "ln": jnp.zeros((D,), dt),
+        "w_x": dense_init(ks[0], D, R, dt),
+        "w_gate": dense_init(ks[1], D, R, dt),
+        "conv": (jax.random.normal(ks[2], (cfg.conv_width, R), jnp.float32)
+                 * 0.1).astype(dt),
+        "w_rg": dense_init(ks[3], R, R, dt),       # recurrence gate
+        "w_ig": dense_init(ks[4], R, R, dt),       # input gate
+        "lam": jnp.linspace(0.9, 5.0, R).astype(jnp.float32),  # softplus param
+        "w_out": dense_init(ks[5], R, D, dt),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, state=None):
+    """Depthwise causal conv along time.  x: (B,S,R), w: (cw,R).
+    state: (B, cw-1, R) previous inputs for decode."""
+    cw = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(cw))
+    new_state = xp[:, -(cw - 1):] if cw > 1 else None
+    return out.astype(x.dtype), new_state
+
+
+def _rg_lru(x: jax.Array, p: Params, h0=None):
+    """x: (B,S,R) -> (B,S,R), h_last.  Diagonal gated linear recurrence:
+      log a_t = -c * softplus(lam) * sigmoid(x W_rg)
+      h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (sigmoid(x W_ig) * x_t)
+    evaluated as an associative scan on (a, b) pairs."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ p["w_rg"].astype(jnp.float32))
+    i = jax.nn.sigmoid(xf @ p["w_ig"].astype(jnp.float32))
+    log_a = -LRU_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * xf)
+    if h0 is not None:
+        # fold the carried state into the first step
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(l, r_):
+        a1, b1 = l
+        a2, b2 = r_
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(x.dtype), h[:, -1]
+
+
+def rec_mix(cfg: ModelConfig, p: Params, x: jax.Array, state=None):
+    """Recurrent mixing block.  state: (h0 (B,R) f32, conv (B,cw-1,R))."""
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    xr = h @ p["w_x"]
+    gate = jax.nn.gelu((h @ p["w_gate"]).astype(jnp.float32)).astype(x.dtype)
+    h0, conv_state = (None, None) if state is None else state
+    xr, new_conv = _causal_conv(xr, p["conv"], conv_state)
+    hr, h_last = _rg_lru(xr, p, h0)
+    out = (hr * gate) @ p["w_out"]
+    return (x + out).astype(x.dtype), (h_last, new_conv)
+
+
+# ---------------------------------------------------------------------------
+# attention + MLP blocks
+# ---------------------------------------------------------------------------
+
+def init_attn_block(cfg: ModelConfig, key) -> Params:
+    dt = jnp.dtype(cfg.dtype)
+    D, H, KVH, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    return {
+        "ln": jnp.zeros((D,), dt),
+        "wq": dense_init(ks[0], D, H * hd, dt),
+        "wk": dense_init(ks[1], D, KVH * hd, dt),
+        "wv": dense_init(ks[2], D, KVH * hd, dt),
+        "wo": dense_init(ks[3], H * hd, D, dt),
+    }
+
+
+def init_mlp(cfg: ModelConfig, key) -> Params:
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 3)
+    return {
+        "ln": jnp.zeros((cfg.d_model,), dt),
+        "w_gate": dense_init(ks[0], cfg.d_model, cfg.d_ff, dt),
+        "w_up": dense_init(ks[1], cfg.d_model, cfg.d_ff, dt),
+        "w_down": dense_init(ks[2], cfg.d_ff, cfg.d_model, dt),
+    }
+
+
+def mlp(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    f = act_fn(cfg.act)(h @ p["w_gate"]) * (h @ p["w_up"])
+    return (x + f @ p["w_down"]).astype(x.dtype)
+
+
+def attn_mix(cfg: ModelConfig, p: Params, x: jax.Array, positions):
+    B, S, D = x.shape
+    H, KVH, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    q = rope((h @ p["wq"]).reshape(B, S, H, hd), positions, cfg.rope_theta)
+    k = rope((h @ p["wk"]).reshape(B, S, KVH, hd), positions, cfg.rope_theta)
+    v = (h @ p["wv"]).reshape(B, S, KVH, hd)
+    o = local_attention(q, k, v, window=cfg.window,
+                        q_chunk=min(cfg.kv_chunk, cfg.window))
+    return (x + o.reshape(B, S, -1) @ p["wo"]).astype(x.dtype), (k, v)
+
+
+def attn_decode(cfg: ModelConfig, p: Params, x: jax.Array, kc, vc, pos):
+    """One-token local attention against a rolling window cache."""
+    B = x.shape[0]
+    H, KVH, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    posv = pos[None] if pos.ndim == 0 else pos
+    q = rope((h @ p["wq"]).reshape(B, 1, H, hd), posv, cfg.rope_theta)
+    k = rope((h @ p["wk"]).reshape(B, 1, KVH, hd), posv, cfg.rope_theta)
+    v = (h @ p["wv"]).reshape(B, 1, KVH, hd)
+    clen = kc.shape[1]
+    slot = pos % clen
+    kc = jax.lax.dynamic_update_slice(kc, k, (0, slot, 0, 0))
+    vc = jax.lax.dynamic_update_slice(vc, v, (0, slot, 0, 0))
+    eff = jnp.minimum(pos, clen - 1)
+    o = decode_attention(q, kc, vc, eff, window=None)
+    return (x + o.reshape(B, 1, -1) @ p["wo"]).astype(x.dtype), kc, vc
+
+
+# ---------------------------------------------------------------------------
+# model assembly: scan over (rec, rec, attn) groups + rec tail
+# ---------------------------------------------------------------------------
+
+def _group_counts(cfg: ModelConfig) -> Tuple[int, int]:
+    plen = len(cfg.block_pattern)          # 3
+    groups = cfg.num_layers // plen        # 12
+    tail = cfg.num_layers - groups * plen  # 2 (rec, rec)
+    return groups, tail
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    dt = jnp.dtype(cfg.dtype)
+    groups, tail = _group_counts(cfg)
+    ks = jax.random.split(key, 6)
+
+    def init_group(k):
+        kk = jax.random.split(k, 6)
+        return {
+            "rec1": init_rec_block(cfg, kk[0]), "mlp1": init_mlp(cfg, kk[1]),
+            "rec2": init_rec_block(cfg, kk[2]), "mlp2": init_mlp(cfg, kk[3]),
+            "attn": init_attn_block(cfg, kk[4]), "mlp3": init_mlp(cfg, kk[5]),
+        }
+
+    def init_tail(k):
+        kk = jax.random.split(k, 2)
+        return {"rec": init_rec_block(cfg, kk[0]), "mlp": init_mlp(cfg, kk[1])}
+
+    return {
+        "embed": dense_init(ks[0], cfg.vocab_size, cfg.d_model, dt, scale=1.0),
+        "final_norm": jnp.zeros((cfg.d_model,), dt),
+        "groups": stack_layers(init_group, ks[1], groups),
+        "tail": stack_layers(init_tail, ks[2], tail),
+        "head": dense_init(ks[3], cfg.d_model, cfg.vocab_size, dt),
+    }
+
+
+def forward_hidden(cfg: ModelConfig, params: Params, tokens: jax.Array):
+    x = params["embed"][tokens]
+    positions = jnp.arange(tokens.shape[1])
+
+    def group(x, gp):
+        x, _ = rec_mix(cfg, gp["rec1"], x)
+        x = mlp(cfg, gp["mlp1"], x)
+        x, _ = rec_mix(cfg, gp["rec2"], x)
+        x = mlp(cfg, gp["mlp2"], x)
+        x, _ = attn_mix(cfg, gp["attn"], x, positions)
+        x = mlp(cfg, gp["mlp3"], x)
+        return x, None
+
+    def tail(x, tp):
+        x, _ = rec_mix(cfg, tp["rec"], x)
+        x = mlp(cfg, tp["mlp"], x)
+        return x, None
+
+    gfn = jax.checkpoint(group) if cfg.remat else group
+    x, _ = layer_scan(cfg.scan_layers, gfn, x, params["groups"])
+    x, _ = layer_scan(cfg.scan_layers, tail, x, params["tail"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, jnp.zeros((), jnp.float32)
+
+
+def init_cache(cfg: ModelConfig, batch: int, length: int) -> Params:
+    groups, tail = _group_counts(cfg)
+    R = cfg.lru_width or cfg.d_model
+    cw = cfg.conv_width
+    clen = min(length, cfg.window)
+    dt = jnp.dtype(cfg.dtype)
+    z_h = jnp.zeros((groups, 2, batch, R), jnp.float32)
+    z_conv = jnp.zeros((groups, 2, batch, cw - 1, R), dt)
+    return {
+        "rec_h": z_h, "rec_conv": z_conv,
+        "tail_h": jnp.zeros((tail, batch, R), jnp.float32),
+        "tail_conv": jnp.zeros((tail, batch, cw - 1, R), dt),
+        "k": jnp.zeros((groups, batch, clen, cfg.num_kv_heads, cfg.hd), dt),
+        "v": jnp.zeros((groups, batch, clen, cfg.num_kv_heads, cfg.hd), dt),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array,
+            cache_len=None):
+    B, S = tokens.shape
+    positions = jnp.arange(S)
+    clen = min(cache_len or S, cfg.window)
+
+    def group(x, gp):
+        x, st1 = rec_mix(cfg, gp["rec1"], x)
+        x = mlp(cfg, gp["mlp1"], x)
+        x, st2 = rec_mix(cfg, gp["rec2"], x)
+        x = mlp(cfg, gp["mlp2"], x)
+        x, (k, v) = attn_mix(cfg, gp["attn"], x, positions)
+        x = mlp(cfg, gp["mlp3"], x)
+        # keep the last window of K/V, rolled so decode can continue writing
+        k, v = k[:, -clen:], v[:, -clen:]
+        return x, (jnp.stack([st1[0], st2[0]]),
+                   jnp.stack([st1[1], st2[1]]), k, v)
+
+    def tail(x, tp):
+        x, st = rec_mix(cfg, tp["rec"], x)
+        x = mlp(cfg, tp["mlp"], x)
+        return x, st
+
+    x = params["embed"][tokens]
+    x, (rec_h, rec_conv, ks, vs) = layer_scan(cfg.scan_layers, group, x,
+                                              params["groups"])
+    x, (tail_h, tail_conv) = layer_scan(cfg.scan_layers, tail, x,
+                                        params["tail"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x[:, -1] @ params["head"]
+    # roll the window cache so that slot (pos % clen) is consistent
+    shift = (S % clen) if S >= clen else 0
+    ks = jnp.roll(ks, shift, axis=2)
+    vs = jnp.roll(vs, shift, axis=2)
+    cache = {"rec_h": rec_h, "rec_conv": rec_conv, "tail_h": tail_h,
+             "tail_conv": tail_conv, "k": ks, "v": vs,
+             "pos": jnp.asarray(S - 1, jnp.int32)}
+    return cache, logits
+
+
+def decode_step(cfg: ModelConfig, params: Params, cache: Params,
+                token: jax.Array):
+    x = params["embed"][token]
+    pos = cache["pos"] + 1
+
+    def group(x, xs):
+        gp, rh, rconv, kc, vc = xs
+        x, st1 = rec_mix(cfg, gp["rec1"], x, state=(rh[0], rconv[0]))
+        x = mlp(cfg, gp["mlp1"], x)
+        x, st2 = rec_mix(cfg, gp["rec2"], x, state=(rh[1], rconv[1]))
+        x = mlp(cfg, gp["mlp2"], x)
+        x, kc, vc = attn_decode(cfg, gp["attn"], x, kc, vc, pos)
+        x = mlp(cfg, gp["mlp3"], x)
+        return x, (jnp.stack([st1[0], st2[0]]),
+                   jnp.stack([st1[1], st2[1]]), kc, vc)
+
+    def tail(x, xs):
+        tp, rh, rconv = xs
+        x, st = rec_mix(cfg, tp["rec"], x, state=(rh, rconv))
+        x = mlp(cfg, tp["mlp"], x)
+        return x, st
+
+    x, (rec_h, rec_conv, ks, vs) = layer_scan(
+        cfg.scan_layers, group,
+        x, (params["groups"], cache["rec_h"], cache["rec_conv"],
+            cache["k"], cache["v"]))
+    x, (tail_h, tail_conv) = layer_scan(
+        cfg.scan_layers, tail, x,
+        (params["tail"], cache["tail_h"], cache["tail_conv"]))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x[:, 0] @ params["head"]
+    return logits, {"rec_h": rec_h, "rec_conv": rec_conv, "tail_h": tail_h,
+                    "tail_conv": tail_conv, "k": ks, "v": vs, "pos": pos}

@@ -1,0 +1,206 @@
+"""Decoder-only transformer family: dense (stablelm, command-r-plus,
+llama3.2, minitron), VLM backbone (chameleon, early-fusion token ids), and
+MoE (mixtral with SWA, llama4-scout top-1).
+
+All layer stacks are ``lax.scan`` over stacked parameters so HLO size and
+compile time are depth-independent at 100B scale; rematerialization is a
+config knob.  Cross entropy is computed in sequence chunks so the
+(B, S, vocab) logits tensor is never materialized (see runtime.losses).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .attention import attention, decode_attention
+from .common import (act_fn, dense_init, layer_scan, remat_fn, rms_norm,
+                     rope, stack_layers)
+from .moe import init_moe, moe_ffn
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_layer(cfg: ModelConfig, key) -> Params:
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 8)
+    D, H, KVH, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    p: Params = {
+        "ln1": jnp.zeros((D,), dt), "ln2": jnp.zeros((D,), dt),
+        "wq": dense_init(ks[0], D, H * hd, dt),
+        "wk": dense_init(ks[1], D, KVH * hd, dt),
+        "wv": dense_init(ks[2], D, KVH * hd, dt),
+        "wo": dense_init(ks[3], H * hd, D, dt),
+    }
+    if cfg.qk_norm:
+        p["qn"] = jnp.zeros((hd,), dt)
+        p["kn"] = jnp.zeros((hd,), dt)
+    if cfg.moe:
+        p["moe"] = init_moe(ks[4], D, cfg.d_ff, cfg.moe, dt)
+    else:
+        p["w_gate"] = dense_init(ks[5], D, cfg.d_ff, dt)
+        p["w_up"] = dense_init(ks[6], D, cfg.d_ff, dt)
+        p["w_down"] = dense_init(ks[7], cfg.d_ff, D, dt)
+    return p
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    dt = jnp.dtype(cfg.dtype)
+    k_emb, k_layers, k_head = jax.random.split(key, 3)
+    params: Params = {
+        "embed": dense_init(k_emb, cfg.vocab_size, cfg.d_model, dt, scale=1.0),
+        "final_norm": jnp.zeros((cfg.d_model,), dt),
+        "layers": stack_layers(functools.partial(_init_layer, cfg),
+                               k_layers, cfg.num_layers),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = dense_init(k_head, cfg.d_model, cfg.vocab_size, dt)
+    return params
+
+
+def unembed(cfg: ModelConfig, params: Params) -> jax.Array:
+    return params["embed"].T if cfg.tie_embeddings else params["head"]
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def _ffn(cfg: ModelConfig, p: Params, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    if cfg.moe:
+        B, S, D = x.shape
+        out, aux = moe_ffn(p["moe"], x.reshape(B * S, D), cfg.moe, cfg.act)
+        return out.reshape(B, S, D), aux
+    h = act_fn(cfg.act)(x @ p["w_gate"]) * (x @ p["w_up"])
+    return (h @ p["w_down"]).astype(x.dtype), jnp.zeros((), jnp.float32)
+
+
+def _qkv(cfg: ModelConfig, p: Params, x: jax.Array, positions: jax.Array):
+    B, S, D = x.shape
+    H, KVH, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    q = (x @ p["wq"]).reshape(B, S, H, hd)
+    k = (x @ p["wk"]).reshape(B, S, KVH, hd)
+    v = (x @ p["wv"]).reshape(B, S, KVH, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["qn"], cfg.norm_eps)
+        k = rms_norm(k, p["kn"], cfg.norm_eps)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def block_train(cfg: ModelConfig, p: Params, x: jax.Array,
+                positions: jax.Array, return_kv: bool = False):
+    """Full-sequence block (train / prefill)."""
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    q, k, v = _qkv(cfg, p, h, positions)
+    o = attention(q, k, v, causal=True, window=cfg.window,
+                  kv_chunk=cfg.kv_chunk)
+    B, S, _, _ = q.shape
+    x = x + (o.reshape(B, S, -1) @ p["wo"]).astype(x.dtype)
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    f, aux = _ffn(cfg, p, h2)
+    x = (x + f).astype(x.dtype)
+    return (x, aux, (k, v)) if return_kv else (x, aux)
+
+
+def block_decode(cfg: ModelConfig, p: Params, x: jax.Array, k_cache, v_cache,
+                 pos, cache_len: int):
+    """One-token block against a (B, S_cache, KVH, hd) cache; returns the
+    updated cache slices.  Sliding-window archs use a rolling cache."""
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    q, k, v = _qkv(cfg, p, h, positions=pos[None] if pos.ndim == 0 else pos)
+    rolling = cfg.window is not None and cache_len <= cfg.window
+    slot = jnp.where(rolling, pos % cache_len, jnp.minimum(pos, cache_len - 1))
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k, (0, slot, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v, (0, slot, 0, 0))
+    # valid length: rolling caches become fully valid once wrapped
+    eff_pos = jnp.where(rolling, jnp.minimum(pos, cache_len - 1), pos)
+    win = None if rolling else cfg.window
+    o = decode_attention(q, k_cache, v_cache, eff_pos, window=win)
+    B = x.shape[0]
+    x = x + (o.reshape(B, 1, -1) @ p["wo"]).astype(x.dtype)
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    f, _ = _ffn(cfg, p, h2)
+    return (x + f).astype(x.dtype), k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# model-level functions
+# ---------------------------------------------------------------------------
+
+def forward_hidden(cfg: ModelConfig, params: Params, tokens: jax.Array,
+                   return_kv: bool = False):
+    """Embed + scan over layers.  Returns final hidden (and per-layer K/V
+    stacked over layers when ``return_kv``)."""
+    x = params["embed"][tokens]
+    positions = jnp.arange(tokens.shape[1])
+    aux0 = jnp.zeros((), jnp.float32)
+
+    def body(carry, lp):
+        x, aux = carry
+        if return_kv:
+            x, a, kv = block_train(cfg, lp, x, positions, return_kv=True)
+            return (x, aux + a), kv
+        x, a = block_train(cfg, lp, x, positions)
+        return (x, aux + a), None
+
+    fn = remat_fn(cfg, body)
+    (x, aux), kvs = layer_scan(cfg.scan_layers, fn, (x, aux0),
+                               params["layers"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return (x, aux, kvs) if return_kv else (x, aux)
+
+
+def init_cache(cfg: ModelConfig, batch: int, length: int) -> Params:
+    """Zeroed KV cache.  Sliding-window archs cap the cache at the window
+    (rolling buffer), which is what makes long_500k decode O(window)."""
+    clen = min(length, cfg.window) if cfg.window else length
+    dt = jnp.dtype(cfg.dtype)
+    shape = (cfg.num_layers, batch, clen, cfg.num_kv_heads, cfg.hd)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt),
+            "pos": jnp.zeros((), jnp.int32)}
+
+
+def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array,
+            cache_len: Optional[int] = None) -> Tuple[Params, jax.Array]:
+    """Process a prompt, build the cache, return (cache, last-token logits)."""
+    B, S = tokens.shape
+    x, _, (ks, vs) = forward_hidden(cfg, params, tokens, return_kv=True)
+    clen = cache_len or S
+    clen = min(clen, cfg.window) if cfg.window else clen
+    if clen >= S:
+        pad = clen - S
+        ks = jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        vs = jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    else:  # keep the last window
+        ks, vs = ks[:, :, S - clen:], vs[:, :, S - clen:]
+    logits = x[:, -1] @ unembed(cfg, params)
+    cache = {"k": ks, "v": vs, "pos": jnp.asarray(S - 1, jnp.int32)}
+    return cache, logits
+
+
+def decode_step(cfg: ModelConfig, params: Params, cache: Params,
+                token: jax.Array) -> Tuple[jax.Array, Params]:
+    """One decode step for the whole batch.  token: (B, 1) int32."""
+    x = params["embed"][token]
+    pos = cache["pos"] + 1
+    clen = cache["k"].shape[2]
+
+    def body(x, xs):
+        lp, kc, vc = xs
+        x, kc, vc = block_decode(cfg, lp, x, kc, vc, pos, clen)
+        return x, (kc, vc)
+
+    x, (ks, vs) = layer_scan(cfg.scan_layers, body, x,
+                             (params["layers"], cache["k"], cache["v"]))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x[:, 0] @ unembed(cfg, params)
+    return logits, {"k": ks, "v": vs, "pos": pos}

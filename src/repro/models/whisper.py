@@ -1,0 +1,208 @@
+"""Whisper-large-v3 backbone [arXiv:2212.04356]: 32-layer encoder + 32-layer
+decoder, d=1280, 20 heads, GeLU MLPs.
+
+The conv audio frontend is a STUB per the assignment: ``input_specs()``
+supplies precomputed frame embeddings (B, 1500, d) — the post-conv mel
+representation.  The encoder adds sinusoidal positions and runs
+bidirectional attention; the decoder is causal with cross-attention (we use
+rope for decoder self-attention since the assigned shapes exceed Whisper's
+learned 448-position table — recorded as a deviation in DESIGN.md).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from .attention import attention, decode_attention
+from .common import act_fn, dense_init, layer_scan, rms_norm, rope, stack_layers
+
+Params = Dict[str, Any]
+
+
+def _sinusoid(length: int, d: int) -> jax.Array:
+    pos = np.arange(length)[:, None]
+    dim = np.arange(d // 2)[None, :]
+    ang = pos / (10000 ** (2 * dim / d))
+    return jnp.asarray(np.concatenate([np.sin(ang), np.cos(ang)], axis=1),
+                       jnp.float32)
+
+
+def _init_attn(cfg, key, kv_dim=None):
+    dt = jnp.dtype(cfg.dtype)
+    D, H, hd = cfg.d_model, cfg.num_heads, cfg.hd
+    kv_dim = kv_dim or D
+    ks = jax.random.split(key, 4)
+    return {"wq": dense_init(ks[0], D, H * hd, dt),
+            "wk": dense_init(ks[1], kv_dim, H * hd, dt),
+            "wv": dense_init(ks[2], kv_dim, H * hd, dt),
+            "wo": dense_init(ks[3], H * hd, D, dt)}
+
+
+def _init_mlp(cfg, key):
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 2)
+    return {"w_up": dense_init(ks[0], cfg.d_model, cfg.d_ff, dt),
+            "w_down": dense_init(ks[1], cfg.d_ff, cfg.d_model, dt)}
+
+
+def _init_enc_layer(cfg, key):
+    ks = jax.random.split(key, 2)
+    return {"ln1": jnp.zeros((cfg.d_model,), jnp.dtype(cfg.dtype)),
+            "attn": _init_attn(cfg, ks[0]),
+            "ln2": jnp.zeros((cfg.d_model,), jnp.dtype(cfg.dtype)),
+            "mlp": _init_mlp(cfg, ks[1])}
+
+
+def _init_dec_layer(cfg, key):
+    ks = jax.random.split(key, 3)
+    dt = jnp.dtype(cfg.dtype)
+    return {"ln1": jnp.zeros((cfg.d_model,), dt),
+            "self": _init_attn(cfg, ks[0]),
+            "ln_x": jnp.zeros((cfg.d_model,), dt),
+            "cross": _init_attn(cfg, ks[1]),
+            "ln2": jnp.zeros((cfg.d_model,), dt),
+            "mlp": _init_mlp(cfg, ks[2])}
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    return {
+        "embed": dense_init(ks[0], cfg.vocab_size, cfg.d_model, dt, scale=1.0),
+        "enc_layers": stack_layers(functools.partial(_init_enc_layer, cfg),
+                                   ks[1], cfg.encoder_layers),
+        "dec_layers": stack_layers(functools.partial(_init_dec_layer, cfg),
+                                   ks[2], cfg.num_layers),
+        "enc_norm": jnp.zeros((cfg.d_model,), dt),
+        "final_norm": jnp.zeros((cfg.d_model,), dt),
+        "head": dense_init(ks[3], cfg.d_model, cfg.vocab_size, dt),
+    }
+
+
+def _mha(cfg, p, xq, xkv, *, causal, positions=None, kv_chunk):
+    B, Sq, D = xq.shape
+    H, hd = cfg.num_heads, cfg.hd
+    q = (xq @ p["wq"]).reshape(B, Sq, H, hd)
+    k = (xkv @ p["wk"]).reshape(B, xkv.shape[1], H, hd)
+    v = (xkv @ p["wv"]).reshape(B, xkv.shape[1], H, hd)
+    if positions is not None:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    o = attention(q, k, v, causal=causal, kv_chunk=kv_chunk)
+    return (o.reshape(B, Sq, -1) @ p["wo"]).astype(xq.dtype), (k, v)
+
+
+def encode(cfg: ModelConfig, params: Params, frames: jax.Array) -> jax.Array:
+    """frames: (B, F, d) precomputed post-conv embeddings (frontend stub)."""
+    x = frames + _sinusoid(frames.shape[1], cfg.d_model).astype(frames.dtype)
+
+    def body(x, lp):
+        h, _ = _mha(cfg, lp["attn"], rms_norm(x, lp["ln1"], cfg.norm_eps),
+                    rms_norm(x, lp["ln1"], cfg.norm_eps), causal=False,
+                    kv_chunk=cfg.kv_chunk)
+        x = (x + h).astype(x.dtype)
+        h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        f = act_fn(cfg.act)(h2 @ lp["mlp"]["w_up"]) @ lp["mlp"]["w_down"]
+        return (x + f).astype(x.dtype), None
+
+    fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = layer_scan(cfg.scan_layers, fn, x, params["enc_layers"])
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def forward_hidden(cfg: ModelConfig, params: Params, tokens: jax.Array,
+                   frames: jax.Array, return_kv: bool = False):
+    """Decoder over tokens with cross-attention to the encoded frames."""
+    enc = encode(cfg, params, frames)
+    x = params["embed"][tokens]
+    positions = jnp.arange(tokens.shape[1])
+
+    def body(x, lp):
+        h, kv = _mha(cfg, lp["self"], rms_norm(x, lp["ln1"], cfg.norm_eps),
+                     rms_norm(x, lp["ln1"], cfg.norm_eps), causal=True,
+                     positions=positions, kv_chunk=cfg.kv_chunk)
+        x = (x + h).astype(x.dtype)
+        hx, xkv = _mha(cfg, lp["cross"], rms_norm(x, lp["ln_x"], cfg.norm_eps),
+                       enc, causal=False, kv_chunk=cfg.kv_chunk)
+        x = (x + hx).astype(x.dtype)
+        h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        f = act_fn(cfg.act)(h2 @ lp["mlp"]["w_up"]) @ lp["mlp"]["w_down"]
+        out = (x + f).astype(x.dtype)
+        return out, (kv, xkv) if return_kv else None
+
+    fn = jax.checkpoint(body) if (cfg.remat and not return_kv) else body
+    x, kvs = layer_scan(cfg.scan_layers, fn, x, params["dec_layers"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    return (x, aux, kvs) if return_kv else (x, aux)
+
+
+def init_cache(cfg: ModelConfig, batch: int, length: int) -> Params:
+    dt = jnp.dtype(cfg.dtype)
+    L, H, hd, F = cfg.num_layers, cfg.num_heads, cfg.hd, cfg.enc_frames
+    return {
+        "k": jnp.zeros((L, batch, length, H, hd), dt),
+        "v": jnp.zeros((L, batch, length, H, hd), dt),
+        "xk": jnp.zeros((L, batch, F, H, hd), dt),
+        "xv": jnp.zeros((L, batch, F, H, hd), dt),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array,
+            frames: jax.Array, cache_len=None):
+    B, S = tokens.shape
+    x, _, kvs = forward_hidden(cfg, params, tokens, frames, return_kv=True)
+    (ks, vs), (xks, xvs) = kvs
+    clen = cache_len or S
+    pad = clen - S
+    if pad > 0:
+        ks = jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        vs = jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    logits = x[:, -1] @ params["head"]
+    return {"k": ks, "v": vs, "xk": xks, "xv": xvs,
+            "pos": jnp.asarray(S - 1, jnp.int32)}, logits
+
+
+def decode_step(cfg: ModelConfig, params: Params, cache: Params,
+                token: jax.Array):
+    x = params["embed"][token]
+    pos = cache["pos"] + 1
+    B = x.shape[0]
+    H, hd = cfg.num_heads, cfg.hd
+
+    def body(x, xs):
+        lp, kc, vc, xk, xv = xs
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        posv = pos[None]
+        q = rope((h @ lp["self"]["wq"]).reshape(B, 1, H, hd), posv,
+                 cfg.rope_theta)
+        k = rope((h @ lp["self"]["wk"]).reshape(B, 1, H, hd), posv,
+                 cfg.rope_theta)
+        v = (h @ lp["self"]["wv"]).reshape(B, 1, H, hd)
+        kc = jax.lax.dynamic_update_slice(kc, k, (0, pos, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v, (0, pos, 0, 0))
+        o = decode_attention(q, kc, vc, pos)
+        x = (x + o.reshape(B, 1, -1) @ lp["self"]["wo"]).astype(x.dtype)
+        # cross attention against the static encoder K/V
+        hx = rms_norm(x, lp["ln_x"], cfg.norm_eps)
+        qx = (hx @ lp["cross"]["wq"]).reshape(B, 1, H, hd)
+        ox = decode_attention(qx, xk, xv, jnp.asarray(xk.shape[1] - 1))
+        x = (x + ox.reshape(B, 1, -1) @ lp["cross"]["wo"]).astype(x.dtype)
+        h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        f = act_fn(cfg.act)(h2 @ lp["mlp"]["w_up"]) @ lp["mlp"]["w_down"]
+        return (x + f).astype(x.dtype), (kc, vc)
+
+    x, (ks, vs) = layer_scan(
+        cfg.scan_layers, body,
+        x, (params["dec_layers"], cache["k"], cache["v"],
+            cache["xk"], cache["xv"]))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x[:, 0] @ params["head"]
+    return logits, {"k": ks, "v": vs, "xk": cache["xk"], "xv": cache["xv"],
+                    "pos": pos}

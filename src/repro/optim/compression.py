@@ -1,0 +1,61 @@
+"""Int8 error-feedback gradient compression for the data-parallel reduction.
+
+At 1000+ node scale the DP all-reduce dominates cross-pod traffic; 8-bit
+quantization with error feedback (residual carried to the next step) cuts it
+4x vs float32 / 2x vs bf16 with no asymptotic convergence penalty
+(Karimireddy et al., 2019).  Implemented as an explicit ``shard_map`` psum
+over the dp axes so it composes with any in-pod sharding.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def quantize(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum_tree(grads: Any, error: Any, mesh: Mesh,
+                         axes: Tuple[str, ...]) -> Tuple[Any, Any]:
+    """All-reduce mean of ``grads`` over ``axes`` with int8 error feedback.
+
+    Returns (reduced grads, new error residuals).  Call inside shard_map
+    (grads already shard-local) or outside with replicated grads.
+    """
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        # global scale (one pmax of a scalar) so the int8 payloads are
+        # directly summable; the wire format is int8 with switch-level
+        # widening on real fabrics — modeled here as an int32 psum of the
+        # quantized values, which is numerically identical.
+        scale = jax.lax.pmax(jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12),
+                             axes) / 127.0
+        q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+        total = jax.lax.psum(q.astype(jnp.int32), axes)
+        n = jax.lax.psum(jnp.ones((), jnp.float32), axes)
+        red = total.astype(jnp.float32) * scale / n
+        new_e = g32 - q.astype(jnp.float32) * scale
+        return red.astype(g.dtype), new_e
+
+    flat_g, td = jax.tree_util.tree_flatten(grads)
+    flat_e = jax.tree_util.tree_leaves(error)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    red = jax.tree_util.tree_unflatten(td, [o[0] for o in out])
+    err = jax.tree_util.tree_unflatten(td, [o[1] for o in out])
+    return red, err
+
+
+def init_error(grads_shape: Any) -> Any:
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32),
+                        grads_shape)

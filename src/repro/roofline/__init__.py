@@ -1,0 +1,3 @@
+from .analysis import (CostSample, RooflineTerms, collective_bytes,
+                       extrapolate, model_flops_for, roofline_terms,
+                       sample_costs)

@@ -1,0 +1,164 @@
+"""Three-term roofline analysis from compiled dry-run artifacts.
+
+    compute term    = HLO_FLOPs / (chips x peak FLOP/s)
+    memory term     = HLO_bytes / (chips x HBM bandwidth)
+    collective term = collective_bytes / (chips x link bandwidth)
+
+``cost_analysis()`` on a jax Compiled is per-device (verified empirically)
+and counts while-loop bodies ONCE, so the dry-run lowers *unrolled* depth-1
+and depth-2 variants (plus two sequence lengths for architectures with
+time-recurrent inner scans) and extrapolates:
+
+    total = f(1 unit) + (units - 1) * [f(2 units) - f(1 unit)]
+
+Collective bytes are not in cost_analysis: we parse the (per-device SPMD)
+HLO text and sum the operand sizes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional, Tuple
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "token": 0,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|[a-z0-9_\[\]{},:#\s\.]+?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.IGNORECASE)
+_TYPE_RE = re.compile(r"\b(pred|s8|u8|s16|u16|bf16|f16|s32|u32|f32|s64|u64|"
+                      r"f64|c64)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum operand bytes of every collective op in (per-device) HLO text."""
+    out: Dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(1).lower()
+        if "-done(" in line:       # avoid double counting start/done pairs
+            continue
+        # operand types are the type tokens after the '(';
+        # the result type is before the op name.
+        args = line[m.end():]
+        types = _TYPE_RE.findall(args)
+        if not types:
+            types = _TYPE_RE.findall(line)[:1]
+        total = sum(_shape_bytes(t, d) for t, d in types)
+        out[kind] = out.get(kind, 0.0) + float(total)
+    return out
+
+
+@dataclasses.dataclass
+class CostSample:
+    """Per-device costs of one lowered variant."""
+
+    flops: float
+    bytes_accessed: float
+    coll: Dict[str, float]
+
+    @property
+    def coll_total(self) -> float:
+        return float(sum(self.coll.values()))
+
+
+def sample_costs(compiled) -> CostSample:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    txt = compiled.as_text()
+    return CostSample(flops=float(ca.get("flops", 0.0)),
+                      bytes_accessed=float(ca.get("bytes accessed", 0.0)),
+                      coll=collective_bytes(txt))
+
+
+def extrapolate(f1: CostSample, f2: CostSample, units: float) -> CostSample:
+    """total = f1 + (units - 1) * (f2 - f1), per field."""
+    keys = set(f1.coll) | set(f2.coll)
+    coll = {k: f1.coll.get(k, 0.0) +
+            (units - 1) * (f2.coll.get(k, 0.0) - f1.coll.get(k, 0.0))
+            for k in keys}
+    return CostSample(
+        flops=f1.flops + (units - 1) * (f2.flops - f1.flops),
+        bytes_accessed=f1.bytes_accessed +
+        (units - 1) * (f2.bytes_accessed - f1.bytes_accessed),
+        coll=coll)
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops_dev: float
+    bytes_dev: float
+    coll_bytes_dev: float
+    model_flops: float
+    useful_ratio: float          # MODEL_FLOPS / (HLO_FLOPs x chips)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the step's lower bound spent on *useful* model math:
+        model_flops/(chips*peak) / max(term) — the score to push up."""
+        ideal = self.model_flops / (PEAK_FLOPS * self._chips)
+        return ideal / max(self.bound_s, 1e-30)
+
+    _chips: int = 1
+
+
+def roofline_terms(costs: CostSample, model_flops: float, chips: int
+                   ) -> RooflineTerms:
+    t = RooflineTerms(
+        compute_s=costs.flops / PEAK_FLOPS,
+        memory_s=costs.bytes_accessed / HBM_BW,
+        collective_s=costs.coll_total / ICI_BW,
+        flops_dev=costs.flops,
+        bytes_dev=costs.bytes_accessed,
+        coll_bytes_dev=costs.coll_total,
+        model_flops=model_flops,
+        useful_ratio=model_flops / max(costs.flops * chips, 1e-30),
+    )
+    t._chips = chips
+    return t
+
+
+def model_flops_for(kind: str, n_active_params: float, batch: int,
+                    seq_len: int) -> float:
+    """MODEL_FLOPS: 6ND for training, 2ND for prefill, 2N per decoded token
+    (paper-of-record conventions; attention flops excluded by design so the
+    useful_ratio exposes attention + remat + dispatch overheads)."""
+    if kind == "train":
+        return 6.0 * n_active_params * batch * seq_len
+    if kind == "prefill":
+        return 2.0 * n_active_params * batch * seq_len
+    return 2.0 * n_active_params * batch          # decode: one token

@@ -1,0 +1,2 @@
+"""Distributed runtime: sharding rules, train/serve step factories,
+elastic remesh, straggler mitigation."""

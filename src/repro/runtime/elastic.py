@@ -1,0 +1,36 @@
+"""Elastic scaling: remesh on device-count change and reshard state.
+
+On node failure (or quota change) the launcher calls ``plan_mesh`` with the
+surviving device count, rebuilds shardings, and ``reshard``s the latest
+state (either live arrays or a checkpoint via checkpoint.restore's
+shardings argument).  The data pipeline is deterministic in (step, shard),
+so the run continues bit-exactly modulo the reduction order.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+
+
+def plan_mesh(n_devices: int, model_parallel: int,
+              devices: Optional[Sequence] = None) -> Mesh:
+    """Largest (data, model) mesh that fits n_devices with the given TP
+    degree; drops stragglers beyond the largest usable power-of-two block."""
+    if n_devices < model_parallel:
+        model_parallel = max(1, 2 ** int(np.floor(np.log2(n_devices))))
+    data = n_devices // model_parallel
+    # keep data a power of two for stable collectives
+    data = 2 ** int(np.floor(np.log2(max(data, 1))))
+    use = data * model_parallel
+    devs = list(devices or jax.devices())[:use]
+    arr = np.array(devs).reshape(data, model_parallel)
+    return Mesh(arr, ("data", "model"))
+
+
+def reshard(state: Any, shardings: Any) -> Any:
+    """device_put a pytree onto new shardings (cross-mesh resharding)."""
+    return jax.tree.map(
+        lambda x, s: jax.device_put(np.asarray(x), s), state, shardings)

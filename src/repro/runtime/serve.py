@@ -1,0 +1,64 @@
+"""Serving runtime: batched prefill + decode with sharded KV caches."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.registry import ModelApi
+from .sharding import shard_batch, shard_cache, shard_params
+
+
+def jit_serve_fns(api: ModelApi, mesh: Mesh, batch: int, cache_len: int,
+                  fsdp: bool = False):
+    """Returns (prefill_fn, decode_fn, shardings).
+
+    Serving defaults to fsdp=False: parameters live model-sharded and
+    replicated over the data axis so decode steps pay no per-step parameter
+    all-gathers (the train-path FSDP layout would; see EXPERIMENTS.md
+    Section Perf).
+    """
+    p_shapes = jax.eval_shape(api.init, jax.random.PRNGKey(0))
+    p_sh = shard_params(p_shapes, mesh, fsdp=fsdp)
+    cache_shapes = jax.eval_shape(lambda: api.init_cache(batch, cache_len))
+    c_sh = shard_cache(cache_shapes, mesh, batch)
+    rep = NamedSharding(mesh, P())
+
+    def prefill_fn(params, inp):
+        return api.prefill(params, inp, cache_len=cache_len)
+
+    def decode_fn(params, cache, token):
+        return api.decode_step(params, cache, token)
+
+    logits_sh = NamedSharding(mesh, P(*(("pod", "data") if "pod" in
+                                        mesh.axis_names else ("data",)),)
+                              ) if batch % _dp(mesh) == 0 else rep
+    prefill_jit = jax.jit(prefill_fn,
+                          in_shardings=(p_sh, None),
+                          out_shardings=(c_sh, None))
+    decode_jit = jax.jit(decode_fn,
+                         in_shardings=(p_sh, c_sh, None),
+                         out_shardings=(None, c_sh),
+                         donate_argnums=(1,))
+    return prefill_jit, decode_jit, (p_sh, c_sh)
+
+
+def _dp(mesh: Mesh) -> int:
+    n = mesh.shape.get("data", 1)
+    n *= mesh.shape.get("pod", 1)
+    return n
+
+
+def greedy_generate(api: ModelApi, params, batch: Dict, steps: int,
+                    cache_len: int):
+    """Reference generation loop (CPU-scale); real serving drives the jitted
+    fns from launch/serve.py with continuous batching."""
+    cache, logits = api.prefill(params, batch, cache_len=cache_len)
+    toks = [jnp.argmax(logits, -1).astype(jnp.int32)[:, None]]
+    for _ in range(steps - 1):
+        logits, cache = api.decode_step(params, cache, toks[-1])
+        toks.append(jnp.argmax(logits, -1).astype(jnp.int32)[:, None])
+    return jnp.concatenate(toks, axis=1)

@@ -1,0 +1,176 @@
+"""Sharding rules: logical-axis mapping from parameter/cache/batch trees to
+``PartitionSpec``s on the production mesh.
+
+Strategy (MaxText-style 2D "FSDP + TP"):
+  - weight matrices: penultimate (input) dim -> "data" (FSDP: parameters and
+    optimizer states are fully sharded; GSPMD inserts the all-gathers),
+    last (output) dim -> "model" (TP) — transposed for output projections so
+    matmul contractions stay local;
+  - embeddings: vocab -> "model", feature -> "data";
+  - activations: batch -> ("pod","data") when divisible, otherwise the
+    sequence axis (long-context decode with batch 1);
+  - KV caches / recurrent states: batch -> dp axes, head_dim/feature ->
+    "model" (kv-heads can be < TP degree, head_dim always divides);
+  - the "pod" axis only shards the batch: parameters are replicated across
+    pods (FSDP within pod, DP across pods), so cross-pod traffic is gradient
+    reduction only.
+
+Divisibility is not required for correctness (GSPMD pads), but rules avoid
+padding where it matters; `_divides` guards the places XLA would waste.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# parameter-name classification
+_IN_OUT = ("wq", "wk", "wv", "w_gate", "w_up", "w_ff1", "w_x", "router",
+           "head", "w_rg", "w_ig", "wz", "wi", "wf", "wo_gate")
+_OUT_IN = ("wo", "w_down", "w_ff2", "w_out")
+_REPLICATE = ("ln", "ln1", "ln2", "ln_x", "gn", "final_norm", "enc_norm",
+              "lam", "qn", "kn")
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _divides(n: int, k: int) -> bool:
+    return k > 0 and n % k == 0
+
+
+def _axis_size(mesh: Mesh, name) -> int:
+    if isinstance(name, tuple):
+        return int(np.prod([mesh.shape[a] for a in name]))
+    return mesh.shape[name]
+
+
+def param_spec(path: str, leaf, mesh: Mesh, fsdp: bool = True,
+               ep: bool = False) -> P:
+    """PartitionSpec for one parameter leaf, by trailing name + rank.
+
+    ``ep=True`` shards MoE expert weights (L, E, D, F) with the *expert*
+    axis on "model" (expert parallelism: token all-to-alls instead of
+    expert-weight gathers) rather than TP-within-expert on F.
+    """
+    name = path.rstrip("']").split("'")[-1] if "'" in path else path
+    rank = len(leaf.shape)
+    data_ax = "data" if (fsdp and "data" in mesh.axis_names) else None
+    if name in _REPLICATE or rank <= 1:
+        return P()
+    if ep and rank == 4 and name in ("w_gate", "w_up", "w_down") \
+            and "moe" in path:
+        # (L, E, D, F) or (L, E, F, D): experts over "model", in-dim FSDP
+        return _checked(P(None, "model", data_ax, None), leaf, mesh)
+    if name == "embed":
+        spec = ["model", data_ax]
+    elif name == "conv":
+        spec = [None, "model"]
+    elif name in ("rz", "ri", "rf", "ro") or (name in ("wq", "wk", "wv")
+                                              and rank >= 3
+                                              and leaf.shape[-1] == leaf.shape[-2]):
+        # per-head block-diagonal mats (H, hd, hd)
+        spec = [None] * (rank - 1) + ["model"]
+        return _checked(P(*spec), leaf, mesh)
+    elif name in _IN_OUT:
+        spec = [None] * (rank - 2) + [data_ax, "model"]
+    elif name in _OUT_IN:
+        spec = [None] * (rank - 2) + ["model", data_ax]
+    else:
+        spec = [None] * rank
+    return _checked(P(*spec), leaf, mesh)
+
+
+def _checked(spec: P, leaf, mesh: Mesh) -> P:
+    """Drop axes whose dim is not divisible by the mesh axis: jit input
+    shardings require exact divisibility (internal constraints would pad)."""
+    out = []
+    for dim, ax in zip(leaf.shape, spec):
+        if ax is None:
+            out.append(None)
+            continue
+        size = _axis_size(mesh, ax)
+        out.append(ax if (dim >= size and dim % size == 0) else None)
+    return P(*out)
+
+
+def shard_params(params_shape: Any, mesh: Mesh, fsdp: bool = True,
+                 ep: bool = False) -> Any:
+    """NamedSharding tree for a (ShapeDtypeStruct or array) param tree."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shape)
+    specs = [NamedSharding(mesh, param_spec(jax.tree_util.keystr(p), leaf,
+                                            mesh, fsdp, ep))
+             for p, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def batch_spec(leaf, mesh: Mesh) -> P:
+    """Activations/inputs: batch over dp axes; fall back to the sequence
+    axis when the batch doesn't divide (e.g. long_500k batch=1)."""
+    dp = dp_axes(mesh)
+    dpn = _axis_size(mesh, dp)
+    shape = leaf.shape
+    if len(shape) == 0:
+        return P()
+    if _divides(shape[0], dpn):
+        return P(dp, *([None] * (len(shape) - 1)))
+    if len(shape) >= 2 and _divides(shape[1], dpn):
+        return P(None, dp, *([None] * (len(shape) - 2)))
+    return P(*([None] * len(shape)))
+
+
+def shard_batch(batch: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(
+        lambda leaf: NamedSharding(mesh, batch_spec(leaf, mesh)), batch)
+
+
+def cache_spec(path: str, leaf, mesh: Mesh, batch: int) -> P:
+    """KV caches and recurrent state.
+
+    batch dim -> dp axes; the *sequence* axis (longest remaining divisible
+    dim) -> 'model'.  Sequence-sharding the cache keeps per-chip capacity
+    (a command-r decode_32k cache is ~1 TB) while decode attention reduces
+    tiny (B, H) softmax partials instead of all-gathering the cache — the
+    head_dim-sharded layout all-gathered the full cache every step
+    (EXPERIMENTS.md Section Perf, iteration 4).  Batch-1 long-context cells
+    shard the sequence over dp as well.
+    """
+    dp = dp_axes(mesh)
+    dpn = _axis_size(mesh, dp)
+    mdl = mesh.shape.get("model", 1)
+    shape = leaf.shape
+    spec: list = [None] * len(shape)
+    if len(shape) == 0:
+        return P()
+    placed_dp = None
+    for i, d in enumerate(shape):
+        if d == batch and _divides(d, dpn):
+            spec[i] = dp
+            placed_dp = i
+            break
+    if placed_dp is None:
+        # batch too small: shard the longest divisible axis (the KV seq)
+        cand = [(d, i) for i, d in enumerate(shape[:-1])
+                if _divides(d, dpn) and d >= dpn]
+        if cand:
+            placed_dp = max(cand)[1]
+            spec[placed_dp] = dp
+    if mdl > 1:
+        cand = [(d, i) for i, d in enumerate(shape)
+                if i != placed_dp and spec[i] is None
+                and _divides(d, mdl) and d >= 8 * mdl]
+        if cand:
+            spec[max(cand)[1]] = "model"
+    return P(*spec)
+
+
+def shard_cache(cache: Any, mesh: Mesh, batch: int) -> Any:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    specs = [NamedSharding(mesh, cache_spec(jax.tree_util.keystr(p), leaf,
+                                            mesh, batch))
+             for p, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)

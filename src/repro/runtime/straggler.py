@@ -1,0 +1,64 @@
+"""Straggler mitigation.
+
+With synchronous data parallelism one slow host gates every step.  The
+detector keeps per-host EMA step times; hosts slower than
+``threshold x median`` are flagged and the planner reassigns their data
+shards to healthy hosts (work stays deterministic: shard assignment is an
+explicit map consumed by data.DataConfig).  Persistent stragglers are
+recommended for eviction → runtime.elastic handles the remesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class StragglerConfig:
+    ema: float = 0.9
+    threshold: float = 1.5      # x median EMA step time
+    evict_after: int = 20       # consecutive flagged steps
+
+
+class StragglerDetector:
+    def __init__(self, num_hosts: int, cfg: StragglerConfig = StragglerConfig()):
+        self.cfg = cfg
+        self.ema = np.zeros(num_hosts)
+        self.flagged_streak = np.zeros(num_hosts, dtype=int)
+        self._seen = np.zeros(num_hosts, dtype=bool)
+
+    def record(self, host: int, step_time: float) -> None:
+        if not self._seen[host]:
+            self.ema[host] = step_time
+            self._seen[host] = True
+        else:
+            self.ema[host] = (self.cfg.ema * self.ema[host] +
+                              (1 - self.cfg.ema) * step_time)
+
+    def stragglers(self) -> List[int]:
+        if not self._seen.any():
+            return []
+        med = float(np.median(self.ema[self._seen]))
+        out = []
+        for h in np.nonzero(self._seen)[0]:
+            if self.ema[h] > self.cfg.threshold * med:
+                self.flagged_streak[h] += 1
+                out.append(int(h))
+            else:
+                self.flagged_streak[h] = 0
+        return out
+
+    def evictions(self) -> List[int]:
+        return [int(h) for h in
+                np.nonzero(self.flagged_streak >= self.cfg.evict_after)[0]]
+
+
+def reassign_shards(num_shards: int, healthy: List[int]) -> Dict[int, List[int]]:
+    """Round-robin shard → healthy-host map (deterministic)."""
+    assert healthy, "no healthy hosts"
+    plan: Dict[int, List[int]] = {h: [] for h in healthy}
+    for s in range(num_shards):
+        plan[healthy[s % len(healthy)]].append(s)
+    return plan

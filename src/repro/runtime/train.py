@@ -1,0 +1,124 @@
+"""Train-step factory: loss + grad + AdamW + metrics, with sharding specs.
+
+``make_train_step`` returns a pure (state, batch) -> (state, metrics)
+function plus the in/out shardings the launcher passes to jit.  Sparsity is
+a first-class feature: an optional ``PruneSchedule`` applies Griffin-style
+weight pruning at ramp milestones (host side, between steps), keeping the
+weight tensors in the exactly-zero form the sparse kernels consume.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.registry import ModelApi
+from ..optim import adamw
+from ..sparsity.pruning import PruneSchedule
+from .sharding import shard_batch, shard_params
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: adamw.OptState
+    step: jax.Array
+
+    def tree_flatten(self):
+        return (self.params, self.opt, self.step), None
+
+
+jax.tree_util.register_pytree_node(
+    TrainState, TrainState.tree_flatten,
+    lambda aux, children: TrainState(*children))
+
+
+def init_state(api: ModelApi, key) -> TrainState:
+    params = api.init(key)
+    return TrainState(params=params, opt=adamw.init(params),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def make_train_step(api: ModelApi, opt_cfg: adamw.AdamWConfig,
+                    n_micro: int = 1
+                    ) -> Callable[[TrainState, Dict], Tuple[TrainState, Dict]]:
+    """(state, batch) -> (state, metrics).
+
+    ``n_micro > 1`` splits the batch into microbatches scanned sequentially
+    with f32 gradient accumulation: peak activation memory drops ~n_micro x
+    at identical math (the standard lever that fits large train cells in
+    HBM; see EXPERIMENTS.md Section Perf iteration 3)."""
+    def grads_of(params, batch):
+        return jax.value_and_grad(api.loss)(params, batch)
+
+    def train_step(state: TrainState, batch: Dict) -> Tuple[TrainState, Dict]:
+        if n_micro == 1:
+            loss, grads = grads_of(state.params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape((n_micro, x.shape[0] // n_micro)
+                                    + x.shape[1:]), batch)
+
+            def mb(carry, mbatch):
+                loss_acc, gacc = carry
+                loss, g = grads_of(state.params, mbatch)
+                gacc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), gacc, g)
+                return (loss_acc + loss, gacc), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            (loss, gsum), _ = jax.lax.scan(
+                mb, (jnp.zeros((), jnp.float32), zeros), micro)
+            loss = loss / n_micro
+            grads = jax.tree.map(lambda g: g / n_micro, gsum)
+        params, opt, metrics = adamw.apply(opt_cfg, state.params, grads,
+                                           state.opt)
+        metrics["loss"] = loss
+        return TrainState(params, opt, state.step + 1), metrics
+
+    return train_step
+
+
+def state_shardings(api: ModelApi, mesh: Mesh, fsdp: bool = True
+                    ) -> TrainState:
+    """Sharding tree matching TrainState (opt moments mirror params: ZeRO)."""
+    p_shapes = jax.eval_shape(api.init, jax.random.PRNGKey(0))
+    p_shard = shard_params(p_shapes, mesh, fsdp)
+    rep = NamedSharding(mesh, P())
+    return TrainState(
+        params=p_shard,
+        opt=adamw.OptState(mu=p_shard, nu=p_shard, count=rep),
+        step=rep)
+
+
+def jit_train_step(api: ModelApi, opt_cfg: adamw.AdamWConfig, mesh: Mesh,
+                   batch_specs: Any, fsdp: bool = True, donate: bool = True):
+    step_fn = make_train_step(api, opt_cfg)
+    st_sh = state_shardings(api, mesh, fsdp)
+    metric_sh = NamedSharding(mesh, P())
+    return jax.jit(
+        step_fn,
+        in_shardings=(st_sh, batch_specs),
+        out_shardings=(st_sh, {"loss": metric_sh, "grad_norm": metric_sh,
+                               "lr": metric_sh}),
+        donate_argnums=(0,) if donate else (),
+    ), st_sh
+
+
+def apply_prune(state: TrainState, schedule: PruneSchedule,
+                match: Callable[[str], bool]) -> TrainState:
+    """Host-side pruning at ramp milestones (keeps zeros exact)."""
+    flat, td = jax.tree_util.tree_flatten_with_path(state.params)
+    out = []
+    for p, leaf in flat:
+        key = jax.tree_util.keystr(p)
+        if leaf.ndim >= 2 and match(key):
+            leaf = schedule.apply(leaf, int(state.step))
+        out.append(leaf)
+    return TrainState(jax.tree_util.tree_unflatten(td, out), state.opt,
+                      state.step)

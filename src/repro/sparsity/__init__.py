@@ -1,0 +1,7 @@
+"""Pruning + sparsity statistics substrate."""
+from .pruning import (PruneSchedule, block_prune, magnitude_prune,
+                      sparsity_of)
+from .stats import activation_sparsity, model_mode, tensor_report
+
+__all__ = ["PruneSchedule", "block_prune", "magnitude_prune", "sparsity_of",
+           "activation_sparsity", "model_mode", "tensor_report"]

@@ -1,0 +1,85 @@
+"""Weight pruning for the Griffin execution paths.
+
+Two granularities:
+  - ``magnitude_prune``: unstructured (element) pruning — what the paper's
+    cycle model evaluates (the element-granular accelerator skips these).
+  - ``block_prune``: (block_k x unit) block pruning by L2 norm — the
+    hardware-aware granularity the TPU kernel (griffin_spmm) can exploit:
+    a pruned block is exactly zero, so preprocessing drops it.
+
+Both are pure functions usable inside jit; ``PruneSchedule`` ramps sparsity
+during training (cubic schedule, Zhu & Gupta 2017 [73] — the paper's own
+pruning reference).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def magnitude_prune(w: jax.Array, sparsity: float) -> jax.Array:
+    """Zero the smallest-|w| fraction ``sparsity`` of entries."""
+    if sparsity <= 0.0:
+        return w
+    k = max(1, int(round(w.size * (1.0 - sparsity))))
+    thresh = jnp.sort(jnp.abs(w).reshape(-1))[-k]
+    return jnp.where(jnp.abs(w) >= thresh, w, 0).astype(w.dtype)
+
+
+def block_prune(w: jax.Array, sparsity: float, block_k: int = 128,
+                unit: int = 32) -> jax.Array:
+    """Zero the lowest-L2 fraction ``sparsity`` of (block_k x unit) blocks.
+
+    Shapes not divisible by the block are handled by zero padding (the pad
+    never changes block norms).
+    """
+    if sparsity <= 0.0:
+        return w
+    k, n = w.shape
+    pk, pn = -(-k // block_k) * block_k, -(-n // unit) * unit
+    wp = jnp.zeros((pk, pn), w.dtype).at[:k, :n].set(w)
+    nb_k, nb_n = pk // block_k, pn // unit
+    blocks = wp.reshape(nb_k, block_k, nb_n, unit)
+    norms = jnp.sqrt((blocks.astype(jnp.float32) ** 2).sum(axis=(1, 3)))
+    nkeep = max(1, int(round(norms.size * (1.0 - sparsity))))
+    thresh = jnp.sort(norms.reshape(-1))[-nkeep]
+    keep = (norms >= thresh)[:, None, :, None]
+    return (blocks * keep).reshape(pk, pn)[:k, :n].astype(w.dtype)
+
+
+def sparsity_of(x: jax.Array) -> jax.Array:
+    """Fraction of exact zeros (the quantity Table IV reports)."""
+    return jnp.mean((x == 0).astype(jnp.float32))
+
+
+@dataclasses.dataclass(frozen=True)
+class PruneSchedule:
+    """Cubic sparsity ramp s(t) = s_f * (1 - (1 - t/T)^3) on [t0, t0+T]."""
+
+    final_sparsity: float
+    begin_step: int = 0
+    ramp_steps: int = 1000
+    block_k: int = 0          # 0 => unstructured magnitude pruning
+    unit: int = 32
+
+    def sparsity_at(self, step: jax.Array) -> jax.Array:
+        t = jnp.clip((step - self.begin_step) / max(self.ramp_steps, 1), 0, 1)
+        return self.final_sparsity * (1.0 - (1.0 - t) ** 3)
+
+    def apply(self, w: jax.Array, step: int) -> jax.Array:
+        """Host-side application at checkpoint boundaries (the ramp changes
+        the threshold, so this is applied outside jit per ramp milestone).
+        Stacked layer weights (L, ..., in, out) are pruned per layer."""
+        s = float(self.sparsity_at(jnp.asarray(step)))
+        fn = (lambda x: block_prune(x, s, min(self.block_k, x.shape[0]),
+                                    min(self.unit, x.shape[1]))) \
+            if self.block_k else (lambda x: magnitude_prune(x, s))
+        if w.ndim == 2:
+            return fn(w)
+        lead = w.shape[:-2]
+        flat = w.reshape((-1,) + w.shape[-2:])
+        out = jax.vmap(fn)(flat)
+        return out.reshape(lead + w.shape[-2:])

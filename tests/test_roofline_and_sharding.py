@@ -1,0 +1,115 @@
+"""Roofline analysis plumbing + sharding rules."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.roofline.analysis import (CostSample, collective_bytes,
+                                     extrapolate, model_flops_for,
+                                     roofline_terms)
+from repro.runtime.sharding import (batch_spec, cache_spec, dp_axes,
+                                    param_spec, shard_params)
+
+
+HLO = """
+ENTRY %main {
+  %ag = bf16[4,128]{1,0} all-gather(bf16[2,128]{1,0} %x), dimensions={0}
+  %ar = f32[16]{0} all-reduce(f32[16]{0} %y), to_apply=%sum
+  %rs = f32[8]{0} reduce-scatter(f32[16]{0} %z), dimensions={0}
+  %cp = bf16[2,2]{1,0} collective-permute(bf16[2,2]{1,0} %w)
+  %aa = s8[64]{0} all-to-all(s8[64]{0} %v), dimensions={0}
+  %dot = f32[4,4]{1,0} dot(f32[4,8]{1,0} %a, f32[8,4]{1,0} %b)
+}
+"""
+
+
+def test_collective_bytes_parses_operands():
+    cb = collective_bytes(HLO)
+    assert cb["all-gather"] == 2 * 128 * 2
+    assert cb["all-reduce"] == 16 * 4
+    assert cb["reduce-scatter"] == 16 * 4
+    assert cb["collective-permute"] == 2 * 2 * 2
+    assert cb["all-to-all"] == 64
+    assert "dot" not in cb
+
+
+def test_extrapolation_is_linear():
+    f1 = CostSample(flops=10.0, bytes_accessed=100.0, coll={"all-reduce": 5.0})
+    f2 = CostSample(flops=14.0, bytes_accessed=120.0, coll={"all-reduce": 7.0})
+    tot = extrapolate(f1, f2, 11)
+    assert tot.flops == 10 + 10 * 4
+    assert tot.bytes_accessed == 100 + 10 * 20
+    assert tot.coll["all-reduce"] == 5 + 10 * 2
+
+
+def test_roofline_terms_and_dominant():
+    c = CostSample(flops=197e12, bytes_accessed=819e9 * 2, coll={"x": 50e9 * 3})
+    t = roofline_terms(c, model_flops=197e12 * 256 * 0.5, chips=256)
+    assert t.compute_s == pytest.approx(1.0)
+    assert t.memory_s == pytest.approx(2.0)
+    assert t.collective_s == pytest.approx(3.0)
+    assert t.dominant == "collective"
+    assert t.useful_ratio == pytest.approx(0.5)
+    assert t.roofline_fraction == pytest.approx(0.5 / 3.0)
+
+
+def test_model_flops_conventions():
+    assert model_flops_for("train", 1e9, 4, 128) == 6e9 * 512
+    assert model_flops_for("prefill", 1e9, 4, 128) == 2e9 * 512
+    assert model_flops_for("decode", 1e9, 4, 128) == 2e9 * 4
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    dev = np.array(jax.devices()[:1]).reshape(1, 1)
+    return Mesh(dev, ("data", "model"))
+
+
+def test_param_spec_rules(mesh):
+    wq = jax.ShapeDtypeStruct((4, 64, 128), jnp.bfloat16)
+    assert param_spec("['layers']['wq']", wq, mesh) == P(None, "data", "model")
+    wo = jax.ShapeDtypeStruct((4, 128, 64), jnp.bfloat16)
+    assert param_spec("['layers']['wo']", wo, mesh) == P(None, "model", "data")
+    emb = jax.ShapeDtypeStruct((1000, 64), jnp.bfloat16)
+    assert param_spec("['embed']", emb, mesh) == P("model", "data")
+    ln = jax.ShapeDtypeStruct((64,), jnp.bfloat16)
+    assert param_spec("['ln1']", ln, mesh) == P()
+
+
+def test_param_spec_drops_nondivisible():
+    dev = np.array(jax.devices() * 1)[:1].reshape(1, 1)
+    m = Mesh(dev, ("data", "model"))
+    # with axis size 1 everything divides; simulate non-divisible via a
+    # fake mesh shape by checking the _checked logic through param_spec on
+    # size-1 axes (always divisible) — structural check only
+    w = jax.ShapeDtypeStruct((3, 2730), jnp.float32)
+    spec = param_spec("['w_ff1']", w, m)
+    assert spec == P("data", "model") or spec == P(None, "model")
+
+
+def test_batch_spec_falls_back_to_seq(mesh):
+    tok = jax.ShapeDtypeStruct((8, 64), jnp.int32)
+    assert batch_spec(tok, mesh)[0] == "data"
+    tiny = jax.ShapeDtypeStruct((1, 64), jnp.int32)
+    spec = batch_spec(tiny, mesh)
+    assert spec[0] in (None, "data")     # seq fallback applies when dp > 1
+
+
+def test_cache_spec_shards_batch_and_seq(mesh):
+    kv = jax.ShapeDtypeStruct((16, 8, 4096, 8, 64), jnp.bfloat16)
+    spec = cache_spec("['k']", kv, mesh, batch=8)
+    assert spec[1] == "data"             # batch dim
+    # model axis size 1 -> no model sharding placed
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    assert cache_spec("['pos']", pos, mesh, batch=8) == P()
+
+
+def test_dryrun_cells_enumeration():
+    import importlib
+    dr = importlib.import_module("repro.launch.dryrun")
+    cells = dr.all_cells()
+    assert len(cells) == 40
+    skips = [c for c in cells if c[2] is not None]
+    assert len(skips) == 7               # full-attention archs x long_500k
+    assert all(c[1] == "long_500k" for c in skips)
