@@ -16,7 +16,7 @@ from repro.configs import all_configs
 from repro.configs.base import ModelConfig
 from repro.core import CoreConfig, GRIFFIN, Mode
 from repro.core.evaluate import GemmShape, Workload
-from repro.core.hybrid import category_design_speedup, running_spec
+from repro.core.hybrid import (category_design_speedup_batched, running_spec)
 from repro.core.spec import SPARSE_AB_STAR
 
 from .common import Timer, emit, write_csv
@@ -68,10 +68,9 @@ def run(fast: bool = True) -> None:
                                  (Mode.AB, (0.5, 0.8))]:
             wl = Workload(name, gemms, a_s, b_s)
             with Timer() as t:
-                sp_g = category_design_speedup(GRIFFIN, [wl], core, seed=5,
-                                               mode=mode)
-                sp_ab = category_design_speedup(SPARSE_AB_STAR, [wl], core,
-                                                seed=5, mode=mode)
+                # one stacked-config pass scores both designs (shared masks)
+                sp_g, sp_ab = category_design_speedup_batched(
+                    [GRIFFIN, SPARSE_AB_STAR], [wl], core, seed=5, mode=mode)
             rows.append({"arch": name, "mode": mode.value,
                          "griffin_speedup": round(sp_g, 3),
                          "dual_downgrade_speedup": round(sp_ab, 3),

@@ -1,0 +1,70 @@
+"""Batched-DSE engine benchmark: stacked-config sweep vs per-design loop.
+
+Measures the tentpole claim directly: the same Sparse.B design list scored
+(a) the seed way — one ``score()`` call per design, i.e. one mask draw and
+one scheduler pass each — and (b) through ``sweep()``'s stacked-config
+batched engine, then (c) again with a warm results cache.  Asserts row
+equality (the batched path is bit-exact) and writes the speedups to
+``benchmarks/out/batched_speedup.csv``.
+
+Fast mode uses a 6-design slice; ``--full`` uses the whole fan-in-<=8
+Sparse.B enumeration (the fig5 design space).
+"""
+from __future__ import annotations
+
+import shutil
+import tempfile
+import time
+
+from repro.core import CoreConfig, Mode
+from repro.core.dse import ResultsCache, enumerate_sparse_b, score, sweep
+from repro.core.spec import sparse_b
+
+from .common import emit, write_csv
+
+
+def run(fast: bool = True) -> None:
+    core = CoreConfig()
+    if fast:
+        designs = [sparse_b(4, 0, 1, True), sparse_b(2, 1, 1, True),
+                   sparse_b(6, 0, 0, False), sparse_b(4, 0, 0, False),
+                   sparse_b(2, 0, 2, True), sparse_b(8, 0, 1, True)]
+    else:
+        designs = enumerate_sparse_b()
+
+    t0 = time.perf_counter()
+    scalar_rows = [score(d, Mode.B, core, seed=1) for d in designs]
+    t1 = time.perf_counter()
+    batched_rows = sweep(designs, Mode.B, core, seed=1)
+    t2 = time.perf_counter()
+    cache_dir = tempfile.mkdtemp(prefix="griffin-dse-cache-")
+    try:
+        cache = ResultsCache(cache_dir)
+        sweep(designs, Mode.B, core, seed=1, cache=cache)      # warm it
+        t3 = time.perf_counter()
+        cached_rows = sweep(designs, Mode.B, core, seed=1, cache=cache)
+        t4 = time.perf_counter()
+    finally:
+        shutil.rmtree(cache_dir, ignore_errors=True)
+
+    assert scalar_rows == batched_rows == cached_rows, \
+        "batched sweep must be bit-exact with the per-design loop"
+    scalar_s, batched_s, cached_s = t1 - t0, t2 - t1, t4 - t3
+    rows = [{
+        "suite": "sparse_b" + ("" if fast else "_full"),
+        "n_designs": len(designs),
+        "scalar_loop_s": round(scalar_s, 2),
+        "batched_sweep_s": round(batched_s, 2),
+        "cached_sweep_s": round(cached_s, 3),
+        "batched_speedup": round(scalar_s / batched_s, 2),
+        "cached_speedup": round(scalar_s / max(cached_s, 1e-9), 1),
+    }]
+    emit("bench_batched/sweep", batched_s * 1e6 / len(designs),
+         f"n={len(designs)};scalar={scalar_s:.1f}s;batched={batched_s:.1f}s;"
+         f"speedup={scalar_s / batched_s:.1f}x;"
+         f"cached={scalar_s / max(cached_s, 1e-9):.0f}x")
+    print(f"# bench_batched -> {write_csv('batched_speedup', rows)}")
+
+
+if __name__ == "__main__":
+    run(fast=False)

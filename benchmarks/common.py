@@ -1,4 +1,4 @@
-"""Shared benchmark utilities: CSV emission + timing."""
+"""Shared benchmark utilities: CSV emission, timing + the DSE results cache."""
 from __future__ import annotations
 
 import csv
@@ -7,6 +7,18 @@ import time
 from typing import Dict, List, Sequence
 
 OUT_DIR = os.path.join(os.path.dirname(__file__), "out")
+CACHE_DIR = os.path.join(OUT_DIR, "cache")
+
+
+def results_cache():
+    """The shared on-disk sweep-row cache (benchmarks/out/cache/).
+
+    Keys are content hashes of (design, mode, core, seed, mask model), so
+    re-running any figure script only re-evaluates design points whose
+    inputs changed; delete the directory to force a cold run.
+    """
+    from repro.core.dse import ResultsCache
+    return ResultsCache(CACHE_DIR)
 
 
 def write_csv(name: str, rows: Sequence[Dict]) -> str:

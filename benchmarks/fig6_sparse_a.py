@@ -2,14 +2,15 @@
 
 Same axes as fig5 on the DNN.A category (fan-in budget <= 8); checks the
 paper's Section VI-B observations (da3 cost, shuffle boost, da1>=4 limit).
+Scored through the batched sweep driver + results cache.
 """
 from __future__ import annotations
 
 from repro.core import CoreConfig, Mode
-from repro.core.dse import enumerate_sparse_a, score
+from repro.core.dse import enumerate_sparse_a, sweep
 from repro.core.spec import CNVLUTIN, sparse_a, SPARTEN_A
 
-from .common import Timer, emit, write_csv
+from .common import Timer, emit, results_cache, write_csv
 
 PAPER_CLAIMS = {
     (2, 1, 0, True): 1.83, (3, 1, 0, True): 1.89, (2, 1, 1, True): 1.94,
@@ -24,14 +25,13 @@ def run(fast: bool = True) -> None:
     if not fast:
         seen = {d.label() for d in designs}
         designs += [d for d in enumerate_sparse_a() if d.label() not in seen]
-    rows = []
-    for d in designs:
-        with Timer() as t:
-            row = score(d, Mode.A, core, seed=2)
+    with Timer() as t:
+        rows = sweep(designs, Mode.A, core, seed=2, cache=results_cache())
+    us = t.us / max(len(designs), 1)
+    for d, row in zip(designs, rows):
         key = (d.da1, d.da2, d.da3, d.shuffle)
         row["paper_speedup"] = PAPER_CLAIMS.get(key, "")
-        rows.append(row)
-        emit(f"fig6/{d.label()}", t.us,
+        emit(f"fig6/{d.label()}", us,
              f"speedup={row['speedup']:.2f};paper={row['paper_speedup']};"
              f"tops_w={row['tops_w']:.1f}")
     path = write_csv("fig6", rows)

@@ -1,15 +1,16 @@
 """Figure 7: dual-sparse design-space exploration (fan-in budget <= 16).
 
 Checks Section VI-C: shuffle replaces db2/da2, da1 <= 2, db3-over-da3
-preference; Sparse.AB* = AB(2,0,0,2,0,1,on).
+preference; Sparse.AB* = AB(2,0,0,2,0,1,on).  Scored through the batched
+sweep driver + results cache.
 """
 from __future__ import annotations
 
 from repro.core import CoreConfig, Mode
-from repro.core.dse import enumerate_sparse_ab, score
+from repro.core.dse import enumerate_sparse_ab, sweep
 from repro.core.spec import (SPARSE_AB_STAR, SPARTEN_AB, TDASH_AB, sparse_ab)
 
-from .common import Timer, emit, write_csv
+from .common import Timer, emit, results_cache, write_csv
 
 PAPER_CLAIMS = {
     (2, 0, 0, 2, 0, 1, True): 3.9, (2, 0, 0, 4, 0, 2, True): 4.9,
@@ -25,14 +26,13 @@ def run(fast: bool = True) -> None:
     if not fast:
         seen = {d.label() for d in designs}
         designs += [d for d in enumerate_sparse_ab() if d.label() not in seen]
-    rows = []
-    for d in designs:
-        with Timer() as t:
-            row = score(d, Mode.AB, core, seed=3)
+    with Timer() as t:
+        rows = sweep(designs, Mode.AB, core, seed=3, cache=results_cache())
+    us = t.us / max(len(designs), 1)
+    for d, row in zip(designs, rows):
         key = (d.da1, d.da2, d.da3, d.db1, d.db2, d.db3, d.shuffle)
         row["paper_speedup"] = PAPER_CLAIMS.get(key) or ""
-        rows.append(row)
-        emit(f"fig7/{d.label()}", t.us,
+        emit(f"fig7/{d.label()}", us,
              f"speedup={row['speedup']:.2f};paper={row['paper_speedup']};"
              f"tops_w={row['tops_w']:.1f}")
     print(f"# fig7 -> {write_csv('fig7', rows)}")

@@ -17,12 +17,12 @@ def main() -> None:
                     help="full DSE enumerations (slow)")
     ap.add_argument("--only", default="",
                     help="comma list: fig5,fig6,fig7,fig8,table4,table7,"
-                         "archs,kernels")
+                         "archs,kernels,batched")
     args = ap.parse_args()
 
-    from . import (bench_archs, bench_kernels, fig5_sparse_b, fig6_sparse_a,
-                   fig7_sparse_ab, fig8_overall, table4_networks,
-                   table7_breakdown)
+    from . import (bench_archs, bench_batched, bench_kernels, fig5_sparse_b,
+                   fig6_sparse_a, fig7_sparse_ab, fig8_overall,
+                   table4_networks, table7_breakdown)
     suites = {
         "table4": table4_networks.run,
         "table7": table7_breakdown.run,
@@ -32,8 +32,12 @@ def main() -> None:
         "fig8": fig8_overall.run,
         "archs": bench_archs.run,
         "kernels": bench_kernels.run,
+        "batched": bench_batched.run,
     }
     only = [s for s in args.only.split(",") if s]
+    unknown = [s for s in only if s not in suites]
+    if unknown:
+        ap.error(f"unknown suite(s) {unknown}; choose from {sorted(suites)}")
     print("name,us_per_call,derived")
     failed = []
     for name, fn in suites.items():

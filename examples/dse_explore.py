@@ -1,33 +1,38 @@
 """Design-space exploration example: sweep a slice of the Sparse.B family
-(Fig. 5), print the Pareto frontier, and show Griffin's morphing advantage.
+(Fig. 5) through the batched engine, print the Pareto frontier, and show
+Griffin's morphing advantage.
 
   python examples/dse_explore.py
+
+The whole design list is scored in ONE stacked-config pass (masks drawn
+once, scheduler vectorized over the config axis) and rows are memoized in
+benchmarks/out/cache/ — run it twice and the second run is instant.
 """
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.core import CoreConfig, GRIFFIN, Mode
-from repro.core.dse import pareto, score
+from repro.core.dse import ResultsCache, pareto, sweep
 from repro.core.spec import SPARSE_AB_STAR, sparse_b
 
 core = CoreConfig()
-rows = []
-for db1 in (2, 4, 8):
-    for db3 in (0, 1):
-        for sh in (False, True):
-            d = sparse_b(db1, 0, db3, shuffle=sh)
-            rows.append(score(d, Mode.B, core, seed=1))
-            r = rows[-1]
-            print(f"{r['design']:16s} speedup={r['speedup']:.2f} "
-                  f"TOPS/W={r['tops_w']:.1f} (dense {r['dense_tops_w']:.1f})")
+cache = ResultsCache(os.path.join(os.path.dirname(__file__), "..",
+                                  "benchmarks", "out", "cache"))
+designs = [sparse_b(db1, 0, db3, shuffle=sh)
+           for db1 in (2, 4, 8) for db3 in (0, 1) for sh in (False, True)]
+
+rows = sweep(designs, Mode.B, core, seed=1, cache=cache)
+for r in rows:
+    print(f"{r['design']:16s} speedup={r['speedup']:.2f} "
+          f"TOPS/W={r['tops_w']:.1f} (dense {r['dense_tops_w']:.1f})")
+print(f"[cache: {cache.hits} hits, {cache.misses} misses]")
 
 front = pareto(rows, "dense_tops_w", "tops_w")
 print("\nPareto frontier (dense vs DNN.B power efficiency):")
 for r in front:
     print(f"  {r['design']}")
 
-g = score(GRIFFIN, Mode.B, core, seed=1)
-d = score(SPARSE_AB_STAR, Mode.B, core, seed=1)
+g, d = sweep([GRIFFIN, SPARSE_AB_STAR], Mode.B, core, seed=1, cache=cache)
 print(f"\nGriffin morph vs dual downgrade on DNN.B: "
       f"{g['speedup']:.2f}x vs {d['speedup']:.2f}x speedup "
       f"({100 * (g['speedup'] / d['speedup'] - 1):.0f}% gain)")

@@ -22,15 +22,19 @@ core = CoreConfig()
 mm = MaskModel()
 rng = np.random.default_rng(0)
 
-# -- 1. cycle model ---------------------------------------------------------
+# -- 1. cycle model (one batched pass scores the whole design stack) --------
+from repro.core.evaluate import gemm_cycles_batched
+
 M, K, N = 64, 1024, 512
 a_mask = mm.act_mask(M, K, 1.0, rng)            # dense activations
 b_mask = mm.weight_mask(K, N, 0.2, rng)         # 80% pruned weights
 mode = select_mode(0.0, 0.8)
 print(f"model category: DNN.{mode.value}")
-for design in (SPARSE_B_STAR, SPARSE_AB_STAR, GRIFFIN):
-    spec = running_spec(design, mode)
-    r = gemm_cycles(spec, mode, a_mask, b_mask, core)
+designs = (SPARSE_B_STAR, SPARSE_AB_STAR, GRIFFIN)
+specs = [running_spec(d, mode) for d in designs]
+for design, spec, r in zip(designs, specs,
+                           gemm_cycles_batched(specs, mode, a_mask, b_mask,
+                                               core)):
     pa = power_area(design)
     name = getattr(design, "name", None) or spec.label()
     print(f"  {name:12s} runs {spec.label():18s}: speedup {r.speedup:.2f}x, "

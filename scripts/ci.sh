@@ -1,0 +1,24 @@
+#!/usr/bin/env bash
+# CI entry point: install, tier-1 tests, fig5 fast-mode smoke check.
+#
+#   scripts/ci.sh            # full flow (editable install if pip works)
+#   SKIP_INSTALL=1 scripts/ci.sh   # offline: fall back to PYTHONPATH=src
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if [ "${SKIP_INSTALL:-0}" != "1" ] && pip install -e '.[test]' 2>/dev/null; then
+    echo "== installed griffin-repro (editable) with [test] extras"
+    PYPATH=""
+else
+    echo "== pip install unavailable; using PYTHONPATH=src fallback"
+    PYPATH="src"
+fi
+
+echo "== tier-1 tests"
+PYTHONPATH="${PYPATH}${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q
+
+echo "== benchmark smoke: fig5 (fast mode, batched sweep + results cache)"
+PYTHONPATH="${PYPATH}${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m benchmarks.run --only fig5
+
+echo "== CI OK"

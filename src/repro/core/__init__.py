@@ -14,8 +14,11 @@ from .spec import (CoreConfig, HybridSpec, Mode, SparseSpec, DENSE_BASELINE,
                    GRIFFIN, PRESETS, SPARSE_A_STAR, SPARSE_AB_STAR,
                    SPARSE_B_STAR, sparse_a, sparse_ab, sparse_b)
 from .evaluate import (GemmCycles, GemmShape, MaskModel, Workload,
-                       gemm_cycles, network_speedup, category_speedup)
-from .hybrid import design_speedup, running_spec, select_mode
+                       gemm_cycles, gemm_cycles_batched, network_speedup,
+                       network_speedup_batched, category_speedup,
+                       category_speedup_batched)
+from .hybrid import (category_design_speedup, category_design_speedup_batched,
+                     design_speedup, running_spec, select_mode)
 from .efficiency import Efficiency, efficiency, sparsity_tax
 from .overhead import power_area, structure
 
@@ -23,7 +26,10 @@ __all__ = [
     "CoreConfig", "HybridSpec", "Mode", "SparseSpec", "DENSE_BASELINE",
     "GRIFFIN", "PRESETS", "SPARSE_A_STAR", "SPARSE_AB_STAR", "SPARSE_B_STAR",
     "sparse_a", "sparse_ab", "sparse_b", "GemmCycles", "GemmShape",
-    "MaskModel", "Workload", "gemm_cycles", "network_speedup",
-    "category_speedup", "design_speedup", "running_spec", "select_mode",
-    "Efficiency", "efficiency", "sparsity_tax", "power_area", "structure",
+    "MaskModel", "Workload", "gemm_cycles", "gemm_cycles_batched",
+    "network_speedup", "network_speedup_batched", "category_speedup",
+    "category_speedup_batched", "category_design_speedup",
+    "category_design_speedup_batched", "design_speedup", "running_spec",
+    "select_mode", "Efficiency", "efficiency", "sparsity_tax", "power_area",
+    "structure",
 ]

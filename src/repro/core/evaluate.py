@@ -21,6 +21,14 @@ Implements the performance side of the paper:
 Cycle counts include the paper's output-synchronization stalls (max over the
 PE columns of a tile) and are exact for the greedy priority mechanism; SRAM
 bandwidth is assumed scaled with speedup as in Section V.
+
+Every evaluation level has a *batched* twin (``gemm_cycles_batched``,
+``network_speedup_batched``, ``category_speedup_batched``) that scores a
+whole stack of ``SparseSpec`` configurations in one vectorized pass: masks
+are generated once per (workload, layer, seed) and the scheduler runs over
+the stacked config axis (see :mod:`repro.core.scheduler`).  The batched
+twins are bit-exact with per-spec scalar loops — ``tests/test_batched_parity``
+asserts this — and are what :func:`repro.core.dse.sweep` drives.
 """
 from __future__ import annotations
 
@@ -30,8 +38,9 @@ from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .scheduler import (Schedule, schedule, shuffle_lanes, sparten_tile_cycles,
-                        static_pack_cycles)
+from .scheduler import (Schedule, schedule, schedule_batched, shuffle_lanes,
+                        sparten_tile_cycles, static_pack_cycles,
+                        static_pack_cycles_batched)
 from .spec import CoreConfig, Mode, SparseSpec
 
 # ---------------------------------------------------------------------------
@@ -517,3 +526,363 @@ def category_speedup(spec: SparseSpec, workloads: Sequence[Workload],
     sp = [network_speedup(spec, w, core, seed=seed + i, mode=mode)
           for i, w in enumerate(workloads)]
     return float(np.exp(np.mean(np.log(sp))))
+
+
+# ---------------------------------------------------------------------------
+# batched evaluation: one vectorized pass over a stack of SparseSpec configs
+# ---------------------------------------------------------------------------
+
+
+def _side_params(specs: Sequence[SparseSpec], side: str
+                 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """(d1, d2, d3, shuffle) vectors for the A or B window of each spec."""
+    if side == "a":
+        d = [(s.da1, s.da2, s.da3) for s in specs]
+    else:
+        d = [(s.db1, s.db2, s.db3) for s in specs]
+    arr = np.asarray(d, dtype=np.int64).reshape(len(specs), 3)
+    sh = np.asarray([s.shuffle for s in specs], dtype=bool)
+    return arr[:, 0], arr[:, 1], arr[:, 2], sh
+
+
+def sparse_b_gemm_cycles_batched(specs: Sequence[SparseSpec],
+                                 b_mask: np.ndarray, m: int, core: CoreConfig
+                                 ) -> List[GemmCycles]:
+    """Weight-only sparsity for a stack of specs.  b_mask: (K, N).
+
+    Specs are grouped by their cross-PE window width (the packing
+    granularity); within a group the tile stream is packed once and the
+    offline bound runs over the stacked config axis.
+    """
+    K, N = b_mask.shape
+    m_tiles = -(-m // core.m0)
+    T = -(-K // core.k0)
+    results: List[Optional[GemmCycles]] = [None] * len(specs)
+    groups: Dict[int, List[int]] = {}
+    for i, sp in enumerate(specs):
+        groups.setdefault(min(1 + sp.db3, core.n0), []).append(i)
+    for sub, idxs in groups.items():
+        tiles = _pack_stream(b_mask, core.k0, sub)     # (ngroups, T, K0, sub)
+        sub_specs = [specs[i] for i in idxs]
+        d1, d2, d3, sh = _side_params(sub_specs, "b")
+        per = static_pack_cycles_batched(tiles, d1, d2, d3, sh)
+        per_tile_g = -(-core.n0 // sub)                # groups per tile
+        ngroups = tiles.shape[0]
+        pad = -(-ngroups // per_tile_g) * per_tile_g
+        padded = np.zeros((len(idxs), pad), dtype=np.int64)
+        padded[:, :ngroups] = per
+        per_tile = padded.reshape(len(idxs), -1, per_tile_g).max(axis=2)
+        dense = T * per_tile.shape[1] * m_tiles
+        for j, i in enumerate(idxs):
+            results[i] = GemmCycles(dense=dense,
+                                    sparse=float(per_tile[j].sum()) * m_tiles)
+    return results  # type: ignore[return-value]
+
+
+def sparse_a_gemm_cycles_batched(specs: Sequence[SparseSpec],
+                                 a_mask: np.ndarray, n: int, core: CoreConfig
+                                 ) -> List[GemmCycles]:
+    """Activation-only sparsity for a stack of specs.  a_mask: (M, K)."""
+    M, K = a_mask.shape
+    n_tiles = -(-n // core.n0)
+    T = -(-K // core.k0)
+    results: List[Optional[GemmCycles]] = [None] * len(specs)
+    groups: Dict[int, List[int]] = {}
+    for i, sp in enumerate(specs):
+        groups.setdefault(min(1 + sp.da3, core.m0), []).append(i)
+    for sub, idxs in groups.items():
+        tiles = _pack_stream(a_mask.T, core.k0, sub)   # (ngroups, T, K0, sub)
+        ngroups = tiles.shape[0]
+        sub_specs = [specs[i] for i in idxs]
+        d1, d2, d3, sh = _side_params(sub_specs, "a")
+        big = np.broadcast_to(tiles[None], (len(idxs),) + tiles.shape)
+        big = big.reshape((-1,) + tiles.shape[1:])
+        cycles = schedule_batched(
+            big, np.repeat(d1, ngroups), np.repeat(d2, ngroups),
+            np.repeat(d3, ngroups), shuffle=np.repeat(sh, ngroups)
+        ).cycles.reshape(len(idxs), ngroups)
+        per_tile_g = -(-core.m0 // sub)
+        pad = -(-ngroups // per_tile_g) * per_tile_g
+        padded = np.zeros((len(idxs), pad), dtype=np.int64)
+        padded[:, :ngroups] = cycles
+        per_tile = padded.reshape(len(idxs), -1, per_tile_g).max(axis=2)
+        dense = T * per_tile.shape[1] * n_tiles
+        for j, i in enumerate(idxs):
+            results[i] = GemmCycles(dense=dense,
+                                    sparse=float(per_tile[j].sum()) * n_tiles)
+    return results  # type: ignore[return-value]
+
+
+def dual_gemm_cycles_batched(specs: Sequence[SparseSpec],
+                             preprocess: Sequence[bool], a_mask: np.ndarray,
+                             b_mask: np.ndarray, core: CoreConfig,
+                             mt_idx: np.ndarray, nt_idx: np.ndarray
+                             ) -> List[GemmCycles]:
+    """Dual sparsity for a stack of specs sharing one (mt_idx, nt_idx) sample.
+
+    Stage-1 B compaction is batched across all specs of a (sub_a, sub_b,
+    preprocess) group; stage-2 effectual masks are stacked (padded to the
+    deepest compacted stream, each row carrying its own ``t_len``) so the
+    expensive on-the-fly schedule runs once per group.
+    """
+    M, K = a_mask.shape
+    _, N = b_mask.shape
+    k0, n0, m0 = core.k0, core.n0, core.m0
+    base_a = _pack_stream(a_mask.T, k0, m0)            # (MT, T, K0, M0)
+    MT, T = base_a.shape[0], base_a.shape[1]
+    NT = -(-N // n0)
+    a_var = {False: base_a}                            # keyed by shuffle
+    b_var: Dict[Tuple[int, bool], np.ndarray] = {}     # keyed by (sub_b, sh)
+
+    def a_tiles_for(sh: bool) -> np.ndarray:
+        if sh not in a_var:
+            a_var[sh] = shuffle_lanes(base_a)
+        return a_var[sh][mt_idx]
+
+    def b_by_tile_for(sub_b: int, sh: bool) -> np.ndarray:
+        if (sub_b, sh) not in b_var:
+            bs = _pack_stream(b_mask, k0, sub_b)
+            if sh:
+                bs = shuffle_lanes(bs)
+            per_tile_b = -(-n0 // sub_b)
+            nsub_tot = NT * per_tile_b
+            if bs.shape[0] < nsub_tot:
+                padb = np.zeros((nsub_tot, T, k0, sub_b), dtype=bool)
+                padb[:bs.shape[0]] = bs
+                bs = padb
+            b_var[(sub_b, sh)] = bs.reshape(NT, per_tile_b, T, k0, sub_b)
+        return b_var[(sub_b, sh)]
+
+    results: List[Optional[GemmCycles]] = [None] * len(specs)
+    groups: Dict[Tuple[int, int, bool], List[int]] = {}
+    for i, sp in enumerate(specs):
+        key = (min(1 + sp.da3, m0), min(1 + sp.db3, n0), bool(preprocess[i]))
+        groups.setdefault(key, []).append(i)
+
+    for (sub_a, sub_b, prep), all_idxs in groups.items():
+        per_tile_b = -(-n0 // sub_b)
+        row_subs = -(-m0 // sub_a)
+        mt, nt = len(mt_idx), len(nt_idx)
+        nsub = nt * per_tile_b
+        # Cap the stacked stage-2 rows per scheduling call: past a few
+        # thousand rows the per-cycle working set falls out of cache and
+        # the batch turns memory-bound, which costs more than the Python
+        # overhead it saves.
+        group_units = mt * nsub * sub_b * row_subs
+        step = max(1, 6144 // max(group_units, 1))
+        chunks = [all_idxs[lo:lo + step]
+                  for lo in range(0, len(all_idxs), step)]
+        for idxs in chunks:
+            _dual_group(specs, idxs, prep, sub_a, sub_b, per_tile_b,
+                        row_subs, mt, nt, nsub, T, MT, NT, k0, nt_idx,
+                        a_tiles_for, b_by_tile_for, results)
+    return results  # type: ignore[return-value]
+
+
+def _dual_group(specs, idxs, prep, sub_a, sub_b, per_tile_b, row_subs, mt,
+                nt, nsub, T, MT, NT, k0, nt_idx, a_tiles_for, b_by_tile_for,
+                results) -> None:
+    """Score one (sub_a, sub_b, preprocess) chunk of dual-sparse specs."""
+    b_subs_all = [
+        b_by_tile_for(sub_b, specs[i].shuffle)[nt_idx].reshape(
+            -1, T, k0, sub_b) for i in idxs]
+    if prep:
+        stack = np.concatenate(b_subs_all, axis=0)
+        d1, d2, d3, _ = _side_params([specs[i] for i in idxs], "b")
+        s1 = schedule_batched(stack, np.repeat(d1, nsub),
+                              np.repeat(d2, nsub), np.repeat(d3, nsub),
+                              shuffle=False, record=True)
+    # stage-2 effectual masks, one per spec, padded to the chunk's C_max
+    effs, clens = [], []
+    for j, i in enumerate(idxs):
+        b_subs = b_subs_all[j]
+        if prep:
+            sl = slice(j * nsub, (j + 1) * nsub)
+            sub_sched = Schedule(cycles=s1.cycles[sl], cyc=s1.cyc[sl],
+                                 lane=s1.lane[sl], grp=s1.grp[sl])
+            filled, src_t, src_l = _slot_maps(sub_sched, b_subs)
+        else:
+            filled = b_subs
+            src_t = np.broadcast_to(
+                np.arange(T, dtype=np.int32)[None, :, None, None],
+                filled.shape)
+            src_l = np.broadcast_to(
+                np.arange(k0, dtype=np.int16)[None, None, :, None],
+                filled.shape)
+        C = filled.shape[1]
+        a_tiles = a_tiles_for(specs[i].shuffle)
+        st = np.broadcast_to(src_t[None], (mt,) + src_t.shape
+                             ).astype(np.int64)
+        slx = np.broadcast_to(src_l[None], (mt,) + src_l.shape
+                              ).astype(np.int64)
+        mt_ax = np.arange(mt)[:, None, None, None, None]
+        a_vals = a_tiles[mt_ax, st, slx]  # (mt, nsub, C, K0, sub_b, M0)
+        eff = filled[None, ..., None] & a_vals
+        eff = eff.transpose(0, 1, 4, 2, 3, 5).reshape(
+            mt * nsub * sub_b, C, k0, row_subs, sub_a)
+        eff = eff.transpose(0, 3, 1, 2, 4).reshape(
+            mt * nsub * sub_b * row_subs, C, k0, sub_a)
+        effs.append(eff)
+        clens.append(C)
+    c_max = max(clens)
+    units = mt * nsub * sub_b * row_subs
+    stack2 = np.zeros((len(idxs) * units, c_max, k0, sub_a), dtype=bool)
+    for j, eff in enumerate(effs):
+        stack2[j * units:(j + 1) * units, :clens[j]] = eff
+    da1, da2, da3, _ = _side_params([specs[i] for i in idxs], "a")
+    s2 = schedule_batched(stack2, np.repeat(da1, units),
+                          np.repeat(da2, units), np.repeat(da3, units),
+                          shuffle=False,
+                          t_len=np.repeat(np.asarray(clens), units))
+    dense = T * MT * NT
+    for j, i in enumerate(idxs):
+        per_unit = s2.cycles[j * units:(j + 1) * units].reshape(
+            mt, nt, per_tile_b * sub_b * row_subs)
+        per_tile = per_unit.max(axis=2)                # output-sync stall
+        results[i] = GemmCycles(dense=dense,
+                                sparse=float(per_tile.mean()) * MT * NT)
+
+
+def gemm_cycles_batched(specs: Sequence[SparseSpec], mode: Mode,
+                        a_mask: np.ndarray, b_mask: np.ndarray,
+                        core: CoreConfig,
+                        rng: Optional[np.random.Generator] = None,
+                        sample_mt: int = 4, sample_nt: int = 4
+                        ) -> List[GemmCycles]:
+    """Cycles of C = A @ B for every spec of a stack, in one vectorized pass.
+
+    Bit-exact with ``[gemm_cycles(s, mode, ...) for s in specs]`` where each
+    scalar call receives an identically-seeded ``rng`` — which is exactly how
+    :func:`network_speedup` consumes it, so batched and scalar DSE sweeps
+    produce identical numbers.
+    """
+    rng = rng or np.random.default_rng(0)
+    M, K = a_mask.shape
+    _, N = b_mask.shape
+    results: List[Optional[GemmCycles]] = [None] * len(specs)
+    sparten_ix, dual_ix, b_ix, a_ix, dense_ix = [], [], [], [], []
+    for i, spec in enumerate(specs):
+        if spec.name and spec.name.startswith("SparTen"):
+            sparten_ix.append(i)
+            continue
+        use_a = spec.supports_a and mode in (Mode.A, Mode.AB)
+        use_b = spec.supports_b and mode in (Mode.B, Mode.AB)
+        if use_a and use_b:
+            dual_ix.append(i)
+        elif use_b:
+            b_ix.append(i)
+        elif use_a:
+            a_ix.append(i)
+        else:
+            dense_ix.append(i)
+    by_mode: Dict[Mode, GemmCycles] = {}
+    for i in sparten_ix:
+        supported = {"SparTen.AB": Mode.AB, "SparTen.A": Mode.A,
+                     "SparTen.B": Mode.B}[specs[i].name]
+        eff_mode = _intersect_mode(mode, supported)
+        if eff_mode not in by_mode:
+            by_mode[eff_mode] = sparten_gemm_cycles(eff_mode, a_mask, b_mask)
+        results[i] = by_mode[eff_mode]
+    if dual_ix:
+        # the one rng-consuming path: every scalar call draws the same
+        # sample from an identically-seeded generator, so draw once here
+        MT, NT = -(-M // core.m0), -(-N // core.n0)
+        mt_idx = rng.choice(MT, size=min(sample_mt, MT), replace=False)
+        nt_idx = rng.choice(NT, size=min(sample_nt, NT), replace=False)
+        dres = dual_gemm_cycles_batched(
+            [specs[i] for i in dual_ix],
+            [specs[i].name != "TDash.AB" for i in dual_ix],
+            a_mask, b_mask, core, mt_idx, nt_idx)
+        for i, r in zip(dual_ix, dres):
+            results[i] = r
+    if b_ix:
+        for i, r in zip(b_ix, sparse_b_gemm_cycles_batched(
+                [specs[i] for i in b_ix], b_mask, M, core)):
+            results[i] = r
+    if a_ix:
+        for i, r in zip(a_ix, sparse_a_gemm_cycles_batched(
+                [specs[i] for i in a_ix], a_mask, N, core)):
+            results[i] = r
+    if dense_ix:
+        T = -(-K // core.k0)
+        dense = T * -(-N // core.n0) * -(-M // core.m0)
+        for i in dense_ix:
+            results[i] = GemmCycles(dense=dense, sparse=float(dense))
+    return results  # type: ignore[return-value]
+
+
+def network_speedup_batched(specs: Sequence[SparseSpec], wl: Workload,
+                            core: CoreConfig, seed: int = 0,
+                            mode: Optional[Mode] = None,
+                            sample_mt: int = 4, sample_nt: int = 4,
+                            mask_model: MaskModel = DEFAULT_MASK_MODEL
+                            ) -> np.ndarray:
+    """End-to-end speedups of ``wl`` for a stack of specs (one mask draw).
+
+    The per-layer masks depend only on (workload, seed), not on the spec —
+    the scalar path regenerates them per design; here they are drawn once
+    and shared, which with the stacked-config scheduler is where the DSE
+    batching speedup comes from.  Returns a (len(specs),) array, bit-exact
+    with per-spec :func:`network_speedup` calls.
+    """
+    mode = mode or wl.mode
+    b_dens = allocate_layer_densities(wl.gemms, wl.b_sparsity)
+    dense_total = 0.0
+    sparse_totals = np.zeros(len(specs), dtype=np.float64)
+    for li, g in enumerate(wl.gemms):
+        lrng = np.random.default_rng(seed * 7919 + li)
+        a_d = 1.0 - _layer_jitter(wl.a_sparsity, lrng)
+        b_d = float(np.clip(b_dens[li] * lrng.uniform(0.9, 1.1), 0.02, 1.0)) \
+            if g.b_static else 1.0 - _layer_jitter(wl.a_sparsity, lrng)
+        k_eff = min(g.k, MAX_CHUNKS * core.k0)
+        m_eff = min(g.m, 64 * core.m0)
+        n_eff = min(g.n, 64 * core.n0)
+        g_mode = mode if g.b_static else (
+            Mode.A if mode in (Mode.A, Mode.AB) and wl.a_sparsity > 0.05
+            else Mode.DENSE)
+        a_mask = mask_model.act_mask(m_eff, k_eff, a_d, lrng, q=g.q)
+        b_mask = mask_model.weight_mask(k_eff, n_eff, b_d, lrng, q=g.q)
+        if g.depthwise:
+            allowed = (np.arange(k_eff)[:, None] // g.q) == np.arange(n_eff)[None, :]
+            b_mask &= allowed
+        res = gemm_cycles_batched(specs, g_mode, a_mask, b_mask, core, lrng,
+                                  sample_mt, sample_nt)
+        full = g.count * (-(-g.k // core.k0)) * (-(-g.n // core.n0)) * \
+            (-(-g.m // core.m0))
+        dense_total += full
+        sparse_totals += full * np.array([r.sparse / r.dense for r in res])
+    return dense_total / np.maximum(sparse_totals, 1e-9)
+
+
+def category_speedup_batched(specs: Sequence[SparseSpec],
+                             workloads: Sequence[Workload], core: CoreConfig,
+                             seed: int = 0, mode: Optional[Mode] = None,
+                             mask_model: MaskModel = DEFAULT_MASK_MODEL
+                             ) -> np.ndarray:
+    """Geometric-mean category speedups for a stack of specs."""
+    logs = np.zeros((len(workloads), len(specs)))
+    for i, w in enumerate(workloads):
+        logs[i] = np.log(network_speedup_batched(
+            specs, w, core, seed=seed + i, mode=mode, mask_model=mask_model))
+    return np.exp(logs.mean(axis=0))
+
+
+def dense_cycles_batched(workloads: Sequence[Workload], core: CoreConfig
+                         ) -> np.ndarray:
+    """Dense-baseline cycle totals for many workloads in one numpy pass
+    (vectorized twin of :meth:`Workload.dense_cycles`)."""
+    wi, kk, nn, mm, cc = [], [], [], [], []
+    for i, w in enumerate(workloads):
+        for g in w.gemms:
+            wi.append(i)
+            kk.append(g.k)
+            nn.append(g.n)
+            mm.append(g.m)
+            cc.append(g.count)
+    if not wi:
+        return np.zeros(len(workloads))
+    kk, nn, mm, cc = (np.asarray(x, dtype=np.int64) for x in (kk, nn, mm, cc))
+    per = cc * (-(-kk // core.k0)) * (-(-nn // core.n0)) * (-(-mm // core.m0))
+    out = np.zeros(len(workloads), dtype=np.float64)
+    np.add.at(out, np.asarray(wi), per.astype(np.float64))
+    return out

@@ -17,7 +17,8 @@ from typing import Dict, Optional, Sequence, Union
 
 import numpy as np
 
-from .evaluate import MaskModel, DEFAULT_MASK_MODEL, network_speedup, Workload
+from .evaluate import (MaskModel, DEFAULT_MASK_MODEL, network_speedup,
+                       network_speedup_batched, Workload)
 from .spec import CoreConfig, HybridSpec, Mode, SparseSpec
 
 # Sparsity below this threshold is not worth skipping (metadata/arbitration
@@ -58,3 +59,37 @@ def category_design_speedup(design: Union[SparseSpec, HybridSpec],
                          mask_model=mask_model)
           for i, w in enumerate(workloads)]
     return float(np.exp(np.mean(np.log(sp))))
+
+
+def category_design_speedup_batched(designs: Sequence[Union[SparseSpec,
+                                                            HybridSpec]],
+                                    workloads: Sequence[Workload],
+                                    core: CoreConfig, seed: int = 0,
+                                    mode: Optional[Mode] = None,
+                                    mask_model: MaskModel = DEFAULT_MASK_MODEL
+                                    ) -> np.ndarray:
+    """Category speedups for a whole stack of (possibly hybrid) designs.
+
+    Designs morph/degrade to their running spec per workload category, the
+    resulting specs are deduplicated (two designs running the same config
+    score identically), and the unique stack goes through the batched
+    evaluation engine once per workload.  Bit-exact with per-design
+    :func:`category_design_speedup` calls; this is the entry point
+    :func:`repro.core.dse.sweep` uses.
+    """
+    logs = np.zeros((len(workloads), len(designs)))
+    for i, wl in enumerate(workloads):
+        wl_mode = mode or wl.mode
+        specs = [running_spec(d, wl_mode) for d in designs]
+        uniq: list = []
+        index: dict = {}
+        inverse = np.empty(len(specs), dtype=np.int64)
+        for j, sp in enumerate(specs):
+            if sp not in index:
+                index[sp] = len(uniq)
+                uniq.append(sp)
+            inverse[j] = index[sp]
+        sp_u = network_speedup_batched(uniq, wl, core, seed=seed + i,
+                                       mode=wl_mode, mask_model=mask_model)
+        logs[i] = np.log(sp_u)[inverse]
+    return np.exp(logs.mean(axis=0))

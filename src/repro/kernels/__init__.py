@@ -5,13 +5,17 @@
   block-compaction of weights with scalar-prefetch metadata (Sparse.B),
   optional on-the-fly A-block skipping (dual), and column balancing
   (shuffle).  See DESIGN.md Section 3 for the granularity adaptation.
+- batch_eval:   jax.vmap twin of the batched cycle-model scheduler, the
+  accelerator path behind ``schedule_batched(..., backend="jax")``.
 
 Kernels are validated against their ref.py oracles in interpret mode on CPU
 and target TPU v5e block shapes (128-aligned) for real runs.
 """
+from .batch_eval.ops import schedule_cycles
 from .dense_gemm.ops import dense_matmul
 from .griffin_spmm.ops import (GriffinWeights, auto_matmul, balance_columns,
                                griffin_matmul, preprocess_weights)
 
 __all__ = ["dense_matmul", "GriffinWeights", "auto_matmul",
-           "balance_columns", "griffin_matmul", "preprocess_weights"]
+           "balance_columns", "griffin_matmul", "preprocess_weights",
+           "schedule_cycles"]

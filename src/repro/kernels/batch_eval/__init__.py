@@ -1,0 +1,16 @@
+"""Accelerator path for the batched cycle-model evaluation.
+
+The numpy engine in :mod:`repro.core.scheduler` is the reference; this
+subpackage is its ``jax.vmap`` twin on the same kernel substrate as the
+Pallas GEMM kernels (dense_gemm / griffin_spmm): the greedy sliding-window
+schedule is expressed as a per-tile ``lax.while_loop`` with the window and
+borrow offsets unrolled at trace time, then vmapped over the tile-stream
+batch axis and jitted.  On CPU it is a correctness twin; on a TPU/GPU host
+it moves the DSE inner loop off the Python interpreter entirely.
+
+Select it with ``schedule_batched(..., backend="jax")`` (homogeneous config
+only) or call :func:`schedule_cycles` directly.
+"""
+from .ops import schedule_cycles
+
+__all__ = ["schedule_cycles"]

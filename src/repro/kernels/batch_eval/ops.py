@@ -1,0 +1,99 @@
+"""jax.vmap implementation of the greedy sliding-window cycle model.
+
+Mirrors :func:`repro.core.scheduler.schedule` exactly (same priority order,
+same window/travel accounting) for one (d1, d2, d3) configuration, vmapped
+over the leading tile axis.  The per-cycle placement pass is unrolled at
+trace time — ``(1 + d1)`` window chunks x ``(1 + d2)(1 + d3)`` borrow
+offsets — so the config must be static and modest; the numpy engine remains
+the general path (per-row configs, recording, SparTen-deep windows).
+"""
+from __future__ import annotations
+
+import functools
+from typing import List, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+# keep the priority order identical to the numpy engine
+from ...core.scheduler import _offsets, shuffle_lanes
+
+# window-chunks x offsets unroll budget: beyond this the trace (and the
+# compiled program) grows uselessly large — SparTen-style 128-deep windows
+# belong on the numpy path.
+MAX_UNROLL = 512
+
+
+@functools.partial(jax.jit, static_argnames=("d1", "d2", "d3"))
+def _schedule_cycles(mask: jax.Array, d1: int, d2: int, d3: int) -> jax.Array:
+    rows, T, K0, G = mask.shape
+    win = d1 + 1
+    offs: List[Tuple[int, int]] = _offsets(d2, d3)
+    t_grid = jnp.arange(T)
+
+    def one(m: jax.Array) -> jax.Array:
+        def cond(state):
+            R, f, cycles = state
+            return R.any()
+
+        def body(state):
+            R, f, cycles = state
+            occ = jnp.zeros((K0, G), dtype=bool)
+            for dt in range(win):                      # oldest chunk first
+                tt = f + dt
+                valid = tt < T
+                ttc = jnp.minimum(tt, T - 1)
+                chunk = R[ttc] & valid
+                for (dl, dg) in offs:
+                    src = chunk[dl:] if dl else chunk
+                    src = jnp.roll(src, -dg, axis=1) if dg else src
+                    occ_v = occ[:K0 - dl] if dl else occ
+                    put = src & ~occ_v
+                    if dl:
+                        occ = occ.at[:K0 - dl].set(occ[:K0 - dl] | put)
+                    else:
+                        occ = occ | put
+                    taken = jnp.roll(put, dg, axis=1) if dg else put
+                    if dl:
+                        chunk = chunk.at[dl:].set(chunk[dl:] & ~taken)
+                    else:
+                        chunk = chunk & ~taken
+                R = R.at[ttc].set(jnp.where(valid, chunk, R[ttc]))
+            cycles = cycles + 1
+            chunk_any = R.any(axis=(1, 2))
+            cand = jnp.where(chunk_any & (t_grid >= f), t_grid, T)
+            f = jnp.minimum(cand.min(), f + win)       # window front advance
+            return R, f, cycles
+
+        R, f, cycles = lax.while_loop(
+            cond, body, (m, jnp.int32(0), jnp.int32(0)))
+        tail = jnp.maximum(T - f, 0)
+        return cycles + -(-tail // win)                # trailing travel
+
+    return jax.vmap(one)(mask)
+
+
+def schedule_cycles(mask: np.ndarray, d1: int, d2: int, d3: int,
+                    shuffle: bool = False) -> np.ndarray:
+    """Executed-cycle counts of the greedy schedule, on the jax backend.
+
+    mask: (tiles, T, K0, G) boolean.  Returns (tiles,) int64, bit-exact with
+    ``schedule(mask, d1, d2, d3, shuffle).cycles``.
+    """
+    if mask.ndim != 4:
+        raise ValueError(f"mask must be (tiles, T, K0, G), got {mask.shape}")
+    win = d1 + 1
+    if win * (1 + d2) * (1 + d3) > MAX_UNROLL:
+        raise ValueError(
+            f"config ({d1},{d2},{d3}) unrolls past {MAX_UNROLL} placement "
+            "steps per cycle; use the numpy engine for deep windows")
+    if mask.shape[1] == 0 or mask.shape[0] == 0:
+        return np.zeros(mask.shape[0], dtype=np.int64)
+    if shuffle:
+        mask = shuffle_lanes(mask, chunk_axis=1, lane_axis=2)
+    out = _schedule_cycles(jnp.asarray(np.ascontiguousarray(mask)),
+                           int(d1), int(d2), int(d3))
+    return np.asarray(out).astype(np.int64)

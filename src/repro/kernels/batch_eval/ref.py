@@ -1,0 +1,12 @@
+"""Numpy oracle for the jax batched-evaluation path (test reference)."""
+from __future__ import annotations
+
+import numpy as np
+
+from ...core.scheduler import schedule
+
+
+def schedule_cycles_ref(mask: np.ndarray, d1: int, d2: int, d3: int,
+                        shuffle: bool = False) -> np.ndarray:
+    """Reference cycle counts from the numpy engine."""
+    return schedule(mask, d1, d2, d3, shuffle=shuffle).cycles

@@ -15,8 +15,11 @@ import jax
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:          # older jax: Auto is the only behaviour
+        return jax.make_mesh(shape, axes)
     return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+                         axis_types=(axis_type.Auto,) * len(axes))
 
 
 def chips(mesh) -> int:

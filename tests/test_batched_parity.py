@@ -1,0 +1,151 @@
+"""Bit-exact parity of the batched evaluation engine with the scalar path.
+
+The batched engine (stacked-config scheduler, batched GEMM/network/category
+evaluation, sweep driver) must reproduce the per-design scalar results
+*exactly* — same integers out of the scheduler, same floats out of the
+speedup chain — across every architecture family: Sparse.A / Sparse.B /
+Sparse.AB (two-stage), joint (TensorDash-style, no preprocessing), SparTen
+and the dense baseline, plus hybrid morphing.
+"""
+import numpy as np
+import pytest
+
+from repro.core import CoreConfig, GRIFFIN, Mode
+from repro.core.dse import score, sweep
+from repro.core.evaluate import (GemmShape, MaskModel, Workload, gemm_cycles,
+                                 gemm_cycles_batched, network_speedup,
+                                 network_speedup_batched)
+from repro.core.hybrid import (category_design_speedup,
+                               category_design_speedup_batched)
+from repro.core.scheduler import (schedule, schedule_batched,
+                                  static_pack_cycles,
+                                  static_pack_cycles_batched)
+from repro.core.spec import (DENSE_BASELINE, SPARSE_A_STAR, SPARSE_AB_STAR,
+                             SPARSE_B_STAR, SPARTEN_AB, TDASH_AB, sparse_a,
+                             sparse_ab, sparse_b)
+
+CORE = CoreConfig()
+
+WINDOW_CONFIGS = [(0, 0, 0, False), (2, 1, 0, False), (4, 0, 2, True),
+                  (1, 2, 1, True), (8, 3, 2, False), (3, 0, 0, True),
+                  (15, 0, 0, False)]
+
+
+def _stacked(cfgs, tiles_per_cfg, mask):
+    big = np.concatenate([mask] * len(cfgs), axis=0)
+    rep = lambda i: np.repeat([c[i] for c in cfgs], tiles_per_cfg)
+    return big, rep(0), rep(1), rep(2), rep(3)
+
+
+def test_schedule_batched_matches_scalar_per_config():
+    mask = np.random.default_rng(7).random((5, 23, 8, 3)) < 0.35
+    big, d1, d2, d3, sh = _stacked(WINDOW_CONFIGS, 5, mask)
+    out = schedule_batched(big, d1, d2, d3, shuffle=sh, record=True)
+    for i, (a, b, c, s) in enumerate(WINDOW_CONFIGS):
+        ref = schedule(mask, a, b, c, shuffle=s, record=True)
+        sl = slice(5 * i, 5 * (i + 1))
+        np.testing.assert_array_equal(ref.cycles, out.cycles[sl])
+        np.testing.assert_array_equal(ref.cyc, out.cyc[sl])
+        np.testing.assert_array_equal(ref.lane, out.lane[sl])
+        np.testing.assert_array_equal(ref.grp, out.grp[sl])
+
+
+def test_schedule_batched_compaction_parity():
+    """Rows finishing at wildly different cycles exercise the retire path."""
+    dens = np.linspace(0.02, 0.9, 200)[:, None, None, None]
+    mask = np.random.default_rng(5).random((200, 40, 16, 2)) < dens
+    for cfg in [(1, 0, 0, False), (4, 1, 1, True)]:
+        ref = schedule(mask, *cfg[:3], shuffle=cfg[3], record=True)
+        out = schedule_batched(mask, *cfg[:3], shuffle=cfg[3], record=True)
+        np.testing.assert_array_equal(ref.cycles, out.cycles)
+        np.testing.assert_array_equal(ref.cyc, out.cyc)
+
+
+def test_schedule_batched_t_len_matches_truncated_streams():
+    rng = np.random.default_rng(1)
+    lens = rng.integers(1, 24, size=150)
+    rows = np.random.default_rng(2).random((150, 23, 8, 2)) < 0.3
+    rows &= (np.arange(23)[None, :] < lens[:, None])[:, :, None, None]
+    out = schedule_batched(rows, 2, 1, 0, t_len=lens)
+    for i in range(150):
+        ref = schedule(rows[i:i + 1, :lens[i]], 2, 1, 0)
+        assert out.cycles[i] == ref.cycles[0]
+
+
+def test_static_pack_batched_matches_scalar_per_config():
+    mask = np.random.default_rng(9).random((11, 48, 16, 2)) < 0.2
+    cfgs = WINDOW_CONFIGS
+    out = static_pack_cycles_batched(
+        mask, [c[0] for c in cfgs], [c[1] for c in cfgs],
+        [c[2] for c in cfgs], [c[3] for c in cfgs])
+    for i, (a, b, c, s) in enumerate(cfgs):
+        np.testing.assert_array_equal(
+            out[i], static_pack_cycles(mask, a, b, c, shuffle=s))
+
+
+SPECS = [SPARSE_B_STAR, sparse_b(2, 1, 0), SPARSE_A_STAR, sparse_a(1, 0, 1),
+         SPARSE_AB_STAR, sparse_ab(1, 1, 0, 3, 0, 2), TDASH_AB, SPARTEN_AB,
+         DENSE_BASELINE]
+
+
+@pytest.mark.parametrize("mode", [Mode.A, Mode.B, Mode.AB, Mode.DENSE])
+def test_gemm_cycles_batched_parity_all_modes(mode):
+    mm = MaskModel()
+    rng = np.random.default_rng(3)
+    a_mask = mm.act_mask(32, 128, 0.5, rng)
+    b_mask = mm.weight_mask(128, 48, 0.25, rng)
+    batched = gemm_cycles_batched(SPECS, mode, a_mask, b_mask, CORE,
+                                  np.random.default_rng(7))
+    for spec, got in zip(SPECS, batched):
+        ref = gemm_cycles(spec, mode, a_mask, b_mask, CORE,
+                          np.random.default_rng(7))
+        assert (ref.dense, ref.sparse) == (got.dense, got.sparse), spec.label()
+
+
+TINY_WL = Workload("tiny", (GemmShape(24, 96, 40), GemmShape(8, 64, 32),
+                            GemmShape(16, 48, 16, b_static=False)),
+                   a_sparsity=0.5, b_sparsity=0.8)
+
+
+def test_network_speedup_batched_parity():
+    specs = [SPARSE_B_STAR, SPARSE_A_STAR, SPARSE_AB_STAR, TDASH_AB,
+             DENSE_BASELINE]
+    got = network_speedup_batched(specs, TINY_WL, CORE, seed=11)
+    for spec, g in zip(specs, got):
+        assert network_speedup(spec, TINY_WL, CORE, seed=11) == g, spec.label()
+
+
+def test_category_design_speedup_batched_handles_hybrids():
+    designs = [GRIFFIN, SPARSE_AB_STAR, SPARTEN_AB]
+    for mode in (Mode.B, Mode.A, Mode.AB):
+        got = category_design_speedup_batched(designs, [TINY_WL], CORE,
+                                              seed=4, mode=mode)
+        for d, g in zip(designs, got):
+            assert category_design_speedup(d, [TINY_WL], CORE, seed=4,
+                                           mode=mode) == g
+
+
+def test_sweep_rows_match_score():
+    designs = [SPARSE_B_STAR, GRIFFIN]
+    rows = sweep(designs, Mode.B, CORE, seed=1)
+    assert rows == [score(d, Mode.B, CORE, seed=1) for d in designs]
+
+
+def test_jax_backend_matches_numpy():
+    pytest.importorskip("jax")
+    mask = np.random.default_rng(11).random((6, 19, 8, 3)) < 0.3
+    for (d1, d2, d3, sh) in [(0, 0, 0, False), (2, 1, 0, False),
+                             (4, 0, 2, True)]:
+        ref = schedule(mask, d1, d2, d3, shuffle=sh).cycles
+        got = schedule_batched(mask, d1, d2, d3, shuffle=sh,
+                               backend="jax").cycles
+        np.testing.assert_array_equal(ref, got)
+
+
+def test_jax_backend_rejects_heterogeneous_configs():
+    pytest.importorskip("jax")
+    mask = np.zeros((2, 4, 8, 1), dtype=bool)
+    with pytest.raises(ValueError):
+        schedule_batched(mask, [1, 2], 0, 0, backend="jax")
+    with pytest.raises(ValueError):
+        schedule_batched(mask, 1, 0, 0, record=True, backend="jax")

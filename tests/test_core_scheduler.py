@@ -1,7 +1,10 @@
-"""Scheduler invariants: hand cases, property tests, paper semantics."""
+"""Scheduler invariants: hand cases, paper semantics.
+
+The hypothesis property sweep lives in ``tests/test_properties.py`` (guarded
+with ``pytest.importorskip`` — hypothesis is an optional [test] dependency).
+"""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core.scheduler import (schedule, shuffle_lanes, static_pack_cycles,
                                   sparten_tile_cycles)
@@ -49,16 +52,13 @@ def test_shuffle_preserves_element_count():
             mask.reshape(4, 9, 4, 4, 3).sum(axis=3)).all()
 
 
-@settings(max_examples=30, deadline=None)
-@given(
-    t=st.integers(2, 12), k0=st.sampled_from([4, 8, 16]),
-    g=st.integers(1, 3), d1=st.integers(0, 4), d2=st.integers(0, 2),
-    d3=st.integers(0, 2), density=st.floats(0.05, 0.95),
-    seed=st.integers(0, 999),
-)
-def test_schedule_invariants_property(t, k0, g, d1, d2, d3, density, seed):
+@pytest.mark.parametrize("seed", range(10))
+def test_schedule_invariants_seeds(seed):
     rng = np.random.default_rng(seed)
-    mask = rng.random((2, t, k0, g)) < density
+    t, k0 = int(rng.integers(2, 13)), int(rng.choice([4, 8, 16]))
+    g, d1 = int(rng.integers(1, 4)), int(rng.integers(0, 5))
+    d2, d3 = int(rng.integers(0, 3)), int(rng.integers(0, 3))
+    mask = rng.random((2, t, k0, g)) < rng.uniform(0.05, 0.95)
     s = schedule(mask, d1, d2, d3, record=True)
     verify_schedule(mask, s, d1, d2, d3)
 

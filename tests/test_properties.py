@@ -1,0 +1,78 @@
+"""Hypothesis property sweeps over the scheduler, functional executor and
+Pallas kernels.
+
+hypothesis is an *optional* [test] dependency (declared in pyproject.toml);
+the module-level ``pytest.importorskip`` below turns its absence into a
+clean skip instead of a collection error, so the tier-1 suite never
+hard-fails on a minimal environment.  The deterministic seed-parametrized
+variants of these sweeps live in the sibling test modules and always run.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed "
+                    "(pip install -e .[test] to enable property sweeps)")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.functional import execute_b_sparse, verify_schedule
+from repro.core.scheduler import schedule
+from repro.core.spec import CoreConfig, sparse_b
+from repro.kernels import griffin_matmul, preprocess_weights
+
+CORE = CoreConfig()
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    t=st.integers(2, 12), k0=st.sampled_from([4, 8, 16]),
+    g=st.integers(1, 3), d1=st.integers(0, 4), d2=st.integers(0, 2),
+    d3=st.integers(0, 2), density=st.floats(0.05, 0.95),
+    seed=st.integers(0, 999),
+)
+def test_schedule_invariants_property(t, k0, g, d1, d2, d3, density, seed):
+    rng = np.random.default_rng(seed)
+    mask = rng.random((2, t, k0, g)) < density
+    s = schedule(mask, d1, d2, d3, record=True)
+    verify_schedule(mask, s, d1, d2, d3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 6), k=st.integers(3, 70), n=st.integers(1, 40),
+    density=st.floats(0.02, 0.9), db1=st.integers(1, 6),
+    db2=st.integers(0, 2), db3=st.integers(0, 2), sh=st.booleans(),
+    seed=st.integers(0, 10_000),
+)
+def test_b_sparse_execution_property(m, k, n, density, db1, db2, db3, sh, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((m, k))
+    b = rng.standard_normal((k, n)) * (rng.random((k, n)) < density)
+    spec = sparse_b(db1, db2, db3, shuffle=sh)
+    c, ops = execute_b_sparse(a, b, spec, CORE)
+    np.testing.assert_allclose(c, a @ b, rtol=1e-10, atol=1e-10)
+    assert ops == (b != 0).sum()
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 40), kb=st.integers(2, 6), nb=st.integers(1, 5),
+    block_k=st.sampled_from([8, 16]), block_n=st.sampled_from([16, 32]),
+    density=st.floats(0.1, 0.9), dual=st.booleans(), seed=st.integers(0, 99),
+)
+def test_griffin_spmm_property(m, kb, nb, block_k, block_n, density, dual,
+                               seed):
+    rng = np.random.RandomState(seed)
+    k, n = kb * block_k, nb * block_n
+    unit = block_n // 2
+    w = rng.randn(k, n).astype(np.float32)
+    # zero random (block_k x unit) blocks
+    keep = rng.rand(kb, n // unit) < density
+    wb = w.reshape(kb, block_k, n // unit, unit).transpose(0, 2, 1, 3).copy()
+    wb[~keep] = 0
+    w = wb.transpose(0, 2, 1, 3).reshape(k, n)
+    a = rng.randn(m, k).astype(np.float32)
+    gw = preprocess_weights(w, block_k=block_k, block_n=block_n, unit=unit,
+                            balance=True)
+    out = griffin_matmul(jnp.asarray(a), gw, dual=dual, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), a @ w, rtol=2e-4, atol=2e-4)

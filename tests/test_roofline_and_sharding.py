@@ -89,17 +89,19 @@ def test_param_spec_drops_nondivisible():
 
 
 def test_batch_spec_falls_back_to_seq(mesh):
+    # dp_axes returns an axis tuple (multi-axis dp), so a dim's entry may be
+    # the bare name or a 1-tuple of it — both mean the same sharding
     tok = jax.ShapeDtypeStruct((8, 64), jnp.int32)
-    assert batch_spec(tok, mesh)[0] == "data"
+    assert batch_spec(tok, mesh)[0] in ("data", ("data",))
     tiny = jax.ShapeDtypeStruct((1, 64), jnp.int32)
     spec = batch_spec(tiny, mesh)
-    assert spec[0] in (None, "data")     # seq fallback applies when dp > 1
+    assert spec[0] in (None, "data", ("data",))  # seq fallback when dp > 1
 
 
 def test_cache_spec_shards_batch_and_seq(mesh):
     kv = jax.ShapeDtypeStruct((16, 8, 4096, 8, 64), jnp.bfloat16)
     spec = cache_spec("['k']", kv, mesh, batch=8)
-    assert spec[1] == "data"             # batch dim
+    assert spec[1] in ("data", ("data",))        # batch dim
     # model axis size 1 -> no model sharding placed
     pos = jax.ShapeDtypeStruct((), jnp.int32)
     assert cache_spec("['pos']", pos, mesh, batch=8) == P()

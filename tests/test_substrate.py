@@ -49,8 +49,10 @@ def test_adamw_descends_quadratic():
 
 
 def test_compressed_psum_matches_mean():
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    kwargs = {}
+    if hasattr(jax.sharding, "AxisType"):    # added after jax 0.4.x
+        kwargs["axis_types"] = (jax.sharding.AxisType.Auto,)
+    mesh = jax.make_mesh((1,), ("data",), **kwargs)
     g = {"a": jnp.asarray(np.random.RandomState(0).randn(32).astype(np.float32))}
     err = init_error(g)
 
