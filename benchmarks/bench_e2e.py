@@ -1,0 +1,141 @@
+"""End-to-end Griffin execution: registry models dense vs mode-dispatched.
+
+Runs whole-network prefill forwards (reduced configs, Pallas interpret mode
+on CPU) through ``models.common.griffin_linear`` under the four workload
+categories of paper Table I:
+
+  dense -> every GEMM on the dense Pallas kernel;
+  A     -> declared activation sparsity, Sparse.A kernel (runtime-compacted
+           A-block iteration space) against dense weights;
+  B     -> weights block-pruned + compacted (``sparsity.sparsify_params``),
+           Sparse.B kernel;
+  AB    -> compacted weights + declared activation sparsity, dual kernel
+           (compacted B walk + on-the-fly A-block predication).
+
+Every category is parity-checked against the plain-``jnp`` reference with
+the *same* effective weights (for B/AB: the pruned-but-dense twin from
+``sparsify_params(..., compact=False)``), so the mode-dispatched stack is
+validated through whole networks, not isolated GEMMs.  Interpret-mode wall
+time is NOT TPU performance — the derived column that matters is the mean
+*grid compaction* of the compacted weights (the MXU-work fraction a real
+TPU skips; same convention as bench_kernels.py / EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config
+from repro.kernels.griffin_spmm.ops import GriffinWeights
+from repro.models.common import sparse_execution
+from repro.models.registry import build_model
+from repro.sparsity import sparsify_params
+
+from .common import Timer, emit, write_csv
+
+PRUNE = dict(block_k=16, block_n=16, unit=8)   # reduced dims (d_model 64)
+B_SPARSITY = 0.6
+A_SPARSITY = 0.5        # declared (paper Table I category knob)
+TOL = 1e-4              # reduced configs run float32
+
+FAST_MODELS = ("llama3.2-1b", "xlstm-1.3b")
+FULL_MODELS = FAST_MODELS + ("whisper-large-v3", "mixtral-8x7b")
+
+
+def _batch(cfg, rng):
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 16)), jnp.int32)
+    batch = {"tokens": tokens}
+    if cfg.is_encdec:
+        batch["frames"] = jnp.asarray(
+            rng.standard_normal((2, cfg.enc_frames, cfg.d_model)),
+            jnp.dtype(cfg.dtype))
+    return batch
+
+
+def _weight_stats(params):
+    """Mean density / grid compaction over the GriffinWeights leaves."""
+    dens, comp = [], []
+
+    def visit(t):
+        if isinstance(t, GriffinWeights):
+            dens.append(t.density)
+            comp.append(t.compaction)
+        elif isinstance(t, dict):
+            for v in t.values():
+                visit(v)
+
+    visit(params)
+    return (float(np.mean(dens)) if dens else 1.0,
+            float(np.mean(comp)) if comp else 1.0)
+
+
+def _timed_prefill(api, params, batch, **scope):
+    if scope:
+        with sparse_execution(**scope):
+            _, logits = api.prefill(params, batch)
+            logits.block_until_ready()
+            with Timer() as t:
+                _, logits = api.prefill(params, batch)
+                logits.block_until_ready()
+    else:
+        _, logits = api.prefill(params, batch)
+        logits.block_until_ready()
+        with Timer() as t:
+            _, logits = api.prefill(params, batch)
+            logits.block_until_ready()
+    return np.asarray(logits, np.float32), t.us
+
+
+def run_model(name: str, rows: list) -> None:
+    cfg = get_config(name).reduced()
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg, np.random.default_rng(1))
+
+    dense_ref, us_ref = _timed_prefill(api, params, batch)
+    pruned_dense = sparsify_params(params, B_SPARSITY, compact=False, **PRUNE)
+    pruned_ref, _ = _timed_prefill(api, pruned_dense, batch)
+    compacted = sparsify_params(params, B_SPARSITY, **PRUNE)
+    w_density, w_compaction = _weight_stats(compacted)
+
+    cats = {
+        "dense": (params, dense_ref, dict(interpret=True)),
+        "A": (params, dense_ref, dict(interpret=True,
+                                      a_sparsity=A_SPARSITY)),
+        "B": (compacted, pruned_ref, dict(interpret=True)),
+        "AB": (compacted, pruned_ref, dict(interpret=True,
+                                           a_sparsity=A_SPARSITY)),
+    }
+    for cat, (p, ref, scope) in cats.items():
+        out, us = _timed_prefill(api, p, batch, **scope)
+        err = float(np.abs(out - ref).max())
+        assert err < TOL, (name, cat, err)
+        sparse_cat = cat in ("B", "AB")
+        derived = (f"compaction={w_compaction if sparse_cat else 1.0:.2f};"
+                   f"density={w_density if sparse_cat else 1.0:.2f};"
+                   f"max_err={err:.1e}")
+        emit(f"e2e/{name}/{cat}", us, derived)
+        rows.append({"model": name, "category": cat, "us": us,
+                     "us_jnp_ref": us_ref,
+                     "weight_density": w_density if sparse_cat else 1.0,
+                     "grid_compaction": w_compaction if sparse_cat else 1.0,
+                     "max_err": err})
+
+
+def run(fast: bool = True) -> None:
+    rows: list = []
+    for name in (FAST_MODELS if fast else FULL_MODELS):
+        run_model(name, rows)
+    print(f"# bench_e2e -> {write_csv('bench_e2e', rows)}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast subset (2 models, interpret mode) — the CI "
+                         "stage scripts/ci.sh runs")
+    args = ap.parse_args()
+    run(fast=args.smoke)

@@ -12,7 +12,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.evaluate import MaskModel
-from repro.kernels import dense_matmul, griffin_matmul, preprocess_weights
+from repro.kernels import (compact_activations, dense_matmul, griffin_matmul,
+                           preprocess_weights, sparse_a_matmul)
 from repro.kernels.dense_gemm.ref import dense_matmul_ref
 
 from .common import Timer, emit, write_csv
@@ -69,6 +70,31 @@ def run(fast: bool = True) -> None:
                 rows.append({"kernel": name, "us": t.us,
                              "compaction": gw.compaction,
                              "density": gw.density, "err": err})
+
+    # Sparse.A: runtime compaction of the A-block iteration space against
+    # dense weights (concrete activations -> the grid physically shrinks).
+    for sparsity in (0.5, 0.8):
+        bm = 8                      # fine M tiles: per-tile ragged counts
+        a_mask = mm.act_mask(m // bm, k // bk, 1 - sparsity, rng)
+        av = np.asarray(a).copy()
+        ab = av.reshape(m // bm, bm, k // bk, bk)
+        ab *= a_mask[:, None, :, None]
+        av = ab.reshape(m, k)
+        aj = jnp.asarray(av)
+        meta = compact_activations(aj, block_m=bm, block_k=bk)
+        out = sparse_a_matmul(aj, w_dense, meta=meta, block_n=bn,
+                              interpret=True)
+        out.block_until_ready()
+        with Timer() as t:
+            sparse_a_matmul(aj, w_dense, meta=meta, block_n=bn,
+                            interpret=True).block_until_ready()
+        err = float(jnp.max(jnp.abs(out - av @ np.asarray(w_dense))))
+        name = f"kernels/sparse_a/s{int(sparsity*100)}"
+        emit(name, t.us, f"compaction={meta.compaction:.2f};"
+             f"density={meta.density:.2f};max_err={err:.1e}")
+        rows.append({"kernel": name, "us": t.us,
+                     "compaction": meta.compaction,
+                     "density": meta.density, "err": err})
     print(f"# bench_kernels -> {write_csv('bench_kernels', rows)}")
 
 

@@ -17,11 +17,11 @@ def main() -> None:
                     help="full DSE enumerations (slow)")
     ap.add_argument("--only", default="",
                     help="comma list: fig5,fig6,fig7,fig8,table4,table7,"
-                         "archs,kernels,batched")
+                         "archs,kernels,batched,e2e")
     args = ap.parse_args()
 
-    from . import (bench_archs, bench_batched, bench_kernels, fig5_sparse_b,
-                   fig6_sparse_a, fig7_sparse_ab, fig8_overall,
+    from . import (bench_archs, bench_batched, bench_e2e, bench_kernels,
+                   fig5_sparse_b, fig6_sparse_a, fig7_sparse_ab, fig8_overall,
                    table4_networks, table7_breakdown)
     suites = {
         "table4": table4_networks.run,
@@ -33,6 +33,7 @@ def main() -> None:
         "archs": bench_archs.run,
         "kernels": bench_kernels.run,
         "batched": bench_batched.run,
+        "e2e": bench_e2e.run,
     }
     only = [s for s in args.only.split(",") if s]
     unknown = [s for s in only if s not in suites]

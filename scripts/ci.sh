@@ -1,5 +1,5 @@
 #!/usr/bin/env bash
-# CI entry point: install, tier-1 tests, fig5 fast-mode smoke check.
+# CI entry point: install, tier-1 tests, benchmark + substrate smoke checks.
 #
 #   scripts/ci.sh            # full flow (editable install if pip works)
 #   SKIP_INSTALL=1 scripts/ci.sh   # offline: fall back to PYTHONPATH=src
@@ -14,11 +14,26 @@ else
     PYPATH="src"
 fi
 
-echo "== tier-1 tests"
-PYTHONPATH="${PYPATH}${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q
+KERNEL_TESTS="tests/test_kernels.py tests/test_sparse_a.py \
+tests/test_griffin_linear.py"
+
+echo "== tier-1 tests (kernel parity split into its own stage below)"
+PYTHONPATH="${PYPATH}${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q \
+    $(for t in $KERNEL_TESTS; do printf -- "--ignore=%s " "$t"; done)
+
+echo "== kernel parity (interpret mode, CPU): dense / Sparse.B / Sparse.A"
+PYTHONPATH="${PYPATH}${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m pytest -x -q $KERNEL_TESTS
 
 echo "== benchmark smoke: fig5 (fast mode, batched sweep + results cache)"
 PYTHONPATH="${PYPATH}${PYTHONPATH:+:$PYTHONPATH}" \
     python -m benchmarks.run --only fig5
+
+echo "== e2e smoke: registry models through the mode-dispatched substrate"
+PYTHONPATH="${PYPATH}${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m benchmarks.bench_e2e --smoke
+
+echo "== docs: every DESIGN.md section cited from a docstring exists"
+python scripts/check_design_refs.py
 
 echo "== CI OK"

@@ -6,9 +6,12 @@ adder tree and MUX network bought for dual sparsity are re-purposed as a
 deeper single-sided window when only one tensor is sparse.  A plain dual
 design instead *downgrades* (ignores the idle resources).
 
-``select_mode`` is the runtime policy: it measures tensor sparsity and picks
-the execution mode — this is also what the framework layer uses per GEMM
-(see repro.sparsity / kernels.griffin ops).
+``select_mode`` is the runtime policy: given declared/measured tensor
+sparsity it picks the execution mode.  The same policy drives both layers
+of the reproduction: the cycle model (this module's ``design_speedup``)
+and the TPU execution substrate — ``kernels.griffin_spmm.auto_matmul``
+calls it per op, and the framework layer calls it per GEMM through
+``models.common.griffin_linear`` (DESIGN.md Section 4).
 """
 from __future__ import annotations
 

@@ -5,17 +5,25 @@
   block-compaction of weights with scalar-prefetch metadata (Sparse.B),
   optional on-the-fly A-block skipping (dual), and column balancing
   (shuffle).  See DESIGN.md Section 3 for the granularity adaptation.
+- sparse_a:     the Sparse.A analogue — runtime compaction of the A-block
+  iteration space with scalar-prefetch metadata against dense weights
+  (DESIGN.md Section 3; jit static-shape fallback in Section 5).
 - batch_eval:   jax.vmap twin of the batched cycle-model scheduler, the
   accelerator path behind ``schedule_batched(..., backend="jax")``.
 
+``auto_matmul`` dispatches every ``core.spec.Mode`` to one of these kernels;
+the framework layer reaches it per GEMM via ``models.common.griffin_linear``.
 Kernels are validated against their ref.py oracles in interpret mode on CPU
 and target TPU v5e block shapes (128-aligned) for real runs.
 """
 from .batch_eval.ops import schedule_cycles
 from .dense_gemm.ops import dense_matmul
 from .griffin_spmm.ops import (GriffinWeights, auto_matmul, balance_columns,
-                               griffin_matmul, preprocess_weights)
+                               griffin_matmul, preprocess_weights,
+                               stack_weights)
+from .sparse_a.ops import ActivationMeta, compact_activations, sparse_a_matmul
 
 __all__ = ["dense_matmul", "GriffinWeights", "auto_matmul",
            "balance_columns", "griffin_matmul", "preprocess_weights",
-           "schedule_cycles"]
+           "stack_weights", "ActivationMeta", "compact_activations",
+           "sparse_a_matmul", "schedule_cycles"]

@@ -3,13 +3,21 @@
 ``preprocess_weights`` is the paper's offline B preprocessing (Fig. 2/3
 step 1) at TPU block granularity; ``balance_columns`` is the load-balancing
 shuffle; ``griffin_matmul`` executes; ``auto_matmul`` is the hybrid-morphing
-entry point that picks dense / B-sparse / dual per call (core.hybrid).
+entry point that picks dense / Sparse.A / Sparse.B / dual per call
+(core.hybrid.select_mode — the same policy the framework layer applies per
+GEMM through models.common.griffin_linear).
+
+``GriffinWeights`` is a registered pytree: compacted weights flow through
+jit, ``lax.scan`` over stacked layers, and the sharding rules in
+runtime.sharding (DESIGN.md Section 4).  ``stack_weights`` builds the
+stacked (leading layer/expert axis) form the model stacks consume;
+indexing a stacked instance (``gw[i]``) slices every array leaf.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Optional, Tuple
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -18,6 +26,7 @@ import numpy as np
 from ...core.hybrid import select_mode
 from ...core.spec import Mode
 from ..dense_gemm.ops import dense_matmul
+from ..sparse_a.ops import sparse_a_matmul
 from .kernel import griffin_spmm_kernel
 
 DEFAULT_BLOCK_M = 128
@@ -27,12 +36,18 @@ DEFAULT_BLOCK_N = 128
 
 @dataclasses.dataclass
 class GriffinWeights:
-    """Block-compacted weight representation + metadata (device arrays)."""
+    """Block-compacted weight representation + metadata (device arrays).
 
-    b_comp: jax.Array        # (max_cnt*block_k, N_padded)
-    kidx: jax.Array          # (n_tiles, max_cnt) int32
-    cnt: jax.Array           # (n_tiles,) int32
-    col_perm: Optional[np.ndarray]   # applied to columns (None = identity)
+    Array fields may carry extra leading axes (stacked layers / experts);
+    the trailing axes are always the single-matrix layout documented here.
+    """
+
+    b_comp: jax.Array        # (..., max_cnt*block_k, N_padded)
+    kidx: jax.Array          # (..., n_tiles, max_cnt) int32
+    cnt: jax.Array           # (..., n_tiles) int32
+    inv_perm: Optional[jax.Array]    # (..., N_padded) undo of the balance
+    #                                  shuffle's column permutation (None =
+    #                                  identity / balancing disabled)
     k: int                   # original K (padded)
     n: int                   # original N (unpadded)
     block_k: int
@@ -40,14 +55,24 @@ class GriffinWeights:
 
     @property
     def density(self) -> float:
-        n_tiles, max_cnt = self.kidx.shape
-        total_blocks = (self.k // self.block_k) * n_tiles
+        total_blocks = (self.k // self.block_k) * \
+            int(np.prod(self.cnt.shape))
         return float(np.asarray(self.cnt).sum()) / max(total_blocks, 1)
 
     @property
     def compaction(self) -> float:
         """Grid-depth compaction vs dense: max_cnt / nb_k (lower is better)."""
-        return self.kidx.shape[1] / (self.k // self.block_k)
+        return self.kidx.shape[-1] / (self.k // self.block_k)
+
+    def __getitem__(self, i) -> "GriffinWeights":
+        """Slice a stacked instance along its leading axis."""
+        return jax.tree.map(lambda a: a[i], self)
+
+
+jax.tree_util.register_dataclass(
+    GriffinWeights,
+    data_fields=["b_comp", "kidx", "cnt", "inv_perm"],
+    meta_fields=["k", "n", "block_k", "block_n"])
 
 
 def balance_columns(w_padded: np.ndarray, block_k: int, block_n: int,
@@ -91,11 +116,11 @@ def preprocess_weights(w: np.ndarray, *, block_k: int = DEFAULT_BLOCK_K,
     nb_k, nb_n = pk // block_k, pn // block_n
     unit = unit or max(8, block_n // 4)
 
-    col_perm = None
+    inv_perm = None
     if balance and pn > block_n and pn % unit == 0:
         full_perm = balance_columns(wp, block_k, block_n, unit)
         wp = wp[:, full_perm]
-        col_perm = full_perm
+        inv_perm = jnp.asarray(np.argsort(full_perm).astype(np.int32))
 
     blk_nz = (wp.reshape(nb_k, block_k, nb_n, block_n) != 0).any(axis=(1, 3))
     cnt = blk_nz.sum(axis=0).astype(np.int32)                 # (nb_n,)
@@ -114,8 +139,44 @@ def preprocess_weights(w: np.ndarray, *, block_k: int = DEFAULT_BLOCK_K,
                    j * block_n:(j + 1) * block_n]
     return GriffinWeights(
         b_comp=jnp.asarray(b_comp), kidx=jnp.asarray(kidx),
-        cnt=jnp.asarray(cnt), col_perm=col_perm, k=pk, n=n,
+        cnt=jnp.asarray(cnt), inv_perm=inv_perm, k=pk, n=n,
         block_k=block_k, block_n=block_n)
+
+
+def stack_weights(gws: Sequence[GriffinWeights]) -> GriffinWeights:
+    """Stack per-layer/per-expert compacted weights along a new leading
+    axis, padding every member to the common (max over members) grid depth
+    so the stacked leaves are rectangular — the layout ``lax.scan`` and the
+    unrolled layer loop both consume."""
+    assert gws, "empty stack"
+    g0 = gws[0]
+    for g in gws[1:]:
+        assert (g.k, g.n, g.block_k, g.block_n) == \
+            (g0.k, g0.n, g0.block_k, g0.block_n), "heterogeneous stack"
+        assert (g.inv_perm is None) == (g0.inv_perm is None), \
+            "mixed balanced/unbalanced stack"
+    max_cnt = max(g.kidx.shape[-1] for g in gws)
+    bk = g0.block_k
+
+    def padded(g: GriffinWeights):
+        pad_c = max_cnt - g.kidx.shape[-1]
+        kidx, b_comp = g.kidx, g.b_comp
+        if pad_c:
+            # dead entries (kc >= cnt) — clamp-repeat the last id, zero data
+            kidx = jnp.concatenate(
+                [kidx, jnp.repeat(kidx[:, -1:], pad_c, axis=1)], axis=1)
+            b_comp = jnp.concatenate(
+                [b_comp, jnp.zeros((pad_c * bk, b_comp.shape[1]),
+                                   b_comp.dtype)], axis=0)
+        return kidx, b_comp
+
+    ks, bs = zip(*[padded(g) for g in gws])
+    return GriffinWeights(
+        b_comp=jnp.stack(bs), kidx=jnp.stack(ks),
+        cnt=jnp.stack([g.cnt for g in gws]),
+        inv_perm=(None if g0.inv_perm is None
+                  else jnp.stack([g.inv_perm for g in gws])),
+        k=g0.k, n=g0.n, block_k=g0.block_k, block_n=g0.block_n)
 
 
 @functools.partial(jax.jit, static_argnames=("block_m", "dual", "interpret",
@@ -138,10 +199,7 @@ def griffin_matmul(a: jax.Array, gw: GriffinWeights, *,
     bm = min(block_m, max(8, -(-m // 8) * 8))
     pm = -(-m // bm) * bm
     ap = jnp.pad(a, ((0, pm - m), (0, gw.k - k)))
-    inv = None
-    if gw.col_perm is not None:
-        inv = jnp.asarray(np.argsort(gw.col_perm))
-    out = _run(ap, gw.b_comp, gw.kidx, gw.cnt, inv, block_m=bm,
+    out = _run(ap, gw.b_comp, gw.kidx, gw.cnt, gw.inv_perm, block_m=bm,
                block_k=gw.block_k, block_n=gw.block_n, n=gw.n, dual=dual,
                interpret=interpret)
     return out[:m]
@@ -152,9 +210,18 @@ def auto_matmul(a: jax.Array, w, gw: Optional[GriffinWeights] = None, *,
                 interpret: bool = False) -> jax.Array:
     """Hybrid-morphing entry point (paper Section IV-B at the op level):
     measure/declare tensor sparsity, pick the execution mode, run the same
-    core in dense / Sparse.B / dual configuration."""
+    core in dense / Sparse.A / Sparse.B / dual configuration.
+
+    Dispatch (every ``core.spec.Mode`` reaches a real kernel):
+      DENSE -> dense_gemm;  A -> sparse_a (runtime-compacted A, dense B);
+      B -> griffin_spmm;    AB -> griffin_spmm dual (compacted B + on-the-fly
+      A-block predication).  Declared-sparse B without preprocessed weights
+      falls back dense/Sparse.A — there is nothing compacted to walk.
+    """
     mode = select_mode(a_sparsity, b_sparsity)
     if mode in (Mode.B, Mode.AB) and gw is not None:
         return griffin_matmul(a, gw, dual=(mode == Mode.AB),
                               interpret=interpret)
+    if mode in (Mode.A, Mode.AB):
+        return sparse_a_matmul(a, w, interpret=interpret)
     return dense_matmul(a, w, interpret=interpret)

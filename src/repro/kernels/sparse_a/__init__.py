@@ -1,0 +1,2 @@
+from .ops import (ActivationMeta, compact_activations,  # noqa: F401
+                  sparse_a_matmul)

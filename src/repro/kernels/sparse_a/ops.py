@@ -1,0 +1,131 @@
+"""Public ops for Sparse.A (activation-sparse) execution on TPU.
+
+``compact_activations`` builds the runtime metadata — the A-side analogue of
+griffin_spmm's offline ``preprocess_weights``, except nothing is known until
+the activations exist, so compaction happens per call:
+
+  - on **concrete** arrays (op level, serving with host-visible tensors) the
+    metadata is built in numpy and ``max_cnt`` is the true maximum live
+    count, so the kernel grid physically shrinks (real compaction);
+  - on **traced** arrays (inside jit) grid shapes must be static before the
+    values exist, so the metadata is built with jnp at the full K depth and
+    skipping degrades to trailing predicated no-ops — MXU work is still
+    saved, grid depth is not (DESIGN.md Section 5).
+
+``sparse_a_matmul`` pads, compacts, and runs the kernel.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernel import sparse_a_gemm_kernel
+
+DEFAULT_BLOCK_M = 128
+DEFAULT_BLOCK_K = 128
+DEFAULT_BLOCK_N = 128
+
+
+@dataclasses.dataclass
+class ActivationMeta:
+    """Per-M-tile live-K-block metadata for one activation matrix."""
+
+    kidx: jax.Array          # (m_tiles, max_cnt) int32
+    cnt: jax.Array           # (m_tiles,) int32
+    m: int                   # padded M
+    k: int                   # padded K
+    block_m: int
+    block_k: int
+
+    @property
+    def density(self) -> float:
+        """Fraction of live (block_m x block_k) A blocks (concrete only)."""
+        mt, kt = self.m // self.block_m, self.k // self.block_k
+        return float(np.asarray(self.cnt).sum()) / max(mt * kt, 1)
+
+    @property
+    def compaction(self) -> float:
+        """Grid-depth compaction vs dense: max_cnt / k_tiles (lower is
+        better; 1.0 when built under jit — static-shape fallback)."""
+        return self.kidx.shape[1] / (self.k // self.block_k)
+
+
+def _rup(x: int, base: int = 8) -> int:
+    return max(base, -(-x // base) * base)
+
+
+def _pad2(x: jax.Array, p0: int, p1: int) -> jax.Array:
+    if p0 > x.shape[0] or p1 > x.shape[1]:
+        x = jnp.pad(x, ((0, p0 - x.shape[0]), (0, p1 - x.shape[1])))
+    return x
+
+
+def compact_activations(a: jax.Array, *, block_m: int = DEFAULT_BLOCK_M,
+                        block_k: int = DEFAULT_BLOCK_K) -> ActivationMeta:
+    """Runtime compaction: list the K blocks each M tile must visit.
+
+    Concrete ``a`` -> numpy metadata with the true (minimal) ``max_cnt``;
+    traced ``a`` -> jnp metadata at full K depth (static shapes under jit).
+    """
+    m, k = a.shape
+    bm = min(block_m, _rup(m))
+    bk = min(block_k, _rup(k))
+    pm, pk = -(-m // bm) * bm, -(-k // bk) * bk
+    mt, kt = pm // bm, pk // bk
+    if isinstance(a, jax.core.Tracer):
+        ap = _pad2(a, pm, pk)
+        nz = (ap.reshape(mt, bm, kt, bk) != 0).any(axis=(1, 3))   # (mt, kt)
+        cnt = nz.sum(axis=1).astype(jnp.int32)
+        # stable sort: live blocks first, original k order preserved; dead
+        # trailing entries hold valid ids (DMA'd but predicated off).
+        kidx = jnp.argsort(~nz, axis=1, stable=True).astype(jnp.int32)
+        return ActivationMeta(kidx=kidx, cnt=cnt, m=pm, k=pk,
+                              block_m=bm, block_k=bk)
+    a_np = np.zeros((pm, pk), dtype=np.asarray(a).dtype)
+    a_np[:m, :k] = np.asarray(a)
+    nz = (a_np.reshape(mt, bm, kt, bk) != 0).any(axis=(1, 3))
+    cnt = nz.sum(axis=1).astype(np.int32)
+    max_cnt = max(int(cnt.max()), 1)
+    kidx = np.zeros((mt, max_cnt), dtype=np.int32)
+    for i in range(mt):
+        ks = np.flatnonzero(nz[i])
+        kidx[i, :len(ks)] = ks
+        if len(ks) < max_cnt:                                     # clamp pad
+            kidx[i, len(ks):] = ks[-1] if len(ks) else 0
+    return ActivationMeta(kidx=jnp.asarray(kidx), cnt=jnp.asarray(cnt),
+                          m=pm, k=pk, block_m=bm, block_k=bk)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_k", "block_n",
+                                             "interpret"))
+def _run(a, b, kidx, cnt, *, block_m, block_k, block_n, interpret):
+    return sparse_a_gemm_kernel(a, b, kidx, cnt, block_m=block_m,
+                                block_k=block_k, block_n=block_n,
+                                interpret=interpret)
+
+
+def sparse_a_matmul(a: jax.Array, w: jax.Array, *,
+                    block_m: int = DEFAULT_BLOCK_M,
+                    block_k: int = DEFAULT_BLOCK_K,
+                    block_n: int = DEFAULT_BLOCK_N,
+                    meta: Optional[ActivationMeta] = None,
+                    interpret: bool = False) -> jax.Array:
+    """C = A @ W visiting only the live A blocks (Sparse.A execution)."""
+    m, k = a.shape
+    kw, n = w.shape
+    assert k == kw, (k, kw)
+    if meta is None:
+        meta = compact_activations(a, block_m=block_m, block_k=block_k)
+    bm, bk = meta.block_m, meta.block_k
+    bn = min(block_n, _rup(n))
+    pn = -(-n // bn) * bn
+    ap = _pad2(a, meta.m, meta.k)
+    wp = _pad2(w, meta.k, pn)
+    out = _run(ap, wp, meta.kidx, meta.cnt, block_m=bm, block_k=bk,
+               block_n=bn, interpret=interpret)
+    return out[:m, :n]

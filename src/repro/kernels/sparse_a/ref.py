@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the Sparse.A compacted GEMM."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def sparse_a_ref(a, b, out_dtype=None):
+    """Oracle: skipped A blocks are exactly zero, so the compacted product
+    must equal the plain dense product (bit-matching in f32, tolerance in
+    low precision)."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(
+        out_dtype or a.dtype)

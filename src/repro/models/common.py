@@ -1,6 +1,10 @@
-"""Shared model components: norms, rope, initializers, tree utilities."""
+"""Shared model components: norms, rope, initializers, tree utilities, and
+``griffin_linear`` — the per-GEMM entry point of the sparse execution
+substrate (DESIGN.md Section 4)."""
 from __future__ import annotations
 
+import contextlib
+import dataclasses
 import functools
 from typing import Any, Callable, Dict, Optional, Sequence, Tuple
 
@@ -8,7 +12,101 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.hybrid import select_mode
+from ..core.spec import Mode
+from ..kernels.dense_gemm.ops import dense_matmul
+from ..kernels.griffin_spmm.ops import GriffinWeights, griffin_matmul
+from ..kernels.sparse_a.ops import sparse_a_matmul
+
 Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# sparse execution substrate
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SparseExecution:
+    """Static (trace-time) knobs for ``griffin_linear``.
+
+    ``use_kernels`` routes even dense GEMMs through the Pallas substrate
+    (off by default: plain ``x @ w`` keeps training/serving behaviour
+    byte-identical until a caller opts in).  ``a_sparsity`` is the
+    *declared* activation sparsity of the workload category (paper
+    Table I) — it must be a concrete float because the mode decision picks
+    between kernels at trace time (DESIGN.md Section 5).
+    """
+
+    use_kernels: bool = False
+    interpret: bool = False
+    a_sparsity: float = 0.0
+    block_m: int = 128
+
+
+_EXEC_STACK = [SparseExecution()]
+
+
+@contextlib.contextmanager
+def sparse_execution(use_kernels: bool = True, interpret: bool = False,
+                     a_sparsity: float = 0.0, block_m: int = 128):
+    """Scope under which ``griffin_linear`` dispatches to the Pallas
+    kernels (mode per GEMM via ``core.hybrid.select_mode``).
+
+    The scope is consulted at **trace time** and is not part of any jit
+    cache key: a function jitted (traced) outside the scope keeps its
+    dense trace when later called inside one, and vice versa.  Enter the
+    scope before the first call of a jitted function — or jit inside the
+    scope — exactly as with any trace-time constant (DESIGN.md Section 5).
+    """
+    _EXEC_STACK.append(SparseExecution(use_kernels=use_kernels,
+                                       interpret=interpret,
+                                       a_sparsity=a_sparsity,
+                                       block_m=block_m))
+    try:
+        yield _EXEC_STACK[-1]
+    finally:
+        _EXEC_STACK.pop()
+
+
+def execution_context() -> SparseExecution:
+    return _EXEC_STACK[-1]
+
+
+def griffin_linear(x: jax.Array, w) -> jax.Array:
+    """The weight GEMM of the model stack: ``x @ w`` morphed per call.
+
+    ``w`` is either a plain array (dense weights) or a ``GriffinWeights``
+    (block-compacted, produced by ``repro.sparsity.sparsify_params``).  The
+    execution mode follows ``core.hybrid.select_mode`` over the declared
+    activation sparsity and the weight representation:
+
+      dense w, dense a  -> plain ``x @ w`` (or the dense Pallas kernel
+                           when the ``sparse_execution`` scope is active)
+      dense w, sparse a -> Sparse.A kernel (runtime-compacted A)
+      GriffinWeights    -> Sparse.B kernel; dual when a is also declared
+                           sparse (on-the-fly A-block predication)
+
+    Leading batch/sequence axes are flattened into the GEMM M axis.
+    """
+    ctx = _EXEC_STACK[-1]
+    if isinstance(w, GriffinWeights):
+        lead = x.shape[:-1]
+        mode = select_mode(ctx.a_sparsity, 1.0)
+        out = griffin_matmul(x.reshape(-1, x.shape[-1]), w,
+                             block_m=ctx.block_m, dual=(mode == Mode.AB),
+                             interpret=ctx.interpret)
+        return out.reshape(*lead, w.n).astype(x.dtype)
+    if not ctx.use_kernels:
+        return x @ w
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    if select_mode(ctx.a_sparsity, 0.0) == Mode.A:
+        out = sparse_a_matmul(x2, w, block_m=ctx.block_m,
+                              interpret=ctx.interpret)
+    else:
+        out = dense_matmul(x2, w, block_m=ctx.block_m,
+                           interpret=ctx.interpret)
+    return out.reshape(*lead, w.shape[-1]).astype(x.dtype)
 
 
 def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:

@@ -6,10 +6,13 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from .common import griffin_linear
+
 
 def chunked_cross_entropy(hidden: jax.Array, unembed: jax.Array,
                           labels: jax.Array, chunk: int = 512) -> jax.Array:
-    """hidden: (B, S, D); unembed: (D, V); labels: (B, S) with -1 = masked."""
+    """hidden: (B, S, D); unembed: (D, V) array or GriffinWeights;
+    labels: (B, S) with -1 = masked."""
     B, S, D = hidden.shape
     c = min(chunk, S)
     nc = -(-S // c)
@@ -22,7 +25,7 @@ def chunked_cross_entropy(hidden: jax.Array, unembed: jax.Array,
 
     def body(acc, xs):
         h, lab = xs
-        logits = (h @ unembed).astype(jnp.float32)
+        logits = griffin_linear(h, unembed).astype(jnp.float32)
         lse = jax.nn.logsumexp(logits, axis=-1)
         gold = jnp.take_along_axis(
             logits, jnp.maximum(lab, 0)[..., None], axis=-1)[..., 0]

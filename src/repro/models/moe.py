@@ -5,6 +5,11 @@ shard the expert axis (expert parallelism) or the FFN axis (tensor
 parallelism) and derive the all-to-all / all-gather pattern itself.  FLOPs
 are proportional to E * C ~= tokens * capacity_factor * top_k, i.e. the
 *active* expert compute, not the full E * tokens product.
+
+The router and per-expert FFN GEMMs route through ``expert_linear`` /
+``models.common.griffin_linear``: pruned experts arrive as a stacked
+``GriffinWeights`` (leading expert axis) and run the Sparse.B kernel per
+expert (DESIGN.md Section 4).
 """
 from __future__ import annotations
 
@@ -14,7 +19,25 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import MoEConfig
-from .common import act_fn, dense_init
+from ..kernels.griffin_spmm.ops import GriffinWeights
+from .common import act_fn, dense_init, execution_context, griffin_linear
+
+
+def expert_linear(xe: jax.Array, w) -> jax.Array:
+    """Per-expert weight GEMM: xe (E, C, K) x w (E, K, N) -> (E, C, N).
+
+    ``w`` may be a stacked ``GriffinWeights`` (leading expert axis, built by
+    ``repro.sparsity.sparsify_params``) — each expert then runs the Sparse.B
+    kernel — or a plain stacked array (einsum batched GEMM; unrolled through
+    ``griffin_linear`` per expert when a ``sparse_execution`` scope is
+    active)."""
+    if isinstance(w, GriffinWeights):
+        E = w.b_comp.shape[0]
+        return jnp.stack([griffin_linear(xe[e], w[e]) for e in range(E)])
+    if execution_context().use_kernels:
+        return jnp.stack([griffin_linear(xe[e], w[e])
+                          for e in range(w.shape[0])])
+    return jnp.einsum("eck,ekn->ecn", xe, w)
 
 
 def init_moe(key, d_model: int, d_ff: int, moe: MoEConfig, dtype) -> Dict:
@@ -49,8 +72,18 @@ def moe_ffn(p: Dict, x: jax.Array, moe: MoEConfig, act: str = "silu"
     N, D = x.shape
     E, K = moe.num_experts, moe.top_k
     C = max(1, int(N * moe.capacity_factor * K / E))
-    gates = jnp.einsum("nd,de->ne", x, p["router"],
-                       preferred_element_type=jnp.float32)
+    if isinstance(p["router"], GriffinWeights):
+        gates = griffin_linear(x.astype(jnp.float32), p["router"])
+    elif execution_context().use_kernels:
+        # upcast the (tiny) router GEMM so gate logits keep full f32
+        # precision end-to-end — griffin_linear returns x.dtype, and a bf16
+        # round-trip could flip near-tied top_k routing decisions vs the
+        # einsum below, which accumulates straight to f32
+        gates = griffin_linear(x.astype(jnp.float32),
+                               p["router"].astype(jnp.float32))
+    else:
+        gates = jnp.einsum("nd,de->ne", x, p["router"],
+                           preferred_element_type=jnp.float32)
     probs_full = jax.nn.softmax(gates, axis=-1)
     top_p, top_e = jax.lax.top_k(probs_full, K)           # (N, K)
     top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
@@ -71,9 +104,9 @@ def moe_ffn(p: Dict, x: jax.Array, moe: MoEConfig, act: str = "silu"
     # never read (so their gradient is exactly zero, as it must be)
     buf = buf.at[slot].add(xk, mode="drop")
     xe = buf[:E * C].reshape(E, C, D)
-    h = act_fn(act)(jnp.einsum("ecd,edf->ecf", xe, p["w_gate"])) * \
-        jnp.einsum("ecd,edf->ecf", xe, p["w_up"])
-    ye = jnp.einsum("ecf,efd->ecd", h.astype(x.dtype), p["w_down"])
+    h = act_fn(act)(expert_linear(xe, p["w_gate"])) * \
+        expert_linear(xe, p["w_up"])
+    ye = expert_linear(h.astype(x.dtype), p["w_down"])
     # gather back and combine with routing weights
     y_buf = jnp.concatenate([ye.reshape(E * C, D),
                              jnp.zeros((1, D), ye.dtype)], axis=0)

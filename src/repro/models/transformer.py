@@ -5,7 +5,14 @@ MoE (mixtral with SWA, llama4-scout top-1).
 All layer stacks are ``lax.scan`` over stacked parameters so HLO size and
 compile time are depth-independent at 100B scale; rematerialization is a
 config knob.  Cross entropy is computed in sequence chunks so the
-(B, S, vocab) logits tensor is never materialized (see runtime.losses).
+(B, S, vocab) logits tensor is never materialized (see models.losses).
+
+Every weight GEMM goes through ``models.common.griffin_linear``: plain
+arrays execute as ``x @ w`` (or the dense Pallas kernel under a
+``sparse_execution`` scope), block-compacted ``GriffinWeights`` leaves
+(from ``repro.sparsity.sparsify_params``) execute through the Sparse.B /
+dual kernels — stacked per-layer compacted weights ride the same
+``lax.scan`` (DESIGN.md Section 4).
 """
 from __future__ import annotations
 
@@ -17,8 +24,8 @@ import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
 from .attention import attention, decode_attention
-from .common import (act_fn, dense_init, layer_scan, remat_fn, rms_norm,
-                     rope, stack_layers)
+from .common import (act_fn, dense_init, griffin_linear, layer_scan,
+                     remat_fn, rms_norm, rope, stack_layers)
 from .moe import init_moe, moe_ffn
 
 Params = Dict[str, Any]
@@ -78,16 +85,18 @@ def _ffn(cfg: ModelConfig, p: Params, x: jax.Array) -> Tuple[jax.Array, jax.Arra
         B, S, D = x.shape
         out, aux = moe_ffn(p["moe"], x.reshape(B * S, D), cfg.moe, cfg.act)
         return out.reshape(B, S, D), aux
-    h = act_fn(cfg.act)(x @ p["w_gate"]) * (x @ p["w_up"])
-    return (h @ p["w_down"]).astype(x.dtype), jnp.zeros((), jnp.float32)
+    h = act_fn(cfg.act)(griffin_linear(x, p["w_gate"])) * \
+        griffin_linear(x, p["w_up"])
+    return griffin_linear(h, p["w_down"]).astype(x.dtype), \
+        jnp.zeros((), jnp.float32)
 
 
 def _qkv(cfg: ModelConfig, p: Params, x: jax.Array, positions: jax.Array):
     B, S, D = x.shape
     H, KVH, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
-    q = (x @ p["wq"]).reshape(B, S, H, hd)
-    k = (x @ p["wk"]).reshape(B, S, KVH, hd)
-    v = (x @ p["wv"]).reshape(B, S, KVH, hd)
+    q = griffin_linear(x, p["wq"]).reshape(B, S, H, hd)
+    k = griffin_linear(x, p["wk"]).reshape(B, S, KVH, hd)
+    v = griffin_linear(x, p["wv"]).reshape(B, S, KVH, hd)
     if cfg.qk_norm:
         q = rms_norm(q, p["qn"], cfg.norm_eps)
         k = rms_norm(k, p["kn"], cfg.norm_eps)
@@ -104,7 +113,7 @@ def block_train(cfg: ModelConfig, p: Params, x: jax.Array,
     o = attention(q, k, v, causal=True, window=cfg.window,
                   kv_chunk=cfg.kv_chunk)
     B, S, _, _ = q.shape
-    x = x + (o.reshape(B, S, -1) @ p["wo"]).astype(x.dtype)
+    x = x + griffin_linear(o.reshape(B, S, -1), p["wo"]).astype(x.dtype)
     h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
     f, aux = _ffn(cfg, p, h2)
     x = (x + f).astype(x.dtype)
@@ -126,7 +135,7 @@ def block_decode(cfg: ModelConfig, p: Params, x: jax.Array, k_cache, v_cache,
     win = None if rolling else cfg.window
     o = decode_attention(q, k_cache, v_cache, eff_pos, window=win)
     B = x.shape[0]
-    x = x + (o.reshape(B, 1, -1) @ p["wo"]).astype(x.dtype)
+    x = x + griffin_linear(o.reshape(B, 1, -1), p["wo"]).astype(x.dtype)
     h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
     f, _ = _ffn(cfg, p, h2)
     return (x + f).astype(x.dtype), k_cache, v_cache
@@ -182,7 +191,7 @@ def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array,
         vs = jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
     else:  # keep the last window
         ks, vs = ks[:, :, S - clen:], vs[:, :, S - clen:]
-    logits = x[:, -1] @ unembed(cfg, params)
+    logits = griffin_linear(x[:, -1], unembed(cfg, params))
     cache = {"k": ks, "v": vs, "pos": jnp.asarray(S - 1, jnp.int32)}
     return cache, logits
 
@@ -202,5 +211,5 @@ def decode_step(cfg: ModelConfig, params: Params, cache: Params,
     x, (ks, vs) = layer_scan(cfg.scan_layers, body, x,
                              (params["layers"], cache["k"], cache["v"]))
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
-    logits = x[:, 0] @ unembed(cfg, params)
+    logits = griffin_linear(x[:, 0], unembed(cfg, params))
     return logits, {"k": ks, "v": vs, "pos": pos}

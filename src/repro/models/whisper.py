@@ -6,7 +6,10 @@ supplies precomputed frame embeddings (B, 1500, d) — the post-conv mel
 representation.  The encoder adds sinusoidal positions and runs
 bidirectional attention; the decoder is causal with cross-attention (we use
 rope for decoder self-attention since the assigned shapes exceed Whisper's
-learned 448-position table — recorded as a deviation in DESIGN.md).
+learned 448-position table — recorded as a deviation in DESIGN.md
+Section 7).  Weight GEMMs route through ``models.common.griffin_linear``
+(the conv frontend stub and attention score/context products do not — they
+are not weight GEMMs, DESIGN.md Section 5).
 """
 from __future__ import annotations
 
@@ -19,7 +22,8 @@ import numpy as np
 
 from ..configs.base import ModelConfig
 from .attention import attention, decode_attention
-from .common import act_fn, dense_init, layer_scan, rms_norm, rope, stack_layers
+from .common import (act_fn, dense_init, griffin_linear, layer_scan,
+                     rms_norm, rope, stack_layers)
 
 Params = Dict[str, Any]
 
@@ -87,14 +91,15 @@ def init_params(cfg: ModelConfig, key) -> Params:
 def _mha(cfg, p, xq, xkv, *, causal, positions=None, kv_chunk):
     B, Sq, D = xq.shape
     H, hd = cfg.num_heads, cfg.hd
-    q = (xq @ p["wq"]).reshape(B, Sq, H, hd)
-    k = (xkv @ p["wk"]).reshape(B, xkv.shape[1], H, hd)
-    v = (xkv @ p["wv"]).reshape(B, xkv.shape[1], H, hd)
+    q = griffin_linear(xq, p["wq"]).reshape(B, Sq, H, hd)
+    k = griffin_linear(xkv, p["wk"]).reshape(B, xkv.shape[1], H, hd)
+    v = griffin_linear(xkv, p["wv"]).reshape(B, xkv.shape[1], H, hd)
     if positions is not None:
         q = rope(q, positions, cfg.rope_theta)
         k = rope(k, positions, cfg.rope_theta)
     o = attention(q, k, v, causal=causal, kv_chunk=kv_chunk)
-    return (o.reshape(B, Sq, -1) @ p["wo"]).astype(xq.dtype), (k, v)
+    return griffin_linear(o.reshape(B, Sq, -1),
+                          p["wo"]).astype(xq.dtype), (k, v)
 
 
 def encode(cfg: ModelConfig, params: Params, frames: jax.Array) -> jax.Array:
@@ -107,7 +112,8 @@ def encode(cfg: ModelConfig, params: Params, frames: jax.Array) -> jax.Array:
                     kv_chunk=cfg.kv_chunk)
         x = (x + h).astype(x.dtype)
         h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
-        f = act_fn(cfg.act)(h2 @ lp["mlp"]["w_up"]) @ lp["mlp"]["w_down"]
+        f = griffin_linear(act_fn(cfg.act)(
+            griffin_linear(h2, lp["mlp"]["w_up"])), lp["mlp"]["w_down"])
         return (x + f).astype(x.dtype), None
 
     fn = jax.checkpoint(body) if cfg.remat else body
@@ -131,7 +137,8 @@ def forward_hidden(cfg: ModelConfig, params: Params, tokens: jax.Array,
                        enc, causal=False, kv_chunk=cfg.kv_chunk)
         x = (x + hx).astype(x.dtype)
         h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
-        f = act_fn(cfg.act)(h2 @ lp["mlp"]["w_up"]) @ lp["mlp"]["w_down"]
+        f = griffin_linear(act_fn(cfg.act)(
+            griffin_linear(h2, lp["mlp"]["w_up"])), lp["mlp"]["w_down"])
         out = (x + f).astype(x.dtype)
         return out, (kv, xkv) if return_kv else None
 
@@ -164,7 +171,7 @@ def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array,
     if pad > 0:
         ks = jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
         vs = jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
-    logits = x[:, -1] @ params["head"]
+    logits = griffin_linear(x[:, -1], params["head"])
     return {"k": ks, "v": vs, "xk": xks, "xv": xvs,
             "pos": jnp.asarray(S - 1, jnp.int32)}, logits
 
@@ -180,22 +187,25 @@ def decode_step(cfg: ModelConfig, params: Params, cache: Params,
         lp, kc, vc, xk, xv = xs
         h = rms_norm(x, lp["ln1"], cfg.norm_eps)
         posv = pos[None]
-        q = rope((h @ lp["self"]["wq"]).reshape(B, 1, H, hd), posv,
-                 cfg.rope_theta)
-        k = rope((h @ lp["self"]["wk"]).reshape(B, 1, H, hd), posv,
-                 cfg.rope_theta)
-        v = (h @ lp["self"]["wv"]).reshape(B, 1, H, hd)
+        q = rope(griffin_linear(h, lp["self"]["wq"]).reshape(B, 1, H, hd),
+                 posv, cfg.rope_theta)
+        k = rope(griffin_linear(h, lp["self"]["wk"]).reshape(B, 1, H, hd),
+                 posv, cfg.rope_theta)
+        v = griffin_linear(h, lp["self"]["wv"]).reshape(B, 1, H, hd)
         kc = jax.lax.dynamic_update_slice(kc, k, (0, pos, 0, 0))
         vc = jax.lax.dynamic_update_slice(vc, v, (0, pos, 0, 0))
         o = decode_attention(q, kc, vc, pos)
-        x = (x + o.reshape(B, 1, -1) @ lp["self"]["wo"]).astype(x.dtype)
+        x = (x + griffin_linear(o.reshape(B, 1, -1),
+                                lp["self"]["wo"])).astype(x.dtype)
         # cross attention against the static encoder K/V
         hx = rms_norm(x, lp["ln_x"], cfg.norm_eps)
-        qx = (hx @ lp["cross"]["wq"]).reshape(B, 1, H, hd)
+        qx = griffin_linear(hx, lp["cross"]["wq"]).reshape(B, 1, H, hd)
         ox = decode_attention(qx, xk, xv, jnp.asarray(xk.shape[1] - 1))
-        x = (x + ox.reshape(B, 1, -1) @ lp["cross"]["wo"]).astype(x.dtype)
+        x = (x + griffin_linear(ox.reshape(B, 1, -1),
+                                lp["cross"]["wo"])).astype(x.dtype)
         h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
-        f = act_fn(cfg.act)(h2 @ lp["mlp"]["w_up"]) @ lp["mlp"]["w_down"]
+        f = griffin_linear(act_fn(cfg.act)(
+            griffin_linear(h2, lp["mlp"]["w_up"])), lp["mlp"]["w_down"])
         return (x + f).astype(x.dtype), (kc, vc)
 
     x, (ks, vs) = layer_scan(
@@ -203,6 +213,6 @@ def decode_step(cfg: ModelConfig, params: Params, cache: Params,
         x, (params["dec_layers"], cache["k"], cache["v"],
             cache["xk"], cache["xv"]))
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
-    logits = x[:, 0] @ params["head"]
+    logits = griffin_linear(x[:, 0], params["head"])
     return logits, {"k": ks, "v": vs, "xk": cache["xk"], "xv": cache["xv"],
                     "pos": pos}

@@ -18,7 +18,8 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
-from .common import dense_init, layer_scan, rms_norm, stack_layers
+from .common import (dense_init, griffin_linear, layer_scan, rms_norm,
+                     stack_layers)
 
 Params = Dict[str, Any]
 MIN_NORM = 1e-6
@@ -107,15 +108,15 @@ def mlstm_seq(cfg: ModelConfig, p: Params, x: jax.Array, state=None,
     din = int(cfg.proj_factor * D)
     hd = din // H
     h_in = rms_norm(x, p["ln"], cfg.norm_eps)
-    up = h_in @ p["w_up"]
+    up = griffin_linear(h_in, p["w_up"])
     xm, z = up[..., :din], up[..., din:]
     xh = xm.reshape(B, S, H, hd)
     q = jnp.einsum("bshd,hde->bshe", xh, p["wq"])
     k = jnp.einsum("bshd,hde->bshe", xh, p["wk"]) / \
         jnp.sqrt(hd).astype(x.dtype)
     v = jnp.einsum("bshd,hde->bshe", xh, p["wv"])
-    i_pre = xm @ p["wi"]
-    f_pre = xm @ p["wf"]
+    i_pre = griffin_linear(xm, p["wi"])
+    f_pre = griffin_linear(xm, p["wf"])
     if state is None:
         state = mlstm_zero_state(cfg, B)
     L = min(chunk, S)
@@ -132,7 +133,8 @@ def mlstm_seq(cfg: ModelConfig, p: Params, x: jax.Array, state=None,
     state, hs = jax.lax.scan(body, state, xs)
     h = hs.swapaxes(0, 1).reshape(B, S, H, hd).reshape(B, S, din)
     h = rms_norm(h, p["gn"], cfg.norm_eps)
-    out = (h * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)) @ p["w_down"]
+    out = griffin_linear(
+        h * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype), p["w_down"])
     return (x + out).astype(x.dtype), state
 
 
@@ -192,8 +194,8 @@ def slstm_seq(cfg: ModelConfig, p: Params, x: jax.Array, state=None):
     hd = D // H
     xin = rms_norm(x, p["ln"], cfg.norm_eps)
     # precompute input contributions for all gates: (B,S,H,hd)
-    pre = {g: (xin @ p["w" + g]).reshape(B, S, H, hd).astype(jnp.float32)
-           for g in ("z", "i", "f", "o")}
+    pre = {g: griffin_linear(xin, p["w" + g]).reshape(B, S, H, hd)
+           .astype(jnp.float32) for g in ("z", "i", "f", "o")}
     if state is None:
         state = slstm_zero_state(cfg, B)
     R = {g: p["r" + g].astype(jnp.float32) for g in ("z", "i", "f", "o")}
@@ -221,8 +223,9 @@ def slstm_seq(cfg: ModelConfig, p: Params, x: jax.Array, state=None):
     h = rms_norm(h.astype(x.dtype), p["gn"], cfg.norm_eps)
     x = x + h
     f = rms_norm(x, p["ln2"], cfg.norm_eps)
-    f = jax.nn.gelu((f @ p["w_ff1"]).astype(jnp.float32)).astype(x.dtype)
-    return (x + f @ p["w_ff2"]).astype(x.dtype), state
+    f = jax.nn.gelu(griffin_linear(f, p["w_ff1"]).astype(jnp.float32)
+                    ).astype(x.dtype)
+    return (x + griffin_linear(f, p["w_ff2"])).astype(x.dtype), state
 
 
 # ---------------------------------------------------------------------------
@@ -336,7 +339,7 @@ def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array,
     x = params["embed"][tokens]
     x, new_cache = _scan_groups_with_state(cfg, params, cache, x, chunk)
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
-    logits = x[:, -1] @ params["head"]
+    logits = griffin_linear(x[:, -1], params["head"])
     new_cache["pos"] = jnp.asarray(S - 1, jnp.int32)
     return new_cache, logits
 
@@ -346,6 +349,6 @@ def decode_step(cfg: ModelConfig, params: Params, cache: Params,
     x = params["embed"][token]
     x, new_cache = _scan_groups_with_state(cfg, params, cache, x, chunk=1)
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
-    logits = x[:, 0] @ params["head"]
+    logits = griffin_linear(x[:, 0], params["head"])
     new_cache["pos"] = cache["pos"] + 1
     return logits, new_cache

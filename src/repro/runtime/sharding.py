@@ -13,7 +13,11 @@ Strategy (MaxText-style 2D "FSDP + TP"):
     "model" (kv-heads can be < TP degree, head_dim always divides);
   - the "pod" axis only shards the batch: parameters are replicated across
     pods (FSDP within pod, DP across pods), so cross-pod traffic is gradient
-    reduction only.
+    reduction only;
+  - block-compacted weights (GriffinWeights pytrees from
+    repro.sparsity.sparsify_params): b_comp shards its output (N) axis by
+    the parent GEMM's rule, the compacted K rows stay whole (kidx ids are
+    global), scalar-prefetch metadata replicates (DESIGN.md Section 4).
 
 Divisibility is not required for correctness (GSPMD pads), but rules avoid
 padding where it matters; `_divides` guards the places XLA would waste.
@@ -33,6 +37,12 @@ _IN_OUT = ("wq", "wk", "wv", "w_gate", "w_up", "w_ff1", "w_x", "router",
 _OUT_IN = ("wo", "w_down", "w_ff2", "w_out")
 _REPLICATE = ("ln", "ln1", "ln2", "ln_x", "gn", "final_norm", "enc_norm",
               "lam", "qn", "kn")
+# GriffinWeights (block-compacted weights) pytree children.  The compacted
+# K axis (b_comp rows) is never sharded: kidx holds *global* K-block ids and
+# per-shard counts would diverge, so only the output (N) axis splits; the
+# scalar-prefetch metadata is tiny and rides along replicated
+# (DESIGN.md Section 4).
+_GRIFFIN_META = ("kidx", "cnt", "inv_perm")
 
 
 def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
@@ -60,6 +70,16 @@ def param_spec(path: str, leaf, mesh: Mesh, fsdp: bool = True,
     name = path.rstrip("']").split("'")[-1] if "'" in path else path
     rank = len(leaf.shape)
     data_ax = "data" if (fsdp and "data" in mesh.axis_names) else None
+    child = name.rsplit(".", 1)[-1] if "." in name else ""
+    if child in _GRIFFIN_META:
+        return P(*([None] * rank))
+    if child == "b_comp":
+        # parent GEMM name decides which mesh axis the output (N) dim gets
+        parent = path[:path.rfind(".")]
+        pname = parent.rstrip("']").split("'")[-1] if "'" in parent else parent
+        ax = "model" if pname in _IN_OUT else \
+            (data_ax if pname in _OUT_IN else None)
+        return _checked(P(*([None] * (rank - 1) + [ax])), leaf, mesh)
     if name in _REPLICATE or rank <= 1:
         return P()
     if ep and rank == 4 and name in ("w_gate", "w_up", "w_down") \

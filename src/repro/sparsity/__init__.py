@@ -1,7 +1,8 @@
 """Pruning + sparsity statistics substrate."""
-from .pruning import (PruneSchedule, block_prune, magnitude_prune,
-                      sparsity_of)
+from .pruning import (GEMM_WEIGHTS, PruneSchedule, block_prune,
+                      magnitude_prune, sparsify_params, sparsity_of)
 from .stats import activation_sparsity, model_mode, tensor_report
 
-__all__ = ["PruneSchedule", "block_prune", "magnitude_prune", "sparsity_of",
-           "activation_sparsity", "model_mode", "tensor_report"]
+__all__ = ["GEMM_WEIGHTS", "PruneSchedule", "block_prune", "magnitude_prune",
+           "sparsify_params", "sparsity_of", "activation_sparsity",
+           "model_mode", "tensor_report"]

@@ -10,14 +10,20 @@ Two granularities:
 Both are pure functions usable inside jit; ``PruneSchedule`` ramps sparsity
 during training (cubic schedule, Zhu & Gupta 2017 [73] — the paper's own
 pruning reference).
+
+``sparsify_params`` is the model-stack entry point (DESIGN.md Section 4):
+it block-prunes the weight GEMM leaves of a parameter pytree and replaces
+them with block-compacted ``GriffinWeights`` the framework layer
+(``models.common.griffin_linear``) executes through the Sparse.B kernel.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Any, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def magnitude_prune(w: jax.Array, sparsity: float) -> jax.Array:
@@ -83,3 +89,85 @@ class PruneSchedule:
         flat = w.reshape((-1,) + w.shape[-2:])
         out = jax.vmap(fn)(flat)
         return out.reshape(lead + w.shape[-2:])
+
+
+# ---------------------------------------------------------------------------
+# model-stack sparsification
+# ---------------------------------------------------------------------------
+
+# Trailing param names of the weight GEMMs griffin_linear executes.  Per-head
+# block-diagonal mats (xlstm rz/ri/...) and the recurrent-state path are NOT
+# listed: they are not weight GEMMs (DESIGN.md Section 7, deviations).  The
+# sLSTM gate projections wz/wi/wf/wo are (D, D) GEMMs and all four are
+# listed; the same-named mLSTM gate vectors (din, H) fall under min_dim.
+GEMM_WEIGHTS: Tuple[str, ...] = (
+    "wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down", "w_ff1", "w_ff2",
+    "wz", "wi", "wf", "head")
+
+# Subtrees whose wq/wk/wv are per-head *block-diagonal* (H, hd, hd) mats
+# consumed by einsum, not weight GEMMs: mLSTM q/k/v (models.xlstm).
+_BLOCKDIAG_PARENTS: Tuple[str, ...] = ("m_blocks",)
+
+
+def sparsify_params(params: Any, sparsity: float, *, block_k: int = 128,
+                    block_n: int = 128, unit: Optional[int] = None,
+                    names: Sequence[str] = GEMM_WEIGHTS,
+                    min_dim: int = 32, balance: bool = True,
+                    compact: bool = True) -> Any:
+    """Block-prune the weight GEMM leaves of a parameter pytree.
+
+    With ``compact=True`` each pruned leaf is replaced by a block-compacted
+    ``GriffinWeights`` (stacked leaves — layer stacks, MoE experts — get a
+    stacked GriffinWeights whose members share a padded common grid depth);
+    with ``compact=False`` the pruned weights stay plain zero-carrying
+    arrays, which is the bit-exact dense reference for the compacted run
+    (``bench_e2e`` compares the two).
+
+    Selection is by trailing param name (``names``) and minimum GEMM dims
+    (``min_dim`` — tiny projections like mLSTM gate vectors are skipped:
+    metadata would outweigh the blocks).  Norm scales, embeddings and
+    per-head block-diagonal mats are never touched.
+    """
+    from ..kernels.griffin_spmm.ops import preprocess_weights, stack_weights
+
+    def convert(w: jax.Array):
+        bk = min(block_k, w.shape[-2])
+        bn = min(block_n, w.shape[-1])
+        un = min(unit or max(8, bn // 4), w.shape[-1])
+
+        def one(m):
+            return block_prune(m, sparsity, bk, un)
+
+        if w.ndim == 2:
+            wp = one(w)
+            if not compact:
+                return wp
+            return preprocess_weights(np.asarray(wp), block_k=bk, block_n=bn,
+                                      unit=un, balance=balance)
+        lead = w.shape[:-2]
+        flat = w.reshape((-1,) + w.shape[-2:])
+        slices = [one(flat[i]) for i in range(flat.shape[0])]
+        if not compact:
+            return jnp.stack(slices).reshape(w.shape)
+        gws = [preprocess_weights(np.asarray(s), block_k=bk, block_n=bn,
+                                  unit=un, balance=balance) for s in slices]
+        gw = stack_weights(gws)
+        if len(lead) > 1:                     # e.g. (G, n_m) xlstm groups
+            gw = jax.tree.map(
+                lambda a: a.reshape(lead + a.shape[1:]), gw)
+        return gw
+
+    def walk(tree, name="", path=()):
+        if isinstance(tree, dict):
+            return {k: walk(v, k, path + (k,)) for k, v in tree.items()}
+        if isinstance(tree, (list, tuple)):
+            return type(tree)(walk(v, name, path) for v in tree)
+        blockdiag = name in ("wq", "wk", "wv") and \
+            any(p in _BLOCKDIAG_PARENTS for p in path)
+        if name in names and not blockdiag and hasattr(tree, "ndim") \
+                and tree.ndim >= 2 \
+                and tree.shape[-2] >= min_dim and tree.shape[-1] >= min_dim:
+            return convert(tree)
+        return tree
+
+    return walk(params)

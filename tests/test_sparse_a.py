@@ -1,0 +1,92 @@
+"""Sparse.A kernel vs ref.py oracle and vs dense, on random block masks.
+
+Covers both metadata regimes (DESIGN.md Section 5): concrete activations
+(numpy metadata, physically compacted grid) and traced activations inside
+jit (jnp metadata, full-depth predicated fallback).
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import compact_activations, dense_matmul, sparse_a_matmul
+from repro.kernels.sparse_a.ref import sparse_a_ref
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=1e-5, atol=1e-5)
+
+
+def _sparse_a(rng, m, k, bm, bk, sparsity, dtype):
+    """Activations with randomly zeroed (bm x bk) blocks."""
+    a = rng.randn(m, k).astype(np.float32)
+    pm, pk = -(-m // bm) * bm, -(-k // bk) * bk
+    mask = rng.rand(pm // bm, pk // bk) >= sparsity
+    for i in range(pm // bm):
+        for j in range(pk // bk):
+            if not mask[i, j]:
+                a[i * bm:(i + 1) * bm, j * bk:(j + 1) * bk] = 0
+    return jnp.asarray(a, dtype)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("sparsity", [0.0, 0.4, 0.8])
+@pytest.mark.parametrize("shape", [(16, 64, 32), (33, 70, 17)])
+def test_sparse_a_matches_ref_and_dense(dtype, sparsity, shape):
+    m, k, n = shape
+    rng = np.random.RandomState(0)
+    a = _sparse_a(rng, m, k, 16, 16, sparsity, dtype)
+    w = jnp.asarray(rng.randn(k, n), dtype)
+    out = sparse_a_matmul(a, w, block_m=16, block_k=16, block_n=16,
+                          interpret=True)
+    ref = sparse_a_ref(a, w)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+    dense = dense_matmul(a, w, interpret=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(dense, np.float32), **_tol(dtype))
+
+
+def test_concrete_metadata_compacts_the_grid():
+    rng = np.random.RandomState(1)
+    a = _sparse_a(rng, 32, 128, 16, 16, 0.7, jnp.float32)
+    meta = compact_activations(a, block_m=16, block_k=16)
+    assert meta.compaction < 1.0          # grid physically shrank
+    assert 0.0 < meta.density < 1.0
+    w = jnp.asarray(rng.randn(128, 48), jnp.float32)
+    out = sparse_a_matmul(a, w, meta=meta, block_n=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(a) @ np.asarray(w),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_traced_metadata_full_depth_parity():
+    """Inside jit, metadata falls back to static full K depth but the
+    result is identical (skipped blocks are exact zeros)."""
+    rng = np.random.RandomState(2)
+    a = _sparse_a(rng, 32, 64, 16, 16, 0.5, jnp.float32)
+    w = jnp.asarray(rng.randn(64, 32), jnp.float32)
+
+    f = jax.jit(lambda a, w: sparse_a_matmul(
+        a, w, block_m=16, block_k=16, block_n=16, interpret=True))
+    out_jit = f(a, w)
+    out_eager = sparse_a_matmul(a, w, block_m=16, block_k=16, block_n=16,
+                                interpret=True)
+    np.testing.assert_array_equal(np.asarray(out_jit), np.asarray(out_eager))
+    meta = compact_activations(jnp.asarray(a), block_m=16, block_k=16)
+    # traced metadata cannot shrink: verify via the jit-built meta shape
+    traced_meta = jax.eval_shape(
+        lambda x: compact_activations(x, block_m=16, block_k=16).kidx, a)
+    assert traced_meta.shape[1] == 64 // 16          # full depth
+    assert meta.kidx.shape[1] <= traced_meta.shape[1]
+
+
+def test_all_zero_activations():
+    a = jnp.zeros((16, 32), jnp.float32)
+    w = jnp.asarray(np.random.RandomState(3).randn(32, 16), jnp.float32)
+    out = sparse_a_matmul(a, w, block_m=16, block_k=16, block_n=16,
+                          interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), 0.0)
+    meta = compact_activations(a, block_m=16, block_k=16)
+    assert int(np.asarray(meta.cnt).sum()) == 0
+    assert meta.kidx.shape[1] == 1                   # minimal padded depth
