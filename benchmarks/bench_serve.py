@@ -1,0 +1,107 @@
+"""Serving-throughput benchmark: static vs continuous batching.
+
+Drives the slot-pool engine (``repro.runtime.engine``) over a deterministic
+mixed prompt/gen-length request trace (reduced config, CPU-scale) under the
+two scheduler policies.  Both policies share one memoized set of jitted
+prefill/decode fns and are timed on a warm second engine, so the measured
+gap is pure scheduling: static batching admits a fresh group only when the
+pool has fully drained (the longest generation in each group idles every
+other slot), continuous batching backfills freed slots from the queue every
+step.  The headline column is tok/s; ``tok_per_step`` (emitted tokens per
+pooled decode step = mean slot utilization) is the wall-clock-free twin the
+tier-2 test asserts on.
+
+Writes benchmarks/out/bench_serve.csv.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.runtime.engine import ServeEngine, synthetic_trace
+
+from .common import emit, write_csv
+
+ARCH = "llama3.2-1b"
+SLOTS = 4
+PROMPT_LENS = (8, 16, 24)
+# heavy-tailed generation lengths (sampled uniformly from the tuple, so
+# repeats are weights): most requests are short, ~1 in 8 is a straggler —
+# the regime where a static group idles every slot on its longest member
+GEN_LENS = (3, 3, 4, 4, 6, 6, 8, 28)
+
+
+def _make_engine(api, params, factory_cache, policy, cache_len):
+    def factory():
+        if "fns" not in factory_cache:
+            from repro.runtime.engine import _default_serve_fns
+            factory_cache["fns"] = _default_serve_fns(api, cache_len)
+        return factory_cache["fns"]
+
+    return ServeEngine(api, params, num_slots=SLOTS, cache_len=cache_len,
+                       policy=policy, fns_factory=factory)
+
+
+def run(fast: bool = True) -> None:
+    n_req = 16 if fast else 48
+    # mid-sized config: big enough that a pooled decode step is compute-
+    # (not dispatch-) bound on CPU, so the step-count gap between the two
+    # policies is what the wall clock sees
+    cfg = dataclasses.replace(get_config(ARCH).reduced(),
+                              d_model=256, head_dim=64, d_ff=1024,
+                              num_layers=4, vocab_size=512)
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    cache_len = max(PROMPT_LENS) + max(GEN_LENS) + 1
+    trace = lambda: synthetic_trace(cfg, num_requests=n_req, seed=7,
+                                    prompt_lens=PROMPT_LENS,
+                                    gen_lens=GEN_LENS)
+    factory_cache: dict = {}
+    rows = []
+    results = {}
+    for policy in ("static", "continuous"):
+        # cold engine traces the jits (shared via factory_cache), warm
+        # engine is timed — both policies run identical executables
+        _make_engine(api, params, factory_cache, policy, cache_len
+                     ).run(trace())
+        eng = _make_engine(api, params, factory_cache, policy, cache_len)
+        t0 = time.perf_counter()
+        outs = eng.run(trace())
+        dt = time.perf_counter() - t0
+        assert len(outs) == n_req and all(o.finished >= 0
+                                          for o in outs.values())
+        toks = eng.stats["emitted"]
+        tok_s = toks / dt
+        tok_step = toks / max(eng.stats["decode_steps"], 1)
+        results[policy] = (tok_s, tok_step, eng, dt)
+        emit(f"serve/{ARCH}/{policy}", dt * 1e6 / toks,
+             f"tok_s={tok_s:.1f};tok_per_step={tok_step:.2f};"
+             f"decode_steps={eng.stats['decode_steps']}")
+        rows.append({"policy": policy, "requests": n_req, "slots": SLOTS,
+                     "emitted": toks,
+                     "decode_steps": eng.stats["decode_steps"],
+                     "prefill_calls": eng.stats["prefill_calls"],
+                     "wall_s": round(dt, 4), "tok_s": round(tok_s, 1),
+                     "tok_per_step": round(tok_step, 3)})
+    speedup = results["continuous"][0] / results["static"][0]
+    rows.append({"policy": "continuous/static", "requests": n_req,
+                 "slots": SLOTS, "emitted": "",
+                 "decode_steps": "", "prefill_calls": "",
+                 "wall_s": "", "tok_s": round(speedup, 3),
+                 "tok_per_step": round(results["continuous"][1] /
+                                       results["static"][1], 3)})
+    print(f"# bench_serve -> {write_csv('bench_serve', rows)} "
+          f"(continuous/static tok/s = {speedup:.2f}x)")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="longer trace (48 requests)")
+    args = ap.parse_args()
+    run(fast=not args.full)

@@ -17,12 +17,12 @@ def main() -> None:
                     help="full DSE enumerations (slow)")
     ap.add_argument("--only", default="",
                     help="comma list: fig5,fig6,fig7,fig8,table4,table7,"
-                         "archs,kernels,batched,e2e")
+                         "archs,kernels,batched,e2e,serve")
     args = ap.parse_args()
 
     from . import (bench_archs, bench_batched, bench_e2e, bench_kernels,
-                   fig5_sparse_b, fig6_sparse_a, fig7_sparse_ab, fig8_overall,
-                   table4_networks, table7_breakdown)
+                   bench_serve, fig5_sparse_b, fig6_sparse_a, fig7_sparse_ab,
+                   fig8_overall, table4_networks, table7_breakdown)
     suites = {
         "table4": table4_networks.run,
         "table7": table7_breakdown.run,
@@ -34,6 +34,7 @@ def main() -> None:
         "kernels": bench_kernels.run,
         "batched": bench_batched.run,
         "e2e": bench_e2e.run,
+        "serve": bench_serve.run,
     }
     only = [s for s in args.only.split(",") if s]
     unknown = [s for s in only if s not in suites]

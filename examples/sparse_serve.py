@@ -1,6 +1,8 @@
 """Serving example: block-prune a model offline (the paper's Sparse.B
-preprocessing), let the hybrid runtime pick the execution mode, and decode
-batched requests.
+preprocessing), then serve a mixed prompt/gen-length request trace through
+the continuous-batching engine (slot-pool KV arena, FCFS admission, runtime
+workload-category measurement) and verify every request token-identical
+against the batch-1 greedy oracle.
 
   python examples/sparse_serve.py
 """
@@ -9,5 +11,6 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.launch.serve import main
 
-main(["--arch", "llama3.2-1b", "--reduced", "--batch", "4",
-      "--prompt-len", "32", "--gen-len", "16", "--sparsity", "0.8"])
+main(["--arch", "llama3.2-1b", "--reduced", "--slots", "3",
+      "--requests", "6", "--prompt-lens", "8,12,16", "--gen-lens", "4,6,8",
+      "--arrival-every", "1", "--sparsity", "0.8", "--parity"])

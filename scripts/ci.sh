@@ -25,6 +25,14 @@ echo "== kernel parity (interpret mode, CPU): dense / Sparse.B / Sparse.A"
 PYTHONPATH="${PYPATH}${PYTHONPATH:+:$PYTHONPATH}" \
     python -m pytest -x -q $KERNEL_TESTS
 
+echo "== tier-2: serving-engine e2e (all families, dense + sparse)"
+PYTHONPATH="${PYPATH}${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m pytest -x -q -m tier2
+
+echo "== serve smoke: continuous-batching engine, reduced config + parity"
+PYTHONPATH="${PYPATH}${PYTHONPATH:+:$PYTHONPATH}" \
+    python examples/sparse_serve.py
+
 echo "== benchmark smoke: fig5 (fast mode, batched sweep + results cache)"
 PYTHONPATH="${PYPATH}${PYTHONPATH:+:$PYTHONPATH}" \
     python -m benchmarks.run --only fig5

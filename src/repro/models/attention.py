@@ -227,8 +227,10 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                      ) -> jax.Array:
     """Single-step attention against a (B, S, KVH, hd) cache.
 
-    ``pos`` is the current position (number of valid cache entries); for a
-    rolling sliding-window cache pass window=None and a fully-valid cache.
+    ``pos`` is the current position (number of valid cache entries) — a
+    scalar, or a (B,) vector when each batch row sits at its own position
+    (continuous-batching slot pools, runtime/engine.py); for a rolling
+    sliding-window cache pass window=None and a fully-valid cache.
     q: (B, 1, H, hd).
     """
     B, _, H, hd = q.shape
@@ -239,9 +241,14 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                         preferred_element_type=jnp.float32)
     logits = logits / jnp.sqrt(hd).astype(jnp.float32)
     idx = jnp.arange(S)
-    valid = idx[None, :] <= pos if jnp.ndim(pos) else idx <= pos
-    if window is not None:
-        valid = valid & (idx > pos - window)
+    if jnp.ndim(pos):                       # per-row positions: (B, S) mask
+        valid = idx[None, :] <= pos[:, None]
+        if window is not None:
+            valid = valid & (idx[None, :] > pos[:, None] - window)
+    else:
+        valid = idx <= pos
+        if window is not None:
+            valid = valid & (idx > pos - window)
     logits = jnp.where(valid[None, None, None] if valid.ndim == 1
                        else valid[:, None, None, :], logits, NEG_INF)
     p = jax.nn.softmax(logits, axis=-1)

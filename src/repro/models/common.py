@@ -109,6 +109,23 @@ def griffin_linear(x: jax.Array, w) -> jax.Array:
     return out.reshape(*lead, w.shape[-1]).astype(x.dtype)
 
 
+def write_kv_slot(cache: jax.Array, update: jax.Array, slot: jax.Array
+                  ) -> jax.Array:
+    """Write a one-token K/V update into a (B, S, ...) cache at ``slot``.
+
+    ``slot`` is a scalar (lockstep batch: one shared sequence index) or a
+    (B,) vector of per-row indices (continuous-batching slot pools,
+    runtime/engine.py) — the vector path is a per-row
+    ``dynamic_update_slice`` under ``vmap`` and is bit-identical to the
+    scalar path when all entries are equal.  ``update``: (B, 1, ...).
+    """
+    if slot.ndim:
+        upd = jax.vmap(
+            lambda c, u, s: jax.lax.dynamic_update_slice(c, u, (s, 0, 0)))
+        return upd(cache, update, slot)
+    return jax.lax.dynamic_update_slice(cache, update, (0, slot, 0, 0))
+
+
 def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
     dt = x.dtype
     x = x.astype(jnp.float32)

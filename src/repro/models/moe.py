@@ -57,9 +57,20 @@ def init_moe(key, d_model: int, d_ff: int, moe: MoEConfig, dtype) -> Dict:
     }
 
 
-def moe_ffn(p: Dict, x: jax.Array, moe: MoEConfig, act: str = "silu"
-            ) -> Tuple[jax.Array, jax.Array]:
+def moe_ffn(p: Dict, x: jax.Array, moe: MoEConfig, act: str = "silu",
+            drop_free: bool = False) -> Tuple[jax.Array, jax.Array]:
     """x: (N, D) token major.  Returns (out (N, D), aux load-balance loss).
+
+    ``drop_free=True`` sets the expert capacity to N (each expert appears at
+    most once per token's top-k, so no token can ever be dropped).  Decode
+    steps use it (``models.transformer.block_decode``): with the trained
+    capacity a token's drop decision would depend on which *other* requests
+    it happens to be co-batched with — under continuous batching
+    (runtime/engine.py) that would make served outputs a function of
+    scheduling, and it is what breaks bit-parity between pooled decode and
+    the batch-1 ``greedy_generate`` oracle.  Kept-token values are row-wise
+    independent of capacity, so this changes nothing for tokens the trained
+    capacity would have kept.
 
     Scatter/gather ("sort-based") dispatch: tokens are placed into a dense
     (E*C, D) expert buffer by computed slot ids and gathered back after the
@@ -71,7 +82,7 @@ def moe_ffn(p: Dict, x: jax.Array, moe: MoEConfig, act: str = "silu"
     """
     N, D = x.shape
     E, K = moe.num_experts, moe.top_k
-    C = max(1, int(N * moe.capacity_factor * K / E))
+    C = N if drop_free else max(1, int(N * moe.capacity_factor * K / E))
     if isinstance(p["router"], GriffinWeights):
         gates = griffin_linear(x.astype(jnp.float32), p["router"])
     elif execution_context().use_kernels:

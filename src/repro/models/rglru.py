@@ -16,7 +16,8 @@ import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
 from .attention import decode_attention, local_attention
-from .common import act_fn, dense_init, layer_scan, rms_norm, rope, stack_layers
+from .common import (act_fn, dense_init, layer_scan, rms_norm, rope,
+                     stack_layers, write_kv_slot)
 
 Params = Dict[str, Any]
 LRU_C = 8.0
@@ -140,18 +141,21 @@ def attn_mix(cfg: ModelConfig, p: Params, x: jax.Array, positions):
 
 
 def attn_decode(cfg: ModelConfig, p: Params, x: jax.Array, kc, vc, pos):
-    """One-token local attention against a rolling window cache."""
+    """One-token local attention against a rolling window cache.  ``pos``
+    is a scalar, or a (B,) vector of per-row positions (continuous-batching
+    slot pools, runtime/engine.py)."""
     B = x.shape[0]
     H, KVH, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
     h = rms_norm(x, p["ln"], cfg.norm_eps)
-    posv = pos[None] if pos.ndim == 0 else pos
+    per_slot = pos.ndim > 0
+    posv = pos[:, None] if per_slot else pos[None]
     q = rope((h @ p["wq"]).reshape(B, 1, H, hd), posv, cfg.rope_theta)
     k = rope((h @ p["wk"]).reshape(B, 1, KVH, hd), posv, cfg.rope_theta)
     v = (h @ p["wv"]).reshape(B, 1, KVH, hd)
     clen = kc.shape[1]
     slot = pos % clen
-    kc = jax.lax.dynamic_update_slice(kc, k, (0, slot, 0, 0))
-    vc = jax.lax.dynamic_update_slice(vc, v, (0, slot, 0, 0))
+    kc = write_kv_slot(kc, k, slot)
+    vc = write_kv_slot(vc, v, slot)
     eff = jnp.minimum(pos, clen - 1)
     o = decode_attention(q, kc, vc, eff, window=None)
     return (x + o.reshape(B, 1, -1) @ p["wo"]).astype(x.dtype), kc, vc
@@ -267,7 +271,14 @@ def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array,
                                         params["tail"])
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     logits = x[:, -1] @ params["head"]
-    # roll the window cache so that slot (pos % clen) is consistent
+    # roll the window cache so that slot (pos % clen) is consistent; short
+    # prompts pad the tail so the cache is always exactly clen long — the
+    # arena shape init_cache declares (decode writes slots S, S+1, ... and
+    # the eff-pos mask hides the padding, exactly as in models/transformer)
+    if ks.shape[2] < clen:
+        pad = clen - ks.shape[2]
+        ks = jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        vs = jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
     shift = (S % clen) if S >= clen else 0
     ks = jnp.roll(ks, shift, axis=2)
     vs = jnp.roll(vs, shift, axis=2)

@@ -25,7 +25,7 @@ import jax.numpy as jnp
 from ..configs.base import ModelConfig
 from .attention import attention, decode_attention
 from .common import (act_fn, dense_init, griffin_linear, layer_scan,
-                     remat_fn, rms_norm, rope, stack_layers)
+                     remat_fn, rms_norm, rope, stack_layers, write_kv_slot)
 from .moe import init_moe, moe_ffn
 
 Params = Dict[str, Any]
@@ -80,10 +80,12 @@ def unembed(cfg: ModelConfig, params: Params) -> jax.Array:
 # blocks
 # ---------------------------------------------------------------------------
 
-def _ffn(cfg: ModelConfig, p: Params, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+def _ffn(cfg: ModelConfig, p: Params, x: jax.Array,
+         decode: bool = False) -> Tuple[jax.Array, jax.Array]:
     if cfg.moe:
         B, S, D = x.shape
-        out, aux = moe_ffn(p["moe"], x.reshape(B * S, D), cfg.moe, cfg.act)
+        out, aux = moe_ffn(p["moe"], x.reshape(B * S, D), cfg.moe, cfg.act,
+                           drop_free=decode)
         return out.reshape(B, S, D), aux
     h = act_fn(cfg.act)(griffin_linear(x, p["w_gate"])) * \
         griffin_linear(x, p["w_up"])
@@ -123,13 +125,21 @@ def block_train(cfg: ModelConfig, p: Params, x: jax.Array,
 def block_decode(cfg: ModelConfig, p: Params, x: jax.Array, k_cache, v_cache,
                  pos, cache_len: int):
     """One-token block against a (B, S_cache, KVH, hd) cache; returns the
-    updated cache slices.  Sliding-window archs use a rolling cache."""
+    updated cache slices.  Sliding-window archs use a rolling cache.
+
+    ``pos`` is a scalar (lockstep batch, greedy_generate) or a (B,) vector
+    of per-row positions (continuous-batching slot pools,
+    runtime/engine.py): each row ropes, writes and masks at its own
+    position; with equal entries the vector path is bit-identical to the
+    scalar one (every op below is row-wise)."""
     h = rms_norm(x, p["ln1"], cfg.norm_eps)
-    q, k, v = _qkv(cfg, p, h, positions=pos[None] if pos.ndim == 0 else pos)
+    per_slot = pos.ndim > 0
+    q, k, v = _qkv(cfg, p, h,
+                   positions=pos[:, None] if per_slot else pos[None])
     rolling = cfg.window is not None and cache_len <= cfg.window
     slot = jnp.where(rolling, pos % cache_len, jnp.minimum(pos, cache_len - 1))
-    k_cache = jax.lax.dynamic_update_slice(k_cache, k, (0, slot, 0, 0))
-    v_cache = jax.lax.dynamic_update_slice(v_cache, v, (0, slot, 0, 0))
+    k_cache = write_kv_slot(k_cache, k, slot)
+    v_cache = write_kv_slot(v_cache, v, slot)
     # valid length: rolling caches become fully valid once wrapped
     eff_pos = jnp.where(rolling, jnp.minimum(pos, cache_len - 1), pos)
     win = None if rolling else cfg.window
@@ -137,7 +147,7 @@ def block_decode(cfg: ModelConfig, p: Params, x: jax.Array, k_cache, v_cache,
     B = x.shape[0]
     x = x + griffin_linear(o.reshape(B, 1, -1), p["wo"]).astype(x.dtype)
     h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
-    f, _ = _ffn(cfg, p, h2)
+    f, _ = _ffn(cfg, p, h2, decode=True)
     return (x + f).astype(x.dtype), k_cache, v_cache
 
 

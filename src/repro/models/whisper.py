@@ -23,7 +23,7 @@ import numpy as np
 from ..configs.base import ModelConfig
 from .attention import attention, decode_attention
 from .common import (act_fn, dense_init, griffin_linear, layer_scan,
-                     rms_norm, rope, stack_layers)
+                     rms_norm, rope, stack_layers, write_kv_slot)
 
 Params = Dict[str, Any]
 
@@ -178,22 +178,25 @@ def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array,
 
 def decode_step(cfg: ModelConfig, params: Params, cache: Params,
                 token: jax.Array):
+    """``cache["pos"]`` is a scalar (lockstep batch) or a (B,) vector of
+    per-row positions (continuous-batching slot pools, runtime/engine.py)."""
     x = params["embed"][token]
     pos = cache["pos"] + 1
+    per_slot = pos.ndim > 0
     B = x.shape[0]
     H, hd = cfg.num_heads, cfg.hd
 
     def body(x, xs):
         lp, kc, vc, xk, xv = xs
         h = rms_norm(x, lp["ln1"], cfg.norm_eps)
-        posv = pos[None]
+        posv = pos[:, None] if per_slot else pos[None]
         q = rope(griffin_linear(h, lp["self"]["wq"]).reshape(B, 1, H, hd),
                  posv, cfg.rope_theta)
         k = rope(griffin_linear(h, lp["self"]["wk"]).reshape(B, 1, H, hd),
                  posv, cfg.rope_theta)
         v = griffin_linear(h, lp["self"]["wv"]).reshape(B, 1, H, hd)
-        kc = jax.lax.dynamic_update_slice(kc, k, (0, pos, 0, 0))
-        vc = jax.lax.dynamic_update_slice(vc, v, (0, pos, 0, 0))
+        kc = write_kv_slot(kc, k, pos)
+        vc = write_kv_slot(vc, v, pos)
         o = decode_attention(q, kc, vc, pos)
         x = (x + griffin_linear(o.reshape(B, 1, -1),
                                 lp["self"]["wo"])).astype(x.dtype)

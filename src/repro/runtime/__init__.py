@@ -1,2 +1,3 @@
-"""Distributed runtime: sharding rules, train/serve step factories,
-elastic remesh, straggler mitigation."""
+"""Distributed runtime: sharding rules, train/serve step factories, the
+continuous-batching serving engine (engine.py), elastic remesh, straggler
+mitigation."""

@@ -1,0 +1,450 @@
+"""Continuous-batching serving engine: slot-pool KV arena + FCFS scheduler
++ per-step workload-category measurement (DESIGN.md Section 8).
+
+A fixed ``num_slots x cache_len`` cache arena is shared by all in-flight
+requests.  Each engine tick admits waiting requests into freed slots
+(prefilling them one at a time, interleaved with decode of the running
+slots) and then advances *every* running slot by one token with a single
+pooled, donated decode step — the decode GEMV work stays batched no matter
+how ragged the request lengths are.  Admission writes a freshly prefilled
+single-request cache into its slot in place (``dynamic_update_slice`` along
+the per-leaf batch axis, positions carried as a per-slot (B,) vector the
+model decode paths understand); eviction is just marking the slot free —
+the stale rows are dead weight until the next admission overwrites them.
+
+The engine is the serving face of the paper's hybrid execution: it keeps a
+running *measured* activation sparsity (exact-zero fraction of the pooled
+decode logits, refreshed every ``measure_every`` steps), re-invokes
+``core.hybrid.select_mode`` against the offline weight sparsity, and runs
+every prefill/decode under a ``sparse_execution`` scope for the selected
+category.  Mode is a trace-time decision (DESIGN.md Section 5), so a
+category flip swaps to a fresh set of jitted fns traced under the new
+scope — the jit cache is keyed by ``Mode``, at most four entries.
+
+``greedy_generate`` (runtime/serve.py) is the parity oracle: per-slot
+decode is row-wise independent (MoE decode runs drop-free for exactly this
+reason, see ``models.moe.moe_ffn``), so the engine's generated tokens for a
+request match a batch-1 greedy run of the same prompt token for token.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.hybrid import SPARSE_THRESHOLD, select_mode
+from ..core.spec import Mode
+from ..kernels.griffin_spmm.ops import GriffinWeights
+from ..models.common import sparse_execution
+from ..models.registry import ModelApi
+from ..sparsity.pruning import GEMM_WEIGHTS, sparsity_of
+
+# Category knob handed to the sparse_execution scope when the *measured*
+# activation sparsity selects an A-side mode and no declared value exists:
+# the scope only consumes the category bit (above/below SPARSE_THRESHOLD),
+# so any representative sparse-side constant keeps the trace stable across
+# measurement jitter (DESIGN.md Section 5).
+DEFAULT_DECLARED_A = 0.5
+
+
+# ---------------------------------------------------------------------------
+# requests
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Request:
+    """One generation request.  ``arrival`` is the earliest engine step at
+    which the scheduler may admit it; ``extras`` carries non-token model
+    inputs (whisper frames)."""
+
+    rid: int
+    tokens: np.ndarray
+    max_new_tokens: int
+    arrival: int = 0
+    extras: Optional[Dict[str, np.ndarray]] = None
+
+    @property
+    def prompt_len(self) -> int:
+        return int(np.asarray(self.tokens).shape[-1])
+
+    def as_batch(self) -> Dict[str, jax.Array]:
+        """The batch-1 model input this request prefills with — also what
+        oracle replays (greedy_generate) must feed so they compare against
+        the same computation."""
+        batch = {"tokens": jnp.asarray(
+            np.asarray(self.tokens, np.int32).reshape(1, -1))}
+        for k, v in (self.extras or {}).items():
+            batch[k] = jnp.asarray(v)[None]
+        return batch
+
+
+@dataclasses.dataclass
+class RequestOutput:
+    rid: int
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    admitted: int = -1
+    finished: int = -1
+
+
+# ---------------------------------------------------------------------------
+# scheduler (pure bookkeeping — no jax; the hypothesis sweeps in
+# tests/test_properties.py drive it directly against random traces)
+# ---------------------------------------------------------------------------
+
+class Scheduler:
+    """FCFS slot scheduler.
+
+    ``policy="continuous"``: waiting requests are admitted into freed slots
+    every step, at most ``max_admissions_per_step`` per tick, so prefill
+    work interleaves with decode of the running slots.
+    ``policy="static"``: admission only when the pool has fully drained —
+    the classic static-batching baseline whose stragglers idle the pool
+    (benchmarks/bench_serve.py measures the gap).
+    """
+
+    def __init__(self, num_slots: int, policy: str = "continuous",
+                 max_admissions_per_step: int = 1):
+        if num_slots < 1:
+            raise ValueError("need at least one slot")
+        if policy not in ("continuous", "static"):
+            raise ValueError(f"unknown policy {policy!r}")
+        self.num_slots = num_slots
+        self.policy = policy
+        self.max_admissions = max(1, max_admissions_per_step)
+        self.waiting: List[Request] = []
+        self.running: Dict[int, Request] = {}
+        self.remaining: Dict[int, int] = {}
+        self.finished: List[int] = []
+        self._free = list(range(num_slots - 1, -1, -1))   # pop() -> slot 0
+
+    def add(self, req: Request) -> None:
+        if req.max_new_tokens < 1:
+            raise ValueError(f"request {req.rid}: max_new_tokens must be >=1")
+        self.waiting.append(req)
+
+    def admissions(self, step: int) -> List[Tuple[int, Request]]:
+        """Pop the (slot, request) pairs to admit at ``step`` — FCFS over
+        the arrived portion of the queue, bounded by free slots and the
+        per-step admission budget."""
+        if self.policy == "static" and self.running:
+            return []
+        budget = (self.num_slots if self.policy == "static"
+                  else self.max_admissions)
+        out: List[Tuple[int, Request]] = []
+        while self._free and len(out) < budget:
+            i = next((j for j, r in enumerate(self.waiting)
+                      if r.arrival <= step), None)
+            if i is None:
+                break
+            req = self.waiting.pop(i)
+            slot = self._free.pop()
+            self.running[slot] = req
+            self.remaining[slot] = req.max_new_tokens
+            out.append((slot, req))
+        return out
+
+    def emit(self, slot: int) -> bool:
+        """Record one emitted token on ``slot``; frees the slot and returns
+        True when that was the request's last token."""
+        self.remaining[slot] -= 1
+        if self.remaining[slot] > 0:
+            return False
+        req = self.running.pop(slot)
+        del self.remaining[slot]
+        self._free.append(slot)
+        self.finished.append(req.rid)
+        return True
+
+    @property
+    def active(self) -> List[int]:
+        return sorted(self.running)
+
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.running)
+
+
+# ---------------------------------------------------------------------------
+# cache-arena plumbing
+# ---------------------------------------------------------------------------
+
+def _batch_axes(api: ModelApi, cache_len: int) -> Any:
+    """Per-leaf batch-axis index of the cache tree (-1 for scalar position
+    counters), discovered by diffing the shapes ``init_cache`` declares for
+    batch sizes 2 and 1 — no per-family knowledge needed."""
+    two = jax.eval_shape(lambda: api.init_cache(2, cache_len))
+    one = jax.eval_shape(lambda: api.init_cache(1, cache_len))
+
+    def axis(p, s):
+        diffs = [i for i, (a, b) in enumerate(zip(p.shape, s.shape))
+                 if a != b]
+        if len(diffs) > 1:
+            raise ValueError(f"ambiguous cache batch axis: {p.shape} vs "
+                             f"{s.shape}")
+        if not diffs:
+            if p.shape != ():
+                raise ValueError("cache leaf without a batch axis must be "
+                                 f"a scalar counter, got shape {p.shape}")
+            return -1
+        return diffs[0]
+
+    return jax.tree.map(axis, two, one)
+
+
+def _make_insert(axes: Any) -> Callable:
+    """Jitted in-place (donated) write of a single-request cache into one
+    slot of the pool arena.  Scalar counters (axis -1) land in the
+    promoted per-slot (B,) vector."""
+
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def insert(pool, sub, slot):
+        def one(pl, sl, ax):
+            if ax < 0:
+                return jax.lax.dynamic_update_slice(
+                    pl, sl.astype(pl.dtype).reshape(1), (slot,))
+            starts = [0] * pl.ndim
+            starts[ax] = slot
+            return jax.lax.dynamic_update_slice(pl, sl.astype(pl.dtype),
+                                                tuple(starts))
+        return jax.tree.map(one, pool, sub, axes)
+
+    return insert
+
+
+def _default_serve_fns(api: ModelApi, cache_len: int):
+    """Unsharded single-host jits; the mesh-aware factory is
+    ``runtime.serve.jit_serve_fns`` (launch/serve.py passes it in).  The
+    decode cache is donated so pool updates happen in place."""
+    prefill = jax.jit(lambda p, b: api.prefill(p, b, cache_len=cache_len))
+    decode = jax.jit(lambda p, c, t: api.decode_step(p, c, t),
+                     donate_argnums=(1,))
+    return prefill, decode
+
+
+def weight_sparsity(params: Any,
+                    names: Sequence[str] = GEMM_WEIGHTS) -> float:
+    """Mean sparsity of the weight GEMM leaves ``griffin_linear`` executes
+    (trailing-name selection as in ``sparsity.sparsify_params``):
+    ``GriffinWeights`` leaves report ``1 - density`` (their zeros were
+    physically dropped), plain leaves their exact zero fraction — the
+    B-side input to ``select_mode``."""
+    vals: List[float] = []
+
+    def walk(t, name=""):
+        if isinstance(t, GriffinWeights):
+            vals.append(1.0 - t.density)
+        elif isinstance(t, dict):
+            for k, v in t.items():
+                walk(v, k)
+        elif isinstance(t, (list, tuple)):
+            for v in t:
+                walk(v, name)
+        elif name in names and hasattr(t, "ndim") and t.ndim >= 2 and \
+                jnp.issubdtype(t.dtype, jnp.floating):
+            vals.append(float(sparsity_of(t)))
+
+    walk(params)
+    return float(np.mean(vals)) if vals else 0.0
+
+
+# ---------------------------------------------------------------------------
+# engine
+# ---------------------------------------------------------------------------
+
+class ServeEngine:
+    """Continuous-batching driver over a ``ModelApi``.
+
+    ``fns_factory`` returns (prefill_fn, decode_fn[, ...]) — pass
+    ``lambda: jit_serve_fns(api, mesh, num_slots, cache_len)`` to serve on
+    a mesh (launch/serve.py does); default is single-host jits.  The
+    factory is invoked once per selected execution mode: the resulting jits
+    are traced (and always called) under that mode's ``sparse_execution``
+    scope, which is how a workload-category flip reaches the kernels.
+
+    Greedy decoding only (argmax), matching the ``greedy_generate`` oracle.
+    Prefill jits retrace per distinct prompt length — callers with ragged
+    traces should bucket prompt lengths (future work: bucketed prefill).
+    """
+
+    def __init__(self, api: ModelApi, params: Any, *, num_slots: int,
+                 cache_len: int, fns_factory: Optional[Callable] = None,
+                 policy: str = "continuous", max_admissions_per_step: int = 1,
+                 use_kernels: bool = False, interpret: bool = False,
+                 a_sparsity: Optional[float] = None, block_m: int = 128,
+                 measure_every: int = 8):
+        self.api = api
+        self.params = params
+        self.num_slots = num_slots
+        self.cache_len = cache_len
+        self.sched = Scheduler(num_slots, policy, max_admissions_per_step)
+        self._fns_factory = fns_factory or (
+            lambda: _default_serve_fns(api, cache_len))
+        self._mode_fns: Dict[Mode, Tuple[Callable, Callable]] = {}
+        self.use_kernels = use_kernels
+        self.interpret = interpret
+        self.block_m = block_m
+        self.a_declared = a_sparsity
+        self.measure_every = max(1, measure_every)
+        self.b_sparsity = weight_sparsity(params)
+        self.a_measured = 0.0
+        self.mode = select_mode(self._a_now(), self.b_sparsity)
+        self.mode_history: List[Tuple[int, Mode]] = [(0, self.mode)]
+        self.clock = 0
+        self._since_measure = 0
+        self.outputs: Dict[int, RequestOutput] = {}
+        self.events: List[Tuple[int, int, int]] = []    # (step, rid, token)
+        self.stats = {"decode_steps": 0, "prefill_calls": 0, "emitted": 0,
+                      "idle_steps": 0, "retraces": 0}
+        # the arena: init_cache's tree with scalar counters promoted to
+        # per-slot (B,) vectors (the decode paths' vector-pos branch)
+        cache = api.init_cache(num_slots, cache_len)
+        self.cache = jax.tree.map(
+            lambda leaf: jnp.zeros((num_slots,), leaf.dtype)
+            if leaf.ndim == 0 else leaf, cache)
+        self._insert = _make_insert(_batch_axes(api, cache_len))
+        self._tokens = jnp.zeros((num_slots, 1), jnp.int32)
+
+    # -- mode plumbing ------------------------------------------------------
+
+    def _a_now(self) -> float:
+        return (self.a_declared if self.a_declared is not None
+                else self.a_measured)
+
+    def _scope(self):
+        a_scope = 0.0
+        if self.mode in (Mode.A, Mode.AB):
+            a_scope = (self.a_declared
+                       if self.a_declared is not None
+                       and self.a_declared > SPARSE_THRESHOLD
+                       else DEFAULT_DECLARED_A)
+        return sparse_execution(use_kernels=self.use_kernels,
+                                interpret=self.interpret,
+                                a_sparsity=a_scope, block_m=self.block_m)
+
+    def _fns(self) -> Tuple[Callable, Callable]:
+        fns = self._mode_fns.get(self.mode)
+        if fns is None:
+            made = self._fns_factory()
+            fns = (made[0], made[1])
+            self._mode_fns[self.mode] = fns
+            self.stats["retraces"] += 1
+        return fns
+
+    def _measure(self, logits: jax.Array) -> None:
+        """Workload-category measurement on the step's concrete logits
+        (live slots only — stale rows of freed slots would skew the zero
+        fraction); a flipped ``select_mode`` verdict swaps the jitted-fn
+        set (mode is a trace-time decision, DESIGN.md Section 5)."""
+        self._since_measure = 0
+        self.a_measured = float(sparsity_of(logits))
+        mode = select_mode(self._a_now(), self.b_sparsity)
+        if mode != self.mode:
+            self.mode = mode
+            self.mode_history.append((self.clock, mode))
+
+    # -- request lifecycle --------------------------------------------------
+
+    def add(self, req: Request) -> None:
+        if req.prompt_len + req.max_new_tokens > self.cache_len:
+            raise ValueError(
+                f"request {req.rid}: prompt {req.prompt_len} + gen "
+                f"{req.max_new_tokens} exceeds cache_len {self.cache_len}")
+        if self.api.cfg.is_encdec and (req.extras or {}).get("frames") is None:
+            raise ValueError(f"request {req.rid}: enc-dec model needs "
+                             "extras['frames']")
+        self.sched.add(req)
+
+    def _prefill(self, req: Request):
+        prefill_fn, _ = self._fns()
+        with self._scope():
+            cache1, logits = prefill_fn(self.params, req.as_batch())
+        self.stats["prefill_calls"] += 1
+        return cache1, logits
+
+    def _emit(self, slot: int, token: int) -> None:
+        req = self.sched.running[slot]
+        out = self.outputs[req.rid]
+        out.tokens.append(token)
+        self.events.append((self.clock, req.rid, token))
+        self.stats["emitted"] += 1
+        if self.sched.emit(slot):
+            out.finished = self.clock
+
+    def step(self) -> List[Tuple[int, int, int]]:
+        """One engine tick: admissions (each prefilled and written into its
+        slot, first token emitted from the prefill logits) followed by one
+        pooled decode step advancing every running slot.  Returns the
+        tick's (step, rid, token) events."""
+        ev_start = len(self.events)
+        for slot, req in self.sched.admissions(self.clock):
+            cache1, logits = self._prefill(req)
+            self.cache = self._insert(self.cache, cache1,
+                                      jnp.asarray(slot, jnp.int32))
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)     # (1,)
+            self._tokens = jax.lax.dynamic_update_slice(
+                self._tokens, tok[:, None], (slot, 0))
+            self.outputs[req.rid] = RequestOutput(req.rid,
+                                                  admitted=self.clock)
+            self._emit(slot, int(tok[0]))
+        active = self.sched.active
+        if active:
+            _, decode_fn = self._fns()
+            with self._scope():
+                logits, self.cache = decode_fn(self.params, self.cache,
+                                               self._tokens)
+            toks = jnp.argmax(logits, -1).astype(jnp.int32)    # (B,)
+            self._tokens = toks[:, None]
+            host = np.asarray(toks)
+            self.stats["decode_steps"] += 1
+            self._since_measure += 1
+            if self._since_measure >= self.measure_every:
+                self._measure(logits[jnp.asarray(active)])
+            for slot in active:
+                self._emit(slot, int(host[slot]))
+        elif self.sched.waiting:
+            self.stats["idle_steps"] += 1
+        self.clock += 1
+        return self.events[ev_start:]
+
+    def run(self, requests: Sequence[Request] = (),
+            max_steps: Optional[int] = None) -> Dict[int, RequestOutput]:
+        """Drain: add ``requests``, tick until every request finished (or
+        ``max_steps``), return rid -> RequestOutput."""
+        for r in requests:
+            self.add(r)
+        steps = 0
+        while self.sched.has_work():
+            self.step()
+            steps += 1
+            if max_steps is not None and steps >= max_steps:
+                break
+        return self.outputs
+
+
+# ---------------------------------------------------------------------------
+# traces
+# ---------------------------------------------------------------------------
+
+def synthetic_trace(cfg, *, num_requests: int, seed: int = 0,
+                    prompt_lens: Sequence[int] = (8, 16, 24),
+                    gen_lens: Sequence[int] = (4, 8, 16),
+                    arrival_every: int = 0) -> List[Request]:
+    """Deterministic mixed prompt/gen-length request trace — the
+    benchmarks/bench_serve.py workload.  ``arrival_every > 0`` staggers
+    arrivals (request i arrives at step i * arrival_every)."""
+    rng = np.random.default_rng(seed)
+    reqs: List[Request] = []
+    for i in range(num_requests):
+        plen = int(rng.choice(np.asarray(prompt_lens)))
+        glen = int(rng.choice(np.asarray(gen_lens)))
+        toks = rng.integers(1, cfg.vocab_size, (plen,), dtype=np.int32)
+        extras = None
+        if cfg.is_encdec:
+            extras = {"frames": rng.standard_normal(
+                (cfg.enc_frames, cfg.d_model)).astype(np.float32)}
+        reqs.append(Request(rid=i, tokens=toks, max_new_tokens=glen,
+                            arrival=i * arrival_every, extras=extras))
+    return reqs

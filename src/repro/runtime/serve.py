@@ -13,15 +13,32 @@ from .sharding import shard_batch, shard_cache, shard_params
 
 
 def jit_serve_fns(api: ModelApi, mesh: Mesh, batch: int, cache_len: int,
-                  fsdp: bool = False):
-    """Returns (prefill_fn, decode_fn, shardings).
+                  fsdp: bool = False, params: Optional[Any] = None):
+    """Returns (prefill_fn, decode_fn, (p_sh, c_sh, logits_sh)).
+
+    ``params`` is the tree actually being served — pass it whenever it is
+    not shaped like ``api.init``'s output (block-compacted ``GriffinWeights``
+    leaves from ``sparsity.sparsify_params`` replace single arrays with
+    metadata subtrees, each needing its own spec from
+    ``runtime.sharding.param_spec``); defaults to the dense init shapes.
+
+    These are the fns the serving engine drives (``runtime.engine
+    .ServeEngine`` takes ``lambda: jit_serve_fns(...)`` as its fns
+    factory): ``prefill_fn`` admits one request (its output cache is
+    slot-inserted into the pool arena), ``decode_fn`` advances the whole
+    pool with the cache donated so the arena updates in place.
+    ``logits_sh`` is the dp-sharded logits layout both fns produce — it
+    assumes the pool batch divides the dp axes, so batch-1 admission
+    prefills need a 1-dp mesh (multi-host serving buckets prefills on a
+    separate dp=1 mesh; see DESIGN.md Section 8).
 
     Serving defaults to fsdp=False: parameters live model-sharded and
     replicated over the data axis so decode steps pay no per-step parameter
     all-gathers (the train-path FSDP layout would; see EXPERIMENTS.md
     Section Perf).
     """
-    p_shapes = jax.eval_shape(api.init, jax.random.PRNGKey(0))
+    p_shapes = (jax.eval_shape(api.init, jax.random.PRNGKey(0))
+                if params is None else params)
     p_sh = shard_params(p_shapes, mesh, fsdp=fsdp)
     cache_shapes = jax.eval_shape(lambda: api.init_cache(batch, cache_len))
     c_sh = shard_cache(cache_shapes, mesh, batch)
@@ -38,12 +55,12 @@ def jit_serve_fns(api: ModelApi, mesh: Mesh, batch: int, cache_len: int,
                               ) if batch % _dp(mesh) == 0 else rep
     prefill_jit = jax.jit(prefill_fn,
                           in_shardings=(p_sh, None),
-                          out_shardings=(c_sh, None))
+                          out_shardings=(c_sh, logits_sh))
     decode_jit = jax.jit(decode_fn,
                          in_shardings=(p_sh, c_sh, None),
-                         out_shardings=(None, c_sh),
+                         out_shardings=(logits_sh, c_sh),
                          donate_argnums=(1,))
-    return prefill_jit, decode_jit, (p_sh, c_sh)
+    return prefill_jit, decode_jit, (p_sh, c_sh, logits_sh)
 
 
 def _dp(mesh: Mesh) -> int:
@@ -54,8 +71,11 @@ def _dp(mesh: Mesh) -> int:
 
 def greedy_generate(api: ModelApi, params, batch: Dict, steps: int,
                     cache_len: int):
-    """Reference generation loop (CPU-scale); real serving drives the jitted
-    fns from launch/serve.py with continuous batching."""
+    """Reference generation loop, one static batch in lockstep — the parity
+    oracle for the continuous-batching engine (``runtime.engine``): per-slot
+    decode is row-wise independent, so the engine's tokens for a request
+    must match a batch-1 greedy run of the same prompt token for token
+    (tests/test_engine.py asserts this, dense and sparse)."""
     cache, logits = api.prefill(params, batch, cache_len=cache_len)
     toks = [jnp.argmax(logits, -1).astype(jnp.int32)[:, None]]
     for _ in range(steps - 1):
