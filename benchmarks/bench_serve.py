@@ -1,22 +1,33 @@
-"""Serving-throughput benchmark: static vs continuous batching.
+"""Serving-throughput benchmark: static vs per-step vs fused-chunk decode.
 
 Drives the slot-pool engine (``repro.runtime.engine``) over a deterministic
-mixed prompt/gen-length request trace (reduced config, CPU-scale) under the
-two scheduler policies.  Both policies share one memoized set of jitted
-prefill/decode fns and are timed on a warm second engine, so the measured
-gap is pure scheduling: static batching admits a fresh group only when the
-pool has fully drained (the longest generation in each group idles every
-other slot), continuous batching backfills freed slots from the queue every
-step.  The headline column is tok/s; ``tok_per_step`` (emitted tokens per
-pooled decode step = mean slot utilization) is the wall-clock-free twin the
-tier-2 test asserts on.
+mixed prompt/gen-length request trace (reduced config, CPU-scale) under
+three configurations:
 
-Writes benchmarks/out/bench_serve.csv.
+  static        step-wise decode, admission only on a drained pool
+  continuous    step-wise decode (decode_chunk=1) — the PR 3 hot path:
+                one decode dispatch + argmax + host sync per token
+  continuous-chunked
+                the fused device-resident hot path (decode_chunk=8):
+                decode -> argmax -> feedback -> bookkeeping scanned on
+                device, one host sync per 8 steps (DESIGN.md Section 9)
+
+Engines sharing a decode_chunk share one memoized set of jitted fns and
+are timed on a warm second run, so the static/continuous gap is pure
+scheduling and the continuous/chunked gap is pure host-synchronization.
+The headline column is tok/s; ``host_syncs_per_token`` is the wall-clock-
+free twin the serve-smoke CI stage bounds.
+
+Writes benchmarks/out/bench_serve.csv; ``--json`` additionally emits
+benchmarks/out/BENCH_serve.json so the perf trajectory is machine-readable
+across PRs.
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import json
+import pathlib
 import time
 
 import jax
@@ -29,32 +40,47 @@ from .common import emit, write_csv
 
 ARCH = "llama3.2-1b"
 SLOTS = 4
+CHUNK = 8
 PROMPT_LENS = (8, 16, 24)
 # heavy-tailed generation lengths (sampled uniformly from the tuple, so
 # repeats are weights): most requests are short, ~1 in 8 is a straggler —
-# the regime where a static group idles every slot on its longest member
-GEN_LENS = (3, 3, 4, 4, 6, 6, 8, 28)
+# the regime where a static group idles every slot on its longest member,
+# and long enough that the fused path sustains full 8-step chunks (the
+# chunk-length ladder shortens chunks near each request's end)
+GEN_LENS = (12, 12, 16, 16, 24, 24, 32, 112)
+# (policy, decode_chunk, fused): fused=False is the preserved PR 3 per-step
+# hot path — the baseline the acceptance criterion compares against
+CONFIGS = (("static", 1, False), ("continuous", 1, False),
+           ("continuous", CHUNK, True))
 
 
-def _make_engine(api, params, factory_cache, policy, cache_len):
+def _name(policy: str, fused: bool) -> str:
+    return f"{policy}-chunked" if fused else policy
+
+
+def _make_engine(api, params, factory_cache, policy, cache_len, chunk,
+                 fused):
     def factory():
-        if "fns" not in factory_cache:
+        if chunk not in factory_cache:
             from repro.runtime.engine import _default_serve_fns
-            factory_cache["fns"] = _default_serve_fns(api, cache_len)
-        return factory_cache["fns"]
+            factory_cache[chunk] = _default_serve_fns(api, cache_len, chunk)
+        return factory_cache[chunk]
 
     return ServeEngine(api, params, num_slots=SLOTS, cache_len=cache_len,
-                       policy=policy, fns_factory=factory)
+                       policy=policy, fns_factory=factory,
+                       decode_chunk=chunk, fused=fused)
 
 
-def run(fast: bool = True) -> None:
+def run(fast: bool = True, json_out: bool = False) -> None:
     n_req = 16 if fast else 48
-    # mid-sized config: big enough that a pooled decode step is compute-
-    # (not dispatch-) bound on CPU, so the step-count gap between the two
-    # policies is what the wall clock sees
+    # sized for the dispatch-bound decode regime the fused chunk targets: a
+    # pooled decode step does real GEMV work but completes in O(host
+    # round-trip) time — on CPU that is a small model; on TPU a batch-4
+    # decode GEMV of a 1B+ model sits in the same regime (~100us step vs
+    # ~ms host loop), which is why PR 3's per-token sync idles the core
     cfg = dataclasses.replace(get_config(ARCH).reduced(),
-                              d_model=256, head_dim=64, d_ff=1024,
-                              num_layers=4, vocab_size=512)
+                              d_model=96, head_dim=24, d_ff=384,
+                              num_layers=2, vocab_size=256)
     api = build_model(cfg)
     params = api.init(jax.random.PRNGKey(0))
     cache_len = max(PROMPT_LENS) + max(GEN_LENS) + 1
@@ -64,44 +90,99 @@ def run(fast: bool = True) -> None:
     factory_cache: dict = {}
     rows = []
     results = {}
-    for policy in ("static", "continuous"):
-        # cold engine traces the jits (shared via factory_cache), warm
-        # engine is timed — both policies run identical executables
-        _make_engine(api, params, factory_cache, policy, cache_len
-                     ).run(trace())
-        eng = _make_engine(api, params, factory_cache, policy, cache_len)
-        t0 = time.perf_counter()
-        outs = eng.run(trace())
-        dt = time.perf_counter() - t0
-        assert len(outs) == n_req and all(o.finished >= 0
-                                          for o in outs.values())
+    # first pass traces every jit (prefill buckets, chunk ladder, insert —
+    # shared via factory_cache per chunk), then the *same* engines re-run
+    # fresh copies of the trace with stats zeroed, so the timed passes
+    # execute fully warm code.  Wall clock is best-of-3 with the repeat
+    # rounds interleaved across configs: min is the least-contended
+    # estimate on a shared box, and interleaving keeps a contention burst
+    # from landing on one config's entire sample (the per-trace step/sync
+    # counts are deterministic either way).
+    engines, warm_retraces, best = {}, {}, {}
+    for policy, chunk, fused in CONFIGS:
+        name = _name(policy, fused)
+        eng = _make_engine(api, params, factory_cache, policy, cache_len,
+                           chunk, fused)
+        eng.run(trace())
+        engines[name] = eng
+        warm_retraces[name] = eng.stats["retraces"]
+        best[name] = float("inf")
+    for _ in range(3):
+        for policy, chunk, fused in CONFIGS:
+            name = _name(policy, fused)
+            eng = engines[name]
+            eng.stats = {k: 0 for k in eng.stats}
+            t0 = time.perf_counter()
+            outs = eng.run(trace())
+            best[name] = min(best[name], time.perf_counter() - t0)
+            assert len(outs) == n_req and all(o.finished >= 0
+                                              for o in outs.values())
+    for policy, chunk, fused in CONFIGS:
+        name = _name(policy, fused)
+        eng, dt = engines[name], best[name]
         toks = eng.stats["emitted"]
         tok_s = toks / dt
         tok_step = toks / max(eng.stats["decode_steps"], 1)
-        results[policy] = (tok_s, tok_step, eng, dt)
-        emit(f"serve/{ARCH}/{policy}", dt * 1e6 / toks,
+        syncs_tok = eng.stats["host_syncs"] / toks
+        results[name] = dict(
+            policy=policy, decode_chunk=chunk, requests=n_req, slots=SLOTS,
+            emitted=toks, decode_steps=eng.stats["decode_steps"],
+            chunk_calls=eng.stats["chunk_calls"],
+            prefill_calls=eng.stats["prefill_calls"],
+            prefill_buckets=sorted(eng.prefill_buckets),
+            retraces=warm_retraces[name],
+            host_syncs_per_token=round(syncs_tok, 4),
+            wall_s=round(dt, 4), tok_s=round(tok_s, 1),
+            tok_per_step=round(tok_step, 3))
+        emit(f"serve/{ARCH}/{name}", dt * 1e6 / toks,
              f"tok_s={tok_s:.1f};tok_per_step={tok_step:.2f};"
+             f"syncs_per_tok={syncs_tok:.3f};"
              f"decode_steps={eng.stats['decode_steps']}")
-        rows.append({"policy": policy, "requests": n_req, "slots": SLOTS,
-                     "emitted": toks,
+        rows.append({"config": name, "requests": n_req, "slots": SLOTS,
+                     "emitted": toks, "decode_chunk": chunk,
                      "decode_steps": eng.stats["decode_steps"],
                      "prefill_calls": eng.stats["prefill_calls"],
+                     "host_syncs_per_token": round(syncs_tok, 4),
                      "wall_s": round(dt, 4), "tok_s": round(tok_s, 1),
                      "tok_per_step": round(tok_step, 3)})
-    speedup = results["continuous"][0] / results["static"][0]
-    rows.append({"policy": "continuous/static", "requests": n_req,
-                 "slots": SLOTS, "emitted": "",
+    sched_speedup = (results["continuous"]["tok_s"] /
+                     results["static"]["tok_s"])
+    fused_speedup = (results["continuous-chunked"]["tok_s"] /
+                     results["continuous"]["tok_s"])
+    rows.append({"config": "continuous/static", "requests": n_req,
+                 "slots": SLOTS, "emitted": "", "decode_chunk": "",
                  "decode_steps": "", "prefill_calls": "",
-                 "wall_s": "", "tok_s": round(speedup, 3),
-                 "tok_per_step": round(results["continuous"][1] /
-                                       results["static"][1], 3)})
-    print(f"# bench_serve -> {write_csv('bench_serve', rows)} "
-          f"(continuous/static tok/s = {speedup:.2f}x)")
+                 "host_syncs_per_token": "", "wall_s": "",
+                 "tok_s": round(sched_speedup, 3), "tok_per_step": ""})
+    rows.append({"config": "chunked/continuous", "requests": n_req,
+                 "slots": SLOTS, "emitted": "", "decode_chunk": "",
+                 "decode_steps": "", "prefill_calls": "",
+                 "host_syncs_per_token": "", "wall_s": "",
+                 "tok_s": round(fused_speedup, 3), "tok_per_step": ""})
+    path = write_csv("bench_serve", rows)
+    print(f"# bench_serve -> {path} (continuous/static tok/s = "
+          f"{sched_speedup:.2f}x, chunked/continuous tok/s = "
+          f"{fused_speedup:.2f}x)")
+    if json_out:
+        out = {
+            "arch": ARCH, "backend": jax.default_backend(),
+            "trace": {"requests": n_req, "slots": SLOTS,
+                      "prompt_lens": list(PROMPT_LENS),
+                      "gen_lens": list(GEN_LENS), "seed": 7},
+            "configs": results,
+            "speedups": {"continuous_vs_static": round(sched_speedup, 3),
+                         "chunked_vs_continuous": round(fused_speedup, 3)},
+        }
+        jpath = pathlib.Path(__file__).parent / "out" / "BENCH_serve.json"
+        jpath.write_text(json.dumps(out, indent=2) + "\n")
+        print(f"# bench_serve json -> {jpath}")
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="longer trace (48 requests)")
+    ap.add_argument("--json", action="store_true",
+                    help="emit benchmarks/out/BENCH_serve.json")
     args = ap.parse_args()
-    run(fast=not args.full)
+    run(fast=not args.full, json_out=args.json)

@@ -12,5 +12,6 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 from repro.launch.serve import main
 
 main(["--arch", "llama3.2-1b", "--reduced", "--slots", "3",
-      "--requests", "6", "--prompt-lens", "8,12,16", "--gen-lens", "4,6,8",
-      "--arrival-every", "1", "--sparsity", "0.8", "--parity"])
+      "--requests", "6", "--prompt-lens", "8,12,16", "--gen-lens", "6,10,14",
+      "--arrival-every", "1", "--sparsity", "0.8", "--parity",
+      "--decode-chunk", "8", "--max-syncs-per-token", "0.25"])

@@ -29,9 +29,18 @@ echo "== tier-2: serving-engine e2e (all families, dense + sparse)"
 PYTHONPATH="${PYPATH}${PYTHONPATH:+:$PYTHONPATH}" \
     python -m pytest -x -q -m tier2
 
-echo "== serve smoke: continuous-batching engine, reduced config + parity"
+echo "== serve smoke: fused-chunk engine, bucketed prefill, parity, and"
+echo "==   host_syncs/token <= 1/4 (asserted inside via --max-syncs-per-token)"
 PYTHONPATH="${PYPATH}${PYTHONPATH:+:$PYTHONPATH}" \
     python examples/sparse_serve.py
+
+echo "== serve bench: static / per-step (PR 3) / fused-chunk decode"
+# smoke-mode run: rewrites bench_serve.csv with 16-request rows (like the
+# other benchmark smokes, restore before committing); the committed
+# BENCH_serve.json perf record is only written by `bench_serve --full
+# --json` and never touched here
+PYTHONPATH="${PYPATH}${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m benchmarks.bench_serve
 
 echo "== benchmark smoke: fig5 (fast mode, batched sweep + results cache)"
 PYTHONPATH="${PYPATH}${PYTHONPATH:+:$PYTHONPATH}" \

@@ -55,9 +55,20 @@ class GriffinWeights:
 
     @property
     def density(self) -> float:
-        total_blocks = (self.k // self.block_k) * \
-            int(np.prod(self.cnt.shape))
-        return float(np.asarray(self.cnt).sum()) / max(total_blocks, 1)
+        """Fraction of surviving (bk x bn) blocks.  Memoized per instance:
+        the computation device-syncs ``cnt``, and callers walk it per GEMM
+        leaf (``runtime.engine.weight_sparsity`` at every engine
+        construction).  The memo lives in ``__dict__`` — not a dataclass
+        field, so pytree flatten/unflatten (which rebuilds instances from
+        the registered fields only) neither carries a stale value onto
+        tree-mapped copies nor breaks; fresh instances recompute lazily."""
+        memo = self.__dict__.get("_density_memo")
+        if memo is None:
+            total_blocks = (self.k // self.block_k) * \
+                int(np.prod(self.cnt.shape))
+            memo = float(np.asarray(self.cnt).sum()) / max(total_blocks, 1)
+            self.__dict__["_density_memo"] = memo
+        return memo
 
     @property
     def compaction(self) -> float:

@@ -39,10 +39,11 @@ def build_engine(api, params, args, mesh) -> ServeEngine:
     return ServeEngine(
         api, params, num_slots=args.slots, cache_len=cache_len,
         fns_factory=lambda: jit_serve_fns(api, mesh, args.slots, cache_len,
-                                          params=params),
+                                          params=params,
+                                          decode_chunk=args.decode_chunk),
         policy=args.policy, use_kernels=args.use_kernels,
         interpret=args.use_kernels and jax.default_backend() == "cpu",
-        measure_every=args.measure_every)
+        measure_every=args.measure_every, decode_chunk=args.decode_chunk)
 
 
 def main(argv=None) -> None:
@@ -62,6 +63,12 @@ def main(argv=None) -> None:
     ap.add_argument("--policy", choices=("continuous", "static"),
                     default="continuous")
     ap.add_argument("--measure-every", type=int, default=8)
+    ap.add_argument("--decode-chunk", type=int, default=8,
+                    help="fused decode steps per host round-trip (1 = the "
+                         "per-step PR 3 hot path)")
+    ap.add_argument("--max-syncs-per-token", type=float, default=0.0,
+                    help="assert host_syncs/token <= this after the run "
+                         "(0 disables; scripts/ci.sh serve-smoke uses 0.25)")
     ap.add_argument("--model-parallel", type=int, default=1)
     ap.add_argument("--parity", action="store_true",
                     help="assert engine tokens == greedy_generate per "
@@ -95,13 +102,26 @@ def main(argv=None) -> None:
     outs = engine.run(reqs)
     dt = time.time() - t0
     toks = engine.stats["emitted"]
+    syncs_per_tok = engine.stats["host_syncs"] / max(toks, 1)
     print(f"served {len(reqs)} requests / {toks} tokens in {dt:.2f}s "
           f"({toks / dt:.1f} tok/s on {jax.default_backend()}); "
-          f"{engine.stats['decode_steps']} decode steps, "
-          f"{engine.stats['prefill_calls']} prefills, "
+          f"{engine.stats['decode_steps']} decode steps in "
+          f"{engine.stats['chunk_calls']} fused chunks "
+          f"(decode_chunk={args.decode_chunk}), "
+          f"{engine.stats['prefill_calls']} prefills over buckets "
+          f"{sorted(engine.prefill_buckets)}, "
+          f"{syncs_per_tok:.3f} host syncs/token, "
           f"mode history {[(s, m.value) for s, m in engine.mode_history]}")
     first = outs[reqs[0].rid]
     print("request 0 token ids:", np.asarray(first.tokens[:12]))
+
+    if args.max_syncs_per_token > 0:
+        assert syncs_per_tok <= args.max_syncs_per_token, (
+            f"host syncs/token {syncs_per_tok:.3f} exceeds "
+            f"{args.max_syncs_per_token} — the fused decode path is "
+            "synchronizing per step again")
+        print(f"host-sync budget OK: {syncs_per_tok:.3f} <= "
+              f"{args.max_syncs_per_token}")
 
     if args.parity:
         if len(engine.mode_history) > 1:
@@ -113,14 +133,16 @@ def main(argv=None) -> None:
             return
         for r in reqs:
             with engine._scope():
-                ref = greedy_generate(api, params, r.as_batch(),
-                                      steps=r.max_new_tokens,
-                                      cache_len=engine.cache_len)
+                ref = greedy_generate(
+                    api, params, r.as_batch(), steps=r.max_new_tokens,
+                    cache_len=engine.cache_len,
+                    prompt_bucket=engine.bucket_for(r.prompt_len))
             assert np.array_equal(np.asarray(outs[r.rid].tokens),
                                   np.asarray(ref[0])), (
                 f"request {r.rid} diverged from greedy oracle")
         print(f"parity OK: all {len(reqs)} requests token-identical to "
-              "greedy_generate")
+              "greedy_generate (bucketed prompts, decode_chunk="
+              f"{args.decode_chunk})")
 
 
 if __name__ == "__main__":

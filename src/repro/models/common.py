@@ -126,6 +126,24 @@ def write_kv_slot(cache: jax.Array, update: jax.Array, slot: jax.Array
     return jax.lax.dynamic_update_slice(cache, update, (0, slot, 0, 0))
 
 
+def length_mask(lengths: jax.Array, seq_len: int) -> jax.Array:
+    """(B,) true prompt lengths -> (B, S) bool validity mask for a
+    right-padded token batch (position i valid iff i < length).  The
+    bucketed-prefill path (runtime/engine.py, DESIGN.md Section 9) pads
+    prompts up to a power-of-two bucket; this mask is what each family's
+    prefill threads into its state updates so pad positions are identity."""
+    return jnp.arange(seq_len)[None, :] < lengths[:, None]
+
+
+def take_last(x: jax.Array, lengths: jax.Array) -> jax.Array:
+    """Per-row last *valid* timestep of a right-padded (B, S, D) tensor:
+    row b -> x[b, lengths[b] - 1].  The bucketed replacement for
+    ``x[:, -1]`` (which would read a pad position)."""
+    idx = (lengths - 1).astype(jnp.int32)[:, None, None]
+    idx = jnp.broadcast_to(idx, (x.shape[0], 1, x.shape[-1]))
+    return jnp.take_along_axis(x, idx, axis=1)[:, 0]
+
+
 def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
     dt = x.dtype
     x = x.astype(jnp.float32)

@@ -58,8 +58,13 @@ def init_moe(key, d_model: int, d_ff: int, moe: MoEConfig, dtype) -> Dict:
 
 
 def moe_ffn(p: Dict, x: jax.Array, moe: MoEConfig, act: str = "silu",
-            drop_free: bool = False) -> Tuple[jax.Array, jax.Array]:
+            drop_free: bool = False, valid=None) -> Tuple[jax.Array, jax.Array]:
     """x: (N, D) token major.  Returns (out (N, D), aux load-balance loss).
+
+    ``valid`` is an optional (N,) token-validity mask (bucketed prefill
+    right-pads prompts, runtime/engine.py): invalid tokens are routed to the
+    dump row — they consume no expert capacity and contribute nothing, so a
+    padded prompt's kept-token set cannot be displaced by its own padding.
 
     ``drop_free=True`` sets the expert capacity to N (each expert appears at
     most once per token's top-k, so no token can ever be dropped).  Decode
@@ -82,7 +87,12 @@ def moe_ffn(p: Dict, x: jax.Array, moe: MoEConfig, act: str = "silu",
     """
     N, D = x.shape
     E, K = moe.num_experts, moe.top_k
-    C = N if drop_free else max(1, int(N * moe.capacity_factor * K / E))
+    # a valid mask means bucketed serving prefill: run drop-free there too —
+    # trained capacity would be computed from the *padded* token count, so a
+    # prompt's kept-token set (hence its served tokens) would depend on
+    # which bucket it landed in
+    C = (N if drop_free or valid is not None
+         else max(1, int(N * moe.capacity_factor * K / E)))
     if isinstance(p["router"], GriffinWeights):
         gates = griffin_linear(x.astype(jnp.float32), p["router"])
     elif execution_context().use_kernels:
@@ -99,6 +109,11 @@ def moe_ffn(p: Dict, x: jax.Array, moe: MoEConfig, act: str = "silu",
     top_p, top_e = jax.lax.top_k(probs_full, K)           # (N, K)
     top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
     e_flat = top_e.reshape(N * K)
+    if valid is not None:
+        # invalid (pad) tokens route to pseudo-expert E: they sort after
+        # every real token, vanish from the capacity counts, and their
+        # (garbage) rank is overridden by the keep mask below
+        e_flat = jnp.where(jnp.repeat(valid, K), e_flat, E)
     # position of each (token, k) slot within its expert, in token order:
     # rank among equal-expert slots = stable-sort inverse
     order = jnp.argsort(e_flat, stable=True)              # group by expert
@@ -107,6 +122,8 @@ def moe_ffn(p: Dict, x: jax.Array, moe: MoEConfig, act: str = "silu",
     rank_in_expert = jnp.zeros(N * K, jnp.int32).at[order].set(
         jnp.arange(N * K, dtype=jnp.int32)) - starts[e_flat].astype(jnp.int32)
     keep = rank_in_expert < C
+    if valid is not None:
+        keep = keep & jnp.repeat(valid, K)
     slot = jnp.where(keep, e_flat * C + rank_in_expert, E * C)  # E*C = dropped
     # scatter tokens into the expert buffer (unique slots: plain set)
     buf = jnp.zeros((E * C + 1, D), x.dtype)

@@ -40,7 +40,8 @@ def _transformer_api(cfg: ModelConfig) -> ModelApi:
         return ce + 0.01 * aux
 
     def prefill_fn(params, batch, cache_len=None):
-        return transformer.prefill(cfg, params, batch["tokens"], cache_len)
+        return transformer.prefill(cfg, params, batch["tokens"], cache_len,
+                                   lengths=batch.get("lengths"))
 
     return ModelApi(
         cfg=cfg,
@@ -74,7 +75,8 @@ def _xlstm_api(cfg: ModelConfig) -> ModelApi:
                                      cfg.loss_chunk)
 
     def prefill_fn(params, batch, cache_len=None):
-        return xlstm.prefill(cfg, params, batch["tokens"], cache_len)
+        return xlstm.prefill(cfg, params, batch["tokens"], cache_len,
+                             lengths=batch.get("lengths"))
 
     def count(active=True):
         D = cfg.d_model
@@ -109,7 +111,8 @@ def _rglru_api(cfg: ModelConfig) -> ModelApi:
                                      cfg.loss_chunk)
 
     def prefill_fn(params, batch, cache_len=None):
-        return rglru.prefill(cfg, params, batch["tokens"], cache_len)
+        return rglru.prefill(cfg, params, batch["tokens"], cache_len,
+                             lengths=batch.get("lengths"))
 
     def count(active=True):
         D, F = cfg.d_model, cfg.d_ff
@@ -142,7 +145,7 @@ def _whisper_api(cfg: ModelConfig) -> ModelApi:
 
     def prefill_fn(params, batch, cache_len=None):
         return whisper.prefill(cfg, params, batch["tokens"], batch["frames"],
-                               cache_len)
+                               cache_len, lengths=batch.get("lengths"))
 
     def count(active=True):
         D, H, hd, F = cfg.d_model, cfg.num_heads, cfg.hd, cfg.d_ff

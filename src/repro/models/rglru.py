@@ -16,8 +16,8 @@ import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
 from .attention import decode_attention, local_attention
-from .common import (act_fn, dense_init, layer_scan, rms_norm, rope,
-                     stack_layers, write_kv_slot)
+from .common import (act_fn, dense_init, layer_scan, length_mask, rms_norm,
+                     rope, stack_layers, take_last, write_kv_slot)
 
 Params = Dict[str, Any]
 LRU_C = 8.0
@@ -45,30 +45,52 @@ def init_rec_block(cfg: ModelConfig, key) -> Params:
     }
 
 
-def _causal_conv(x: jax.Array, w: jax.Array, state=None):
+def _causal_conv(x: jax.Array, w: jax.Array, state=None, lengths=None):
     """Depthwise causal conv along time.  x: (B,S,R), w: (cw,R).
-    state: (B, cw-1, R) previous inputs for decode."""
+    state: (B, cw-1, R) previous inputs for decode.
+
+    ``lengths``: optional (B,) true lengths of a right-padded batch
+    (bucketed prefill).  The conv is causal, so real outputs never see the
+    pads — but the carried decode state must be the last ``cw-1`` *real*
+    inputs, which sit at positions ``length-cw+1..length-1`` rather than at
+    the array tail; they are gathered per row."""
     cw = w.shape[0]
     if state is None:
         xp = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
     else:
         xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
     out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(cw))
-    new_state = xp[:, -(cw - 1):] if cw > 1 else None
+    if cw == 1:
+        new_state = None
+    elif lengths is None:
+        new_state = xp[:, -(cw - 1):]
+    else:
+        # xp index of input position p is p + cw - 1 (left pad); want
+        # positions length-cw+1..length-1 -> xp indices length..length+cw-2
+        idx = lengths[:, None] + jnp.arange(cw - 1)[None, :]
+        new_state = jnp.take_along_axis(xp, idx[..., None], axis=1)
     return out.astype(x.dtype), new_state
 
 
-def _rg_lru(x: jax.Array, p: Params, h0=None):
+def _rg_lru(x: jax.Array, p: Params, h0=None, mask=None):
     """x: (B,S,R) -> (B,S,R), h_last.  Diagonal gated linear recurrence:
       log a_t = -c * softplus(lam) * sigmoid(x W_rg)
       h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (sigmoid(x W_ig) * x_t)
-    evaluated as an associative scan on (a, b) pairs."""
+    evaluated as an associative scan on (a, b) pairs.
+
+    ``mask``: optional (B, S) validity mask of a right-padded batch
+    (bucketed prefill): pad steps run with (a, b) = (1, 0) — an exact
+    identity — so ``h_last`` is the state at each row's last real token."""
     xf = x.astype(jnp.float32)
     r = jax.nn.sigmoid(xf @ p["w_rg"].astype(jnp.float32))
     i = jax.nn.sigmoid(xf @ p["w_ig"].astype(jnp.float32))
     log_a = -LRU_C * jax.nn.softplus(p["lam"]) * r
     a = jnp.exp(log_a)
     b = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * xf)
+    if mask is not None:
+        m3 = mask[:, :, None]
+        a = jnp.where(m3, a, 1.0)
+        b = jnp.where(m3, b, 0.0)
     if h0 is not None:
         # fold the carried state into the first step
         b = b.at[:, 0].add(a[:, 0] * h0)
@@ -82,14 +104,16 @@ def _rg_lru(x: jax.Array, p: Params, h0=None):
     return h.astype(x.dtype), h[:, -1]
 
 
-def rec_mix(cfg: ModelConfig, p: Params, x: jax.Array, state=None):
-    """Recurrent mixing block.  state: (h0 (B,R) f32, conv (B,cw-1,R))."""
+def rec_mix(cfg: ModelConfig, p: Params, x: jax.Array, state=None,
+            mask=None, lengths=None):
+    """Recurrent mixing block.  state: (h0 (B,R) f32, conv (B,cw-1,R)).
+    ``mask``/``lengths`` describe right padding (bucketed prefill)."""
     h = rms_norm(x, p["ln"], cfg.norm_eps)
     xr = h @ p["w_x"]
     gate = jax.nn.gelu((h @ p["w_gate"]).astype(jnp.float32)).astype(x.dtype)
     h0, conv_state = (None, None) if state is None else state
-    xr, new_conv = _causal_conv(xr, p["conv"], conv_state)
-    hr, h_last = _rg_lru(xr, p, h0)
+    xr, new_conv = _causal_conv(xr, p["conv"], conv_state, lengths=lengths)
+    hr, h_last = _rg_lru(xr, p, h0, mask=mask)
     out = (hr * gate) @ p["w_out"]
     return (x + out).astype(x.dtype), (h_last, new_conv)
 
@@ -242,15 +266,25 @@ def init_cache(cfg: ModelConfig, batch: int, length: int) -> Params:
 
 
 def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array,
-            cache_len=None):
+            cache_len=None, lengths=None):
+    """``lengths``: optional (B,) true prompt lengths of a right-padded
+    batch (bucketed prefill).  Local attention is causal (real positions
+    never see pads); the recurrent/conv state updates are masked to
+    identity at pads; pad K/V rows sit in slots ``length..S-1`` where the
+    decode loop overwrites slot ``pos % clen`` before its position mask
+    admits it (requires the padded length to fit the window cache — the
+    bucket policy in runtime/engine.py clamps to it)."""
     B, S = tokens.shape
     positions = jnp.arange(S)
     clen = min(cache_len or S, cfg.window)
+    mask = None if lengths is None else length_mask(lengths, S)
+    if lengths is not None:
+        assert S <= clen, "bucketed prefill must fit the window cache"
 
     def group(x, gp):
-        x, st1 = rec_mix(cfg, gp["rec1"], x)
+        x, st1 = rec_mix(cfg, gp["rec1"], x, mask=mask, lengths=lengths)
         x = mlp(cfg, gp["mlp1"], x)
-        x, st2 = rec_mix(cfg, gp["rec2"], x)
+        x, st2 = rec_mix(cfg, gp["rec2"], x, mask=mask, lengths=lengths)
         x = mlp(cfg, gp["mlp2"], x)
         x, (k, v) = attn_mix(cfg, gp["attn"], x, positions)
         x = mlp(cfg, gp["mlp3"], x)
@@ -260,7 +294,7 @@ def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array,
                    jnp.stack([st1[1], st2[1]]), k, v)
 
     def tail(x, tp):
-        x, st = rec_mix(cfg, tp["rec"], x)
+        x, st = rec_mix(cfg, tp["rec"], x, mask=mask, lengths=lengths)
         x = mlp(cfg, tp["mlp"], x)
         return x, st
 
@@ -270,7 +304,12 @@ def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array,
     x, (tail_h, tail_conv) = layer_scan(cfg.scan_layers, tail, x,
                                         params["tail"])
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
-    logits = x[:, -1] @ params["head"]
+    if lengths is None:
+        last, pos = x[:, -1], jnp.asarray(S - 1, jnp.int32)
+    else:
+        last = take_last(x, lengths)
+        pos = (lengths - 1).astype(jnp.int32)          # per-row (B,) vector
+    logits = last @ params["head"]
     # roll the window cache so that slot (pos % clen) is consistent; short
     # prompts pad the tail so the cache is always exactly clen long — the
     # arena shape init_cache declares (decode writes slots S, S+1, ... and
@@ -283,8 +322,7 @@ def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array,
     ks = jnp.roll(ks, shift, axis=2)
     vs = jnp.roll(vs, shift, axis=2)
     cache = {"rec_h": rec_h, "rec_conv": rec_conv, "tail_h": tail_h,
-             "tail_conv": tail_conv, "k": ks, "v": vs,
-             "pos": jnp.asarray(S - 1, jnp.int32)}
+             "tail_conv": tail_conv, "k": ks, "v": vs, "pos": pos}
     return cache, logits
 
 

@@ -25,7 +25,8 @@ import jax.numpy as jnp
 from ..configs.base import ModelConfig
 from .attention import attention, decode_attention
 from .common import (act_fn, dense_init, griffin_linear, layer_scan,
-                     remat_fn, rms_norm, rope, stack_layers, write_kv_slot)
+                     length_mask, remat_fn, rms_norm, rope, stack_layers,
+                     take_last, write_kv_slot)
 from .moe import init_moe, moe_ffn
 
 Params = Dict[str, Any]
@@ -80,12 +81,14 @@ def unembed(cfg: ModelConfig, params: Params) -> jax.Array:
 # blocks
 # ---------------------------------------------------------------------------
 
-def _ffn(cfg: ModelConfig, p: Params, x: jax.Array,
-         decode: bool = False) -> Tuple[jax.Array, jax.Array]:
+def _ffn(cfg: ModelConfig, p: Params, x: jax.Array, decode: bool = False,
+         valid=None) -> Tuple[jax.Array, jax.Array]:
     if cfg.moe:
         B, S, D = x.shape
         out, aux = moe_ffn(p["moe"], x.reshape(B * S, D), cfg.moe, cfg.act,
-                           drop_free=decode)
+                           drop_free=decode,
+                           valid=None if valid is None
+                           else valid.reshape(B * S))
         return out.reshape(B, S, D), aux
     h = act_fn(cfg.act)(griffin_linear(x, p["w_gate"])) * \
         griffin_linear(x, p["w_up"])
@@ -108,8 +111,12 @@ def _qkv(cfg: ModelConfig, p: Params, x: jax.Array, positions: jax.Array):
 
 
 def block_train(cfg: ModelConfig, p: Params, x: jax.Array,
-                positions: jax.Array, return_kv: bool = False):
-    """Full-sequence block (train / prefill)."""
+                positions: jax.Array, return_kv: bool = False, valid=None):
+    """Full-sequence block (train / prefill).  ``valid`` is the optional
+    (B, S) right-pad mask of the bucketed-prefill path: causal attention
+    already keeps pads out of real positions (pads sit *after* every real
+    token), so only the MoE dispatch needs it (pads must not consume expert
+    capacity)."""
     h = rms_norm(x, p["ln1"], cfg.norm_eps)
     q, k, v = _qkv(cfg, p, h, positions)
     o = attention(q, k, v, causal=True, window=cfg.window,
@@ -117,7 +124,7 @@ def block_train(cfg: ModelConfig, p: Params, x: jax.Array,
     B, S, _, _ = q.shape
     x = x + griffin_linear(o.reshape(B, S, -1), p["wo"]).astype(x.dtype)
     h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
-    f, aux = _ffn(cfg, p, h2)
+    f, aux = _ffn(cfg, p, h2, valid=valid)
     x = (x + f).astype(x.dtype)
     return (x, aux, (k, v)) if return_kv else (x, aux)
 
@@ -156,19 +163,23 @@ def block_decode(cfg: ModelConfig, p: Params, x: jax.Array, k_cache, v_cache,
 # ---------------------------------------------------------------------------
 
 def forward_hidden(cfg: ModelConfig, params: Params, tokens: jax.Array,
-                   return_kv: bool = False):
+                   return_kv: bool = False, lengths=None):
     """Embed + scan over layers.  Returns final hidden (and per-layer K/V
-    stacked over layers when ``return_kv``)."""
+    stacked over layers when ``return_kv``).  ``lengths``: optional (B,)
+    true prompt lengths of a right-padded batch (bucketed prefill)."""
     x = params["embed"][tokens]
     positions = jnp.arange(tokens.shape[1])
     aux0 = jnp.zeros((), jnp.float32)
+    valid = (None if lengths is None
+             else length_mask(lengths, tokens.shape[1]))
 
     def body(carry, lp):
         x, aux = carry
         if return_kv:
-            x, a, kv = block_train(cfg, lp, x, positions, return_kv=True)
+            x, a, kv = block_train(cfg, lp, x, positions, return_kv=True,
+                                   valid=valid)
             return (x, aux + a), kv
-        x, a = block_train(cfg, lp, x, positions)
+        x, a = block_train(cfg, lp, x, positions, valid=valid)
         return (x, aux + a), None
 
     fn = remat_fn(cfg, body)
@@ -189,10 +200,19 @@ def init_cache(cfg: ModelConfig, batch: int, length: int) -> Params:
 
 
 def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array,
-            cache_len: Optional[int] = None) -> Tuple[Params, jax.Array]:
-    """Process a prompt, build the cache, return (cache, last-token logits)."""
+            cache_len: Optional[int] = None,
+            lengths: Optional[jax.Array] = None) -> Tuple[Params, jax.Array]:
+    """Process a prompt, build the cache, return (cache, last-token logits).
+
+    ``lengths``: optional (B,) true prompt lengths of a right-padded batch
+    (bucketed prefill, DESIGN.md Section 9).  Pad K/V rows land in cache
+    slots ``length..S-1`` — dead weight the decode loop overwrites slot
+    ``pos`` *before* its position mask admits it, so they are never read.
+    Requires the padded length to fit the cache (the bucket policy in
+    runtime/engine.py clamps to it)."""
     B, S = tokens.shape
-    x, _, (ks, vs) = forward_hidden(cfg, params, tokens, return_kv=True)
+    x, _, (ks, vs) = forward_hidden(cfg, params, tokens, return_kv=True,
+                                    lengths=lengths)
     clen = cache_len or S
     clen = min(clen, cfg.window) if cfg.window else clen
     if clen >= S:
@@ -200,9 +220,15 @@ def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array,
         ks = jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
         vs = jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
     else:  # keep the last window
+        assert lengths is None, "bucketed prefill must fit the cache window"
         ks, vs = ks[:, :, S - clen:], vs[:, :, S - clen:]
-    logits = griffin_linear(x[:, -1], unembed(cfg, params))
-    cache = {"k": ks, "v": vs, "pos": jnp.asarray(S - 1, jnp.int32)}
+    if lengths is None:
+        last, pos = x[:, -1], jnp.asarray(S - 1, jnp.int32)
+    else:
+        last = take_last(x, lengths)
+        pos = (lengths - 1).astype(jnp.int32)          # per-row (B,) vector
+    logits = griffin_linear(last, unembed(cfg, params))
+    cache = {"k": ks, "v": vs, "pos": pos}
     return cache, logits
 
 

@@ -23,7 +23,7 @@ import numpy as np
 from ..configs.base import ModelConfig
 from .attention import attention, decode_attention
 from .common import (act_fn, dense_init, griffin_linear, layer_scan,
-                     rms_norm, rope, stack_layers, write_kv_slot)
+                     rms_norm, rope, stack_layers, take_last, write_kv_slot)
 
 Params = Dict[str, Any]
 
@@ -162,7 +162,12 @@ def init_cache(cfg: ModelConfig, batch: int, length: int) -> Params:
 
 
 def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array,
-            frames: jax.Array, cache_len=None):
+            frames: jax.Array, cache_len=None, lengths=None):
+    """``lengths``: optional (B,) true prompt lengths of a right-padded
+    batch (bucketed prefill, DESIGN.md Section 9).  Decoder self-attention
+    is causal, so real positions never see the pads; pad K/V rows sit in
+    slots ``length..S-1`` where the decode loop overwrites slot ``pos``
+    before its position mask admits it."""
     B, S = tokens.shape
     x, _, kvs = forward_hidden(cfg, params, tokens, frames, return_kv=True)
     (ks, vs), (xks, xvs) = kvs
@@ -171,9 +176,13 @@ def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array,
     if pad > 0:
         ks = jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
         vs = jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
-    logits = griffin_linear(x[:, -1], params["head"])
-    return {"k": ks, "v": vs, "xk": xks, "xv": xvs,
-            "pos": jnp.asarray(S - 1, jnp.int32)}, logits
+    if lengths is None:
+        last, pos = x[:, -1], jnp.asarray(S - 1, jnp.int32)
+    else:
+        last = take_last(x, lengths)
+        pos = (lengths - 1).astype(jnp.int32)          # per-row (B,) vector
+    logits = griffin_linear(last, params["head"])
+    return {"k": ks, "v": vs, "xk": xks, "xv": xvs, "pos": pos}, logits
 
 
 def decode_step(cfg: ModelConfig, params: Params, cache: Params,

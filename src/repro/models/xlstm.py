@@ -18,8 +18,8 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
-from .common import (dense_init, griffin_linear, layer_scan, rms_norm,
-                     stack_layers)
+from .common import (dense_init, griffin_linear, layer_scan, length_mask,
+                     rms_norm, stack_layers, take_last)
 
 Params = Dict[str, Any]
 MIN_NORM = 1e-6
@@ -101,8 +101,16 @@ def _mlstm_chunk(q, k, v, i_pre, f_pre, state):
 
 
 def mlstm_seq(cfg: ModelConfig, p: Params, x: jax.Array, state=None,
-              chunk: int = 64):
-    """Full mLSTM block over a sequence.  x: (B, S, D)."""
+              chunk: int = 64, mask=None):
+    """Full mLSTM block over a sequence.  x: (B, S, D).
+
+    ``mask``: optional (B, S) validity mask of a right-padded batch
+    (bucketed prefill).  Pad positions are made exact state no-ops through
+    the gate pre-activations alone: the input gate is driven to -1e30 (its
+    exp vanishes from both the intra-chunk decay matrix and the chunk state
+    update) and the forget gate to +1e30 (log-sigmoid exactly 0, identity
+    decay), so (C, n, m) after the padded sequence equal the state at the
+    last real token."""
     B, S, D = x.shape
     H = cfg.num_heads
     din = int(cfg.proj_factor * D)
@@ -117,6 +125,10 @@ def mlstm_seq(cfg: ModelConfig, p: Params, x: jax.Array, state=None,
     v = jnp.einsum("bshd,hde->bshe", xh, p["wv"])
     i_pre = griffin_linear(xm, p["wi"])
     f_pre = griffin_linear(xm, p["wf"])
+    if mask is not None:
+        m3 = mask[:, :, None]
+        i_pre = jnp.where(m3, i_pre, jnp.asarray(-1e30, i_pre.dtype))
+        f_pre = jnp.where(m3, f_pre, jnp.asarray(1e30, f_pre.dtype))
     if state is None:
         state = mlstm_zero_state(cfg, B)
     L = min(chunk, S)
@@ -187,8 +199,15 @@ def slstm_zero_state(cfg: ModelConfig, batch: int):
     return (z, z, z, jnp.full((batch, H, hd), -1e30, jnp.float32))
 
 
-def slstm_seq(cfg: ModelConfig, p: Params, x: jax.Array, state=None):
-    """sLSTM block: strict recurrence over time (lax.scan)."""
+def slstm_seq(cfg: ModelConfig, p: Params, x: jax.Array, state=None,
+              mask=None):
+    """sLSTM block: strict recurrence over time (lax.scan).
+
+    ``mask``: optional (B, S) validity mask of a right-padded batch
+    (bucketed prefill).  The hidden state feeds back into the gates, so pad
+    steps must hold the *entire* carried state — each step computes
+    normally and then selects old-vs-new per row, leaving (c, n, h, m)
+    after the padded sequence exactly the state at the last real token."""
     B, S, D = x.shape
     H = cfg.num_heads
     hd = D // H
@@ -202,7 +221,10 @@ def slstm_seq(cfg: ModelConfig, p: Params, x: jax.Array, state=None):
 
     def step(st, xs):
         c, n, h, m = st
-        zx, ix, fx, ox = xs                                # (B,H,hd)
+        if mask is None:
+            zx, ix, fx, ox = xs                            # (B,H,hd)
+        else:
+            zx, ix, fx, ox, mt = xs
         rec = {g: jnp.einsum("bhd,hde->bhe", h, R[g])
                for g in ("z", "i", "f", "o")}
         zt = jnp.tanh(zx + rec["z"])
@@ -212,12 +234,20 @@ def slstm_seq(cfg: ModelConfig, p: Params, x: jax.Array, state=None):
         m_new = jnp.maximum(ft + m, it)
         i_s = jnp.exp(it - m_new)
         f_s = jnp.exp(ft + m - m_new)
-        c = f_s * c + i_s * zt
-        n = f_s * n + i_s
-        h_new = ot * c / jnp.maximum(n, MIN_NORM)
-        return (c, n, h_new, m_new), h_new
+        c_new = f_s * c + i_s * zt
+        n_new = f_s * n + i_s
+        h_new = ot * c_new / jnp.maximum(n_new, MIN_NORM)
+        if mask is not None:
+            sel = mt[:, None, None]
+            c_new = jnp.where(sel, c_new, c)
+            n_new = jnp.where(sel, n_new, n)
+            h_new = jnp.where(sel, h_new, h)
+            m_new = jnp.where(sel, m_new, m)
+        return (c_new, n_new, h_new, m_new), h_new
 
     xs = tuple(pre[g].swapaxes(0, 1) for g in ("z", "i", "f", "o"))
+    if mask is not None:
+        xs = xs + (mask.swapaxes(0, 1),)
     state, hs = jax.lax.scan(step, state, xs)
     h = hs.swapaxes(0, 1).reshape(B, S, D)
     h = rms_norm(h.astype(x.dtype), p["gn"], cfg.norm_eps)
@@ -304,20 +334,23 @@ def init_cache(cfg: ModelConfig, batch: int, length: int) -> Params:
     }
 
 
-def _scan_groups_with_state(cfg: ModelConfig, params, cache, x, chunk):
+def _scan_groups_with_state(cfg: ModelConfig, params, cache, x, chunk,
+                            mask=None):
     def group(x, xs):
         (mp, sp, mC, mn, mm, sc, sn, sh, sm) = xs
 
         def m_body(x, ms):
             lp, C, n, m = ms
-            x, (C, n, m) = mlstm_seq(cfg, lp, x, state=(C, n, m), chunk=chunk)
+            x, (C, n, m) = mlstm_seq(cfg, lp, x, state=(C, n, m), chunk=chunk,
+                                     mask=mask)
             return x, (C, n, m)
 
         x, mstate = jax.lax.scan(m_body, x, (mp, mC, mn, mm))
 
         def s_body(x, ss):
             lp, c, n, h, m = ss
-            x, (c, n, h, m) = slstm_seq(cfg, lp, x, state=(c, n, h, m))
+            x, (c, n, h, m) = slstm_seq(cfg, lp, x, state=(c, n, h, m),
+                                        mask=mask)
             return x, (c, n, h, m)
 
         x, sstate = jax.lax.scan(s_body, x, (sp, sc, sn, sh, sm))
@@ -333,14 +366,25 @@ def _scan_groups_with_state(cfg: ModelConfig, params, cache, x, chunk):
 
 
 def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array,
-            cache_len=None, chunk: int = 64):
+            cache_len=None, chunk: int = 64, lengths=None):
+    """``lengths``: optional (B,) true prompt lengths of a right-padded
+    batch (bucketed prefill).  Pad steps are exact state no-ops (see
+    ``mlstm_seq`` / ``slstm_seq``), so the carried recurrent state equals
+    the state at each row's last real token."""
     B, S = tokens.shape
     cache = init_cache(cfg, B, 0)
     x = params["embed"][tokens]
-    x, new_cache = _scan_groups_with_state(cfg, params, cache, x, chunk)
+    mask = None if lengths is None else length_mask(lengths, S)
+    x, new_cache = _scan_groups_with_state(cfg, params, cache, x, chunk,
+                                           mask=mask)
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
-    logits = griffin_linear(x[:, -1], params["head"])
-    new_cache["pos"] = jnp.asarray(S - 1, jnp.int32)
+    if lengths is None:
+        last, pos = x[:, -1], jnp.asarray(S - 1, jnp.int32)
+    else:
+        last = take_last(x, lengths)
+        pos = (lengths - 1).astype(jnp.int32)          # per-row (B,) vector
+    logits = griffin_linear(last, params["head"])
+    new_cache["pos"] = pos
     return new_cache, logits
 
 

@@ -1,35 +1,43 @@
 """Continuous-batching serving engine: slot-pool KV arena + FCFS scheduler
-+ per-step workload-category measurement (DESIGN.md Section 8).
++ device-resident decode hot path (DESIGN.md Sections 8-9).
 
 A fixed ``num_slots x cache_len`` cache arena is shared by all in-flight
 requests.  Each engine tick admits waiting requests into freed slots
-(prefilling them one at a time, interleaved with decode of the running
-slots) and then advances *every* running slot by one token with a single
-pooled, donated decode step — the decode GEMV work stays batched no matter
-how ragged the request lengths are.  Admission writes a freshly prefilled
-single-request cache into its slot in place (``dynamic_update_slice`` along
-the per-leaf batch axis, positions carried as a per-slot (B,) vector the
-model decode paths understand); eviction is just marking the slot free —
-the stale rows are dead weight until the next admission overwrites them.
+(prefilling them one at a time at a power-of-two *bucketed* prompt length,
+interleaved with decode of the running slots) and then advances every
+running slot by ``decode_chunk`` tokens with a single fused, donated scan
+(``runtime.serve.make_decode_chunk_fn``): decode -> argmax -> token
+feedback -> per-slot remaining/live update all stay on device, and only a
+(chunk, B) token ring plus two measurement scalars return to the host —
+one host sync per chunk instead of three dispatches and a sync per token.
+Admission writes a freshly prefilled single-request cache into its slot in
+place (``dynamic_update_slice`` along the per-leaf batch axis, positions
+carried as a per-slot (B,) vector the model decode paths understand);
+eviction is just marking the slot free — the stale rows are dead weight
+until the next admission overwrites them, and the on-device live mask
+keeps them out of the measurement.
 
 The engine is the serving face of the paper's hybrid execution: it keeps a
-running *measured* activation sparsity (exact-zero fraction of the pooled
-decode logits, refreshed every ``measure_every`` steps), re-invokes
+running *measured* activation sparsity (exact-zero fraction of the live
+rows of the fused chunk's decode logits, accumulated on device), re-invokes
 ``core.hybrid.select_mode`` against the offline weight sparsity, and runs
 every prefill/decode under a ``sparse_execution`` scope for the selected
 category.  Mode is a trace-time decision (DESIGN.md Section 5), so a
 category flip swaps to a fresh set of jitted fns traced under the new
-scope — the jit cache is keyed by ``Mode``, at most four entries.
+scope — the jit cache is keyed by ``Mode``, at most four entries.  A flip
+can lag the measurement by up to ``decode_chunk`` steps (Section 9).
 
 ``greedy_generate`` (runtime/serve.py) is the parity oracle: per-slot
 decode is row-wise independent (MoE decode runs drop-free for exactly this
 reason, see ``models.moe.moe_ffn``), so the engine's generated tokens for a
-request match a batch-1 greedy run of the same prompt token for token.
+request match a batch-1 greedy run of the same prompt — padded to the same
+bucket — token for token.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+import heapq
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -42,6 +50,7 @@ from ..kernels.griffin_spmm.ops import GriffinWeights
 from ..models.common import sparse_execution
 from ..models.registry import ModelApi
 from ..sparsity.pruning import GEMM_WEIGHTS, sparsity_of
+from .serve import make_chunk_ladder, pad_prompt_batch
 
 # Category knob handed to the sparse_execution scope when the *measured*
 # activation sparsity selects an A-side mode and no declared value exists:
@@ -49,6 +58,10 @@ from ..sparsity.pruning import GEMM_WEIGHTS, sparsity_of
 # so any representative sparse-side constant keeps the trace stable across
 # measurement jitter (DESIGN.md Section 5).
 DEFAULT_DECLARED_A = 0.5
+
+# Smallest prefill bucket: prompts shorter than this share one padded shape,
+# so the bucket set is {8, 16, ..., cache_len} — O(log cache_len) shapes.
+MIN_BUCKET = 8
 
 
 # ---------------------------------------------------------------------------
@@ -71,15 +84,16 @@ class Request:
     def prompt_len(self) -> int:
         return int(np.asarray(self.tokens).shape[-1])
 
-    def as_batch(self) -> Dict[str, jax.Array]:
+    def as_batch(self, bucket: Optional[int] = None) -> Dict[str, jax.Array]:
         """The batch-1 model input this request prefills with — also what
         oracle replays (greedy_generate) must feed so they compare against
-        the same computation."""
+        the same computation.  ``bucket`` right-pads the prompt to the
+        engine's bucketed-prefill shape (``ServeEngine.bucket_for``)."""
         batch = {"tokens": jnp.asarray(
             np.asarray(self.tokens, np.int32).reshape(1, -1))}
         for k, v in (self.extras or {}).items():
             batch[k] = jnp.asarray(v)[None]
-        return batch
+        return pad_prompt_batch(batch, bucket)
 
 
 @dataclasses.dataclass
@@ -104,6 +118,14 @@ class Scheduler:
     ``policy="static"``: admission only when the pool has fully drained —
     the classic static-batching baseline whose stragglers idle the pool
     (benchmarks/bench_serve.py measures the gap).
+
+    Admission is amortized O(1) per request: an arrival-ordered heap feeds
+    a ready queue ordered by submission as the clock passes each arrival,
+    so a tick never rescans the whole waiting set (the old list scan was
+    O(waiting) per tick, O(n * steps) per trace).  The admitted order is
+    exactly the scan's — FCFS by submission over the arrived portion — and
+    tests/test_properties.py holds the two implementations equal under
+    random traces.
     """
 
     def __init__(self, num_slots: int, policy: str = "continuous",
@@ -115,7 +137,9 @@ class Scheduler:
         self.num_slots = num_slots
         self.policy = policy
         self.max_admissions = max(1, max_admissions_per_step)
-        self.waiting: List[Request] = []
+        self._seq = 0                             # submission order
+        self._by_arrival: List[Tuple[int, int, Request]] = []
+        self._ready: List[Tuple[int, Request]] = []
         self.running: Dict[int, Request] = {}
         self.remaining: Dict[int, int] = {}
         self.finished: List[int] = []
@@ -124,23 +148,34 @@ class Scheduler:
     def add(self, req: Request) -> None:
         if req.max_new_tokens < 1:
             raise ValueError(f"request {req.rid}: max_new_tokens must be >=1")
-        self.waiting.append(req)
+        heapq.heappush(self._by_arrival, (req.arrival, self._seq, req))
+        self._seq += 1
+
+    @property
+    def waiting(self) -> List[Request]:
+        """Not-yet-admitted requests in submission order (inspection only —
+        built on demand; the hot path never materializes it)."""
+        pend = [(s, r) for _, s, r in self._by_arrival] + list(self._ready)
+        return [r for _, r in sorted(pend)]
+
+    @property
+    def waiting_count(self) -> int:
+        return len(self._by_arrival) + len(self._ready)
 
     def admissions(self, step: int) -> List[Tuple[int, Request]]:
         """Pop the (slot, request) pairs to admit at ``step`` — FCFS over
         the arrived portion of the queue, bounded by free slots and the
         per-step admission budget."""
+        while self._by_arrival and self._by_arrival[0][0] <= step:
+            _, seq, req = heapq.heappop(self._by_arrival)
+            heapq.heappush(self._ready, (seq, req))
         if self.policy == "static" and self.running:
             return []
         budget = (self.num_slots if self.policy == "static"
                   else self.max_admissions)
         out: List[Tuple[int, Request]] = []
-        while self._free and len(out) < budget:
-            i = next((j for j, r in enumerate(self.waiting)
-                      if r.arrival <= step), None)
-            if i is None:
-                break
-            req = self.waiting.pop(i)
+        while self._free and self._ready and len(out) < budget:
+            _, req = heapq.heappop(self._ready)
             slot = self._free.pop()
             self.running[slot] = req
             self.remaining[slot] = req.max_new_tokens
@@ -163,8 +198,21 @@ class Scheduler:
     def active(self) -> List[int]:
         return sorted(self.running)
 
+    def next_arrival(self) -> Optional[int]:
+        """Arrival step of the earliest not-yet-arrived request (None when
+        every waiting request has already arrived or the queue is empty) —
+        the engine caps its fused-chunk length with it so a free slot is
+        not left idle past a known arrival."""
+        return self._by_arrival[0][0] if self._by_arrival else None
+
+    def deferred_ready(self) -> bool:
+        """True when arrived requests are still waiting (admission budget
+        exhausted this tick) — the engine then keeps chunks short so the
+        backlog drains at the next boundary."""
+        return bool(self._ready)
+
     def has_work(self) -> bool:
-        return bool(self.waiting or self.running)
+        return bool(self._by_arrival or self._ready or self.running)
 
 
 # ---------------------------------------------------------------------------
@@ -195,12 +243,15 @@ def _batch_axes(api: ModelApi, cache_len: int) -> Any:
 
 
 def _make_insert(axes: Any) -> Callable:
-    """Jitted in-place (donated) write of a single-request cache into one
-    slot of the pool arena.  Scalar counters (axis -1) land in the
-    promoted per-slot (B,) vector."""
+    """Jitted in-place (donated) admission: writes a single-request cache
+    into one slot of the pool arena, seeds the slot's feedback token from
+    the prefill logits (argmax on device) and its owed-token counter — one
+    dispatch per admission, no host sync.  Scalar counters (axis -1) land
+    in the promoted per-slot (B,) vector.  Returns the (1,) first token so
+    the host can emit it lazily with the next chunk's sync."""
 
-    @functools.partial(jax.jit, donate_argnums=(0,))
-    def insert(pool, sub, slot):
+    @functools.partial(jax.jit, donate_argnums=(0, 1, 2))
+    def insert(pool, tokens, remaining, sub, logits, slot, rem):
         def one(pl, sl, ax):
             if ax < 0:
                 return jax.lax.dynamic_update_slice(
@@ -209,19 +260,28 @@ def _make_insert(axes: Any) -> Callable:
             starts[ax] = slot
             return jax.lax.dynamic_update_slice(pl, sl.astype(pl.dtype),
                                                 tuple(starts))
-        return jax.tree.map(one, pool, sub, axes)
+        pool = jax.tree.map(one, pool, sub, axes)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)          # (1,)
+        tokens = jax.lax.dynamic_update_slice(tokens, tok[:, None], (slot, 0))
+        remaining = jax.lax.dynamic_update_slice(
+            remaining, rem.reshape(1), (slot,))
+        return pool, tokens, remaining, tok
 
     return insert
 
 
-def _default_serve_fns(api: ModelApi, cache_len: int):
+def _default_serve_fns(api: ModelApi, cache_len: int, decode_chunk: int = 8):
     """Unsharded single-host jits; the mesh-aware factory is
     ``runtime.serve.jit_serve_fns`` (launch/serve.py passes it in).  The
-    decode cache is donated so pool updates happen in place."""
+    third element is ``chunk_for(n)`` — a memoized fused-chunk jit per scan
+    length on the engine's power-of-two ladder — with the cache/token/
+    remaining carry donated so the pool arena updates in place."""
     prefill = jax.jit(lambda p, b: api.prefill(p, b, cache_len=cache_len))
     decode = jax.jit(lambda p, c, t: api.decode_step(p, c, t),
                      donate_argnums=(1,))
-    return prefill, decode
+    chunk_for = make_chunk_ladder(
+        api, decode_chunk, lambda fn: jax.jit(fn, donate_argnums=(1, 2, 3)))
+    return prefill, decode, chunk_for
 
 
 def weight_sparsity(params: Any,
@@ -257,16 +317,19 @@ def weight_sparsity(params: Any,
 class ServeEngine:
     """Continuous-batching driver over a ``ModelApi``.
 
-    ``fns_factory`` returns (prefill_fn, decode_fn[, ...]) — pass
-    ``lambda: jit_serve_fns(api, mesh, num_slots, cache_len)`` to serve on
-    a mesh (launch/serve.py does); default is single-host jits.  The
-    factory is invoked once per selected execution mode: the resulting jits
-    are traced (and always called) under that mode's ``sparse_execution``
-    scope, which is how a workload-category flip reaches the kernels.
+    ``fns_factory`` returns (prefill_fn, decode_fn, decode_chunk_fn[, ...])
+    — pass ``lambda: jit_serve_fns(api, mesh, num_slots, cache_len,
+    decode_chunk=...)`` to serve on a mesh (launch/serve.py does); default
+    is single-host jits.  The factory is invoked once per selected
+    execution mode: the resulting jits are traced (and always called) under
+    that mode's ``sparse_execution`` scope, which is how a workload-category
+    flip reaches the kernels.
 
     Greedy decoding only (argmax), matching the ``greedy_generate`` oracle.
-    Prefill jits retrace per distinct prompt length — callers with ragged
-    traces should bucket prompt lengths (future work: bucketed prefill).
+    Prompts prefill at power-of-two bucketed lengths (``bucket_for``), so
+    prefill retraces are bounded O(log cache_len) per mode instead of one
+    per distinct prompt length; decode runs ``decode_chunk`` fused steps
+    per host round-trip (DESIGN.md Section 9).
     """
 
     def __init__(self, api: ModelApi, params: Any, *, num_slots: int,
@@ -274,15 +337,23 @@ class ServeEngine:
                  policy: str = "continuous", max_admissions_per_step: int = 1,
                  use_kernels: bool = False, interpret: bool = False,
                  a_sparsity: Optional[float] = None, block_m: int = 128,
-                 measure_every: int = 8):
+                 measure_every: int = 8, decode_chunk: int = 8,
+                 bucket_prompts: bool = True, fused: bool = True):
         self.api = api
         self.params = params
         self.num_slots = num_slots
         self.cache_len = cache_len
+        self.decode_chunk = max(1, decode_chunk)
+        self.bucket_prompts = bucket_prompts
+        # fused=False keeps the PR 3 per-step hot path (one decode dispatch
+        # + host argmax + sync per token, measurement gathering the full
+        # logits): the benchmark baseline bench_serve.py measures the fused
+        # scan against, and a regression reference for the parity suite
+        self.fused = fused
         self.sched = Scheduler(num_slots, policy, max_admissions_per_step)
         self._fns_factory = fns_factory or (
-            lambda: _default_serve_fns(api, cache_len))
-        self._mode_fns: Dict[Mode, Tuple[Callable, Callable]] = {}
+            lambda: _default_serve_fns(api, cache_len, self.decode_chunk))
+        self._mode_fns: Dict[Mode, Tuple[Callable, ...]] = {}
         self.use_kernels = use_kernels
         self.interpret = interpret
         self.block_m = block_m
@@ -297,7 +368,14 @@ class ServeEngine:
         self.outputs: Dict[int, RequestOutput] = {}
         self.events: List[Tuple[int, int, int]] = []    # (step, rid, token)
         self.stats = {"decode_steps": 0, "prefill_calls": 0, "emitted": 0,
-                      "idle_steps": 0, "retraces": 0}
+                      "idle_steps": 0, "retraces": 0, "chunk_calls": 0,
+                      "host_syncs": 0}
+        self.prefill_buckets: set = set()       # distinct admitted shapes
+        # prompt buckets longer than the usable cache window cannot be
+        # right-padded (the window would evict real K/V); those prompts
+        # fall back to exact-length prefill
+        window = getattr(api.cfg, "window", None)
+        self._bucket_cap = min(cache_len, window or cache_len)
         # the arena: init_cache's tree with scalar counters promoted to
         # per-slot (B,) vectors (the decode paths' vector-pos branch)
         cache = api.init_cache(num_slots, cache_len)
@@ -306,6 +384,7 @@ class ServeEngine:
             if leaf.ndim == 0 else leaf, cache)
         self._insert = _make_insert(_batch_axes(api, cache_len))
         self._tokens = jnp.zeros((num_slots, 1), jnp.int32)
+        self._remaining = jnp.zeros((num_slots,), jnp.int32)
 
     # -- mode plumbing ------------------------------------------------------
 
@@ -324,22 +403,25 @@ class ServeEngine:
                                 interpret=self.interpret,
                                 a_sparsity=a_scope, block_m=self.block_m)
 
-    def _fns(self) -> Tuple[Callable, Callable]:
+    def _fns(self) -> Tuple[Callable, Callable, Callable]:
         fns = self._mode_fns.get(self.mode)
         if fns is None:
             made = self._fns_factory()
-            fns = (made[0], made[1])
+            fns = (made[0], made[1], made[2])
             self._mode_fns[self.mode] = fns
             self.stats["retraces"] += 1
         return fns
 
-    def _measure(self, logits: jax.Array) -> None:
-        """Workload-category measurement on the step's concrete logits
-        (live slots only — stale rows of freed slots would skew the zero
-        fraction); a flipped ``select_mode`` verdict swaps the jitted-fn
-        set (mode is a trace-time decision, DESIGN.md Section 5)."""
+    def _measure(self, zero_frac: float) -> None:
+        """Workload-category measurement from the fused chunk's on-device
+        accumulator (exact-zero logit fraction of live rows only — the scan
+        masks out freed/unadmitted slots, so their stale rows cannot skew
+        the category); a flipped ``select_mode`` verdict swaps the
+        jitted-fn set (mode is a trace-time decision, DESIGN.md Section 5)
+        starting with the *next* chunk — flips lag the measurement by at
+        most ``decode_chunk`` steps (Section 9)."""
         self._since_measure = 0
-        self.a_measured = float(sparsity_of(logits))
+        self.a_measured = float(zero_frac)
         mode = select_mode(self._a_now(), self.b_sparsity)
         if mode != self.mode:
             self.mode = mode
@@ -357,10 +439,61 @@ class ServeEngine:
                              "extras['frames']")
         self.sched.add(req)
 
+    def bucket_for(self, prompt_len: int) -> Optional[int]:
+        """Power-of-two prefill bucket for a prompt length (min
+        ``MIN_BUCKET``), or None when the bucket would overflow the usable
+        cache window (exact-length prefill then; also when bucketing is
+        disabled).  Bounds distinct admitted prefill shapes — hence prefill
+        retraces per mode — to O(log cache_len)."""
+        if not self.bucket_prompts:
+            return None
+        b = MIN_BUCKET
+        while b < prompt_len:
+            b *= 2
+        return b if b <= self._bucket_cap else None
+
+    def _chunk_len(self, admitted_slots: frozenset = frozenset()) -> int:
+        """Fused-chunk length for this tick: the largest power of two
+        <= ``decode_chunk`` that (a) no live slot finishes inside — the
+        host mirror of ``remaining`` makes mid-chunk completions
+        predictable, so finishing slots free exactly at a chunk boundary
+        and no decode step is ever wasted on a dead row — and (b) does not
+        overrun a known arrival (or an admission-budget backlog) while a
+        slot sits free.  The completion bound (a) is exact — wasted decode
+        steps cost real device work; the latency bounds (b) are floored at
+        ``decode_chunk / 4``: shortening chunks further only shaves a few
+        steps of admission latency while multiplying host syncs.  The
+        ladder costs at most log2(decode_chunk)+1 traces per mode
+        (DESIGN.md Section 9).
+
+        ``admitted_slots``: slots admitted *this tick* — their scheduler
+        ``remaining`` still includes the prefill-boundary token (emitted
+        from the chunk's sync, not by a decode step), so they owe the
+        device one step fewer."""
+        bound = min(self.sched.remaining[s] - (s in admitted_slots)
+                    for s in self.sched.active)
+        bound = max(1, bound)      # a lone max_new_tokens=1 admission still
+        #                            runs the 1-step chunk its sync rides on
+        if self.sched._free and self.sched.policy == "continuous":
+            floor = max(1, self.decode_chunk // 4)
+            if self.sched.deferred_ready():
+                bound = min(bound, floor)
+            else:
+                na = self.sched.next_arrival()
+                if na is not None:
+                    bound = min(bound, max(floor, na - self.clock))
+        c = 1
+        while c * 2 <= self.decode_chunk and c * 2 <= bound:
+            c *= 2
+        return c
+
     def _prefill(self, req: Request):
-        prefill_fn, _ = self._fns()
+        prefill_fn = self._fns()[0]
+        bucket = self.bucket_for(req.prompt_len)
+        batch = req.as_batch(bucket)
+        self.prefill_buckets.add(batch["tokens"].shape[-1])
         with self._scope():
-            cache1, logits = prefill_fn(self.params, req.as_batch())
+            cache1, logits = prefill_fn(self.params, batch)
         self.stats["prefill_calls"] += 1
         return cache1, logits
 
@@ -374,37 +507,115 @@ class ServeEngine:
             out.finished = self.clock
 
     def step(self) -> List[Tuple[int, int, int]]:
-        """One engine tick: admissions (each prefilled and written into its
-        slot, first token emitted from the prefill logits) followed by one
-        pooled decode step advancing every running slot.  Returns the
-        tick's (step, rid, token) events."""
+        """One engine tick: admissions (each prefilled at its bucketed
+        length and written into its slot with first token + owed-token
+        counter seeded on device) followed by one fused ``decode_chunk``-
+        step scan advancing every running slot.  The single host sync per
+        tick fetches the (chunk, B) token ring, the admissions' first
+        tokens, and the measurement scalars together; the ring is then
+        drained against the scheduler, the clock advancing one step per
+        executed chunk row.  Returns the tick's (step, rid, token) events.
+
+        Slots freed mid-chunk idle until the next tick, and newly arrived
+        requests wait for the chunk boundary — admission latency is bounded
+        by ``decode_chunk`` steps (DESIGN.md Section 9, though the
+        chunk-length ladder caps chunks at known completions/arrivals so
+        neither happens on predictable traces).
+        """
+        if not self.fused:
+            return self._step_stepwise()
+        ev_start = len(self.events)
+        pending: List[Tuple[int, int, jax.Array]] = []  # slot, rid, dev tok
+        for slot, req in self.sched.admissions(self.clock):
+            cache1, logits = self._prefill(req)
+            rem = jnp.asarray(req.max_new_tokens - 1, jnp.int32)
+            self.cache, self._tokens, self._remaining, tok = self._insert(
+                self.cache, self._tokens, self._remaining, cache1, logits,
+                jnp.asarray(slot, jnp.int32), rem)
+            self.outputs[req.rid] = RequestOutput(req.rid,
+                                                  admitted=self.clock)
+            pending.append((slot, req.rid, tok))
+        admitted = frozenset(s for s, _, _ in pending)
+        if self.sched.active and all(
+                self.sched.remaining[s] - (s in admitted) <= 0
+                for s in self.sched.active):
+            # pure-admission tick: every live slot is a fresh single-token
+            # request — nothing owes a decode step, so fetch the prefill
+            # tokens without dispatching a dead chunk
+            first_toks = jax.device_get([t for _, _, t in pending])
+            self.stats["host_syncs"] += 1
+            for (slot, rid, _), tok in zip(pending, first_toks):
+                self._emit(slot, int(tok[0]))
+            self.clock += 1
+        elif self.sched.active:
+            chunk = self._chunk_len(admitted)
+            chunk_fn = self._fns()[2](chunk)
+            with self._scope():
+                (self.cache, self._tokens, self._remaining, ring,
+                 zf_num, zf_den) = chunk_fn(self.params, self.cache,
+                                            self._tokens, self._remaining)
+            ring, first_toks, zf_num, zf_den = jax.device_get(
+                (ring, [t for _, _, t in pending], zf_num, zf_den))
+            self.stats["host_syncs"] += 1
+            self.stats["chunk_calls"] += 1
+            self.stats["decode_steps"] += chunk
+            # prefill-boundary emissions first: the chunk consumed these
+            # tokens as its first feedback, so they precede the ring rows
+            for (slot, rid, _), tok in zip(pending, first_toks):
+                self._emit(slot, int(tok[0]))
+            for t in range(chunk):
+                live = self.sched.active
+                if not live:
+                    break
+                for slot in live:
+                    self._emit(slot, int(ring[t, slot]))
+                self.clock += 1
+            self._since_measure += chunk
+            if zf_den > 0 and self._since_measure >= self.measure_every:
+                self._measure(float(zf_num) / float(zf_den))
+        else:
+            if self.sched.waiting_count:
+                self.stats["idle_steps"] += 1
+            self.clock += 1
+        return self.events[ev_start:]
+
+    def _step_stepwise(self) -> List[Tuple[int, int, int]]:
+        """The PR 3 per-step hot path (``fused=False``): one pooled decode
+        dispatch, argmax and ``np.asarray`` sync per token, measurement
+        gathering the live rows of the full (B, vocab) logits.  Kept as the
+        benchmark baseline (bench_serve.py times the fused scan against it)
+        and as a behavioural reference — token output is identical to the
+        fused path by construction."""
         ev_start = len(self.events)
         for slot, req in self.sched.admissions(self.clock):
             cache1, logits = self._prefill(req)
-            self.cache = self._insert(self.cache, cache1,
-                                      jnp.asarray(slot, jnp.int32))
-            tok = jnp.argmax(logits, -1).astype(jnp.int32)     # (1,)
-            self._tokens = jax.lax.dynamic_update_slice(
-                self._tokens, tok[:, None], (slot, 0))
+            rem = jnp.asarray(req.max_new_tokens - 1, jnp.int32)
+            self.cache, self._tokens, self._remaining, tok = self._insert(
+                self.cache, self._tokens, self._remaining, cache1, logits,
+                jnp.asarray(slot, jnp.int32), rem)
             self.outputs[req.rid] = RequestOutput(req.rid,
                                                   admitted=self.clock)
+            self.stats["host_syncs"] += 1
             self._emit(slot, int(tok[0]))
         active = self.sched.active
         if active:
-            _, decode_fn = self._fns()
+            decode_fn = self._fns()[1]
             with self._scope():
                 logits, self.cache = decode_fn(self.params, self.cache,
                                                self._tokens)
             toks = jnp.argmax(logits, -1).astype(jnp.int32)    # (B,)
             self._tokens = toks[:, None]
             host = np.asarray(toks)
+            self.stats["host_syncs"] += 1
             self.stats["decode_steps"] += 1
             self._since_measure += 1
             if self._since_measure >= self.measure_every:
-                self._measure(logits[jnp.asarray(active)])
+                self._measure(float(sparsity_of(
+                    logits[jnp.asarray(active)])))
+                self.stats["host_syncs"] += 1
             for slot in active:
                 self._emit(slot, int(host[slot]))
-        elif self.sched.waiting:
+        elif self.sched.waiting_count:
             self.stats["idle_steps"] += 1
         self.clock += 1
         return self.events[ev_start:]

@@ -1,4 +1,6 @@
-"""Serving runtime: batched prefill + decode with sharded KV caches."""
+"""Serving runtime: batched prefill + decode with sharded KV caches, the
+fused multi-step decode chunk (DESIGN.md Section 9), and prompt-bucket
+padding shared by the engine and its greedy oracle."""
 from __future__ import annotations
 
 import dataclasses
@@ -12,9 +14,89 @@ from ..models.registry import ModelApi
 from .sharding import shard_batch, shard_cache, shard_params
 
 
+def pad_prompt_batch(batch: Dict[str, jax.Array],
+                     bucket: Optional[int]) -> Dict[str, jax.Array]:
+    """Right-pad ``batch["tokens"]`` to ``bucket`` and record the true
+    prompt lengths under ``"lengths"`` — the input contract of every
+    family's bucketed prefill (DESIGN.md Section 9).  ``bucket=None`` is
+    the identity (exact-length prefill, no lengths threaded), so callers
+    can pass ``ServeEngine.bucket_for(...)`` verbatim."""
+    if bucket is None:
+        return batch
+    toks = batch["tokens"]
+    B, S = toks.shape
+    if bucket < S:
+        raise ValueError(f"bucket {bucket} shorter than prompt {S}")
+    out = dict(batch)
+    out["tokens"] = jnp.pad(toks, ((0, 0), (0, bucket - S)))
+    out["lengths"] = jnp.full((B,), S, jnp.int32)
+    return out
+
+
+def make_chunk_ladder(api: ModelApi, decode_chunk: int,
+                      jit_wrap: Callable[[Callable], Callable]) -> Callable:
+    """Build ``chunk_for(n)``: a memoized fused-chunk executable per scan
+    length on the engine's power-of-two ladder 1..``decode_chunk``
+    (``ServeEngine._chunk_len``), so at most log2(decode_chunk)+1 traces
+    exist per mode.  ``jit_wrap`` supplies the jit policy (plain donation
+    for single-host, shardings on a mesh); the cap is validated here so
+    both paths enforce the same ladder contract."""
+    cache: Dict[int, Callable] = {}
+
+    def chunk_for(n: int) -> Callable:
+        if n < 1 or n > decode_chunk:
+            raise ValueError(f"chunk length {n} outside the configured "
+                             f"ladder 1..{decode_chunk}")
+        fn = cache.get(n)
+        if fn is None:
+            fn = jit_wrap(make_decode_chunk_fn(api, n))
+            cache[n] = fn
+        return fn
+
+    return chunk_for
+
+
+def make_decode_chunk_fn(api: ModelApi, decode_chunk: int) -> Callable:
+    """Build the fused multi-step decode tick: one ``lax.scan`` over
+    ``decode_chunk`` pooled decode steps with argmax, token feedback and
+    per-slot bookkeeping all on device (DESIGN.md Section 9).
+
+    Carry: (cache, tokens (B, 1) int32, remaining (B,) int32 — tokens each
+    slot still owes, 0 for free/unadmitted slots).  Per step the live mask
+    is ``remaining > 0``; live rows contribute their exact-zero logit
+    fraction to a running (num, den) pair — the engine's workload-category
+    measurement — and decrement ``remaining``.  Returns the small arrays
+    the host actually needs: the (chunk, B) token ring plus the two
+    measurement scalars.  Finished and never-admitted rows keep decoding
+    garbage (row-wise independence makes that harmless — DESIGN.md
+    Section 8); they are excluded from both the ring drain (host side) and
+    the measurement (the live mask here).
+    """
+
+    def chunk_fn(params, cache, tokens, remaining):
+        def body(carry, _):
+            cache, tokens, remaining = carry
+            logits, cache = api.decode_step(params, cache, tokens)
+            toks = jnp.argmax(logits, -1).astype(jnp.int32)       # (B,)
+            live = remaining > 0
+            zf_rows = jnp.mean((logits == 0).astype(jnp.float32), axis=-1)
+            zf_num = jnp.sum(zf_rows * live)
+            zf_den = jnp.sum(live.astype(jnp.float32))
+            remaining = remaining - live.astype(remaining.dtype)
+            return (cache, toks[:, None], remaining), (toks, zf_num, zf_den)
+
+        carry, (ring, nums, dens) = jax.lax.scan(
+            body, (cache, tokens, remaining), length=decode_chunk)
+        cache, tokens, remaining = carry
+        return cache, tokens, remaining, ring, nums.sum(), dens.sum()
+
+    return chunk_fn
+
+
 def jit_serve_fns(api: ModelApi, mesh: Mesh, batch: int, cache_len: int,
-                  fsdp: bool = False, params: Optional[Any] = None):
-    """Returns (prefill_fn, decode_fn, (p_sh, c_sh, logits_sh)).
+                  fsdp: bool = False, params: Optional[Any] = None,
+                  decode_chunk: int = 8):
+    """Returns (prefill_fn, decode_fn, chunk_for, (p_sh, c_sh, logits_sh)).
 
     ``params`` is the tree actually being served — pass it whenever it is
     not shaped like ``api.init``'s output (block-compacted ``GriffinWeights``
@@ -26,7 +108,10 @@ def jit_serve_fns(api: ModelApi, mesh: Mesh, batch: int, cache_len: int,
     .ServeEngine`` takes ``lambda: jit_serve_fns(...)`` as its fns
     factory): ``prefill_fn`` admits one request (its output cache is
     slot-inserted into the pool arena), ``decode_fn`` advances the whole
-    pool with the cache donated so the arena updates in place.
+    pool one step, and ``chunk_for(n)`` returns the fused n-step tick the
+    engine actually serves with (up to ``decode_chunk`` pooled steps per
+    host round-trip; see :func:`make_decode_chunk_fn`) — cache, token and
+    remaining buffers all donated so the arena updates in place.
     ``logits_sh`` is the dp-sharded logits layout both fns produce — it
     assumes the pool batch divides the dp axes, so batch-1 admission
     prefills need a 1-dp mesh (multi-host serving buckets prefills on a
@@ -60,7 +145,13 @@ def jit_serve_fns(api: ModelApi, mesh: Mesh, batch: int, cache_len: int,
                          in_shardings=(p_sh, c_sh, None),
                          out_shardings=(logits_sh, c_sh),
                          donate_argnums=(1,))
-    return prefill_jit, decode_jit, (p_sh, c_sh, logits_sh)
+    chunk_for = make_chunk_ladder(
+        api, decode_chunk,
+        lambda fn: jax.jit(fn,
+                           in_shardings=(p_sh, c_sh, rep, rep),
+                           out_shardings=(c_sh, rep, rep, rep, rep, rep),
+                           donate_argnums=(1, 2, 3)))
+    return prefill_jit, decode_jit, chunk_for, (p_sh, c_sh, logits_sh)
 
 
 def _dp(mesh: Mesh) -> int:
@@ -70,12 +161,19 @@ def _dp(mesh: Mesh) -> int:
 
 
 def greedy_generate(api: ModelApi, params, batch: Dict, steps: int,
-                    cache_len: int):
+                    cache_len: int, prompt_bucket: Optional[int] = None):
     """Reference generation loop, one static batch in lockstep — the parity
     oracle for the continuous-batching engine (``runtime.engine``): per-slot
     decode is row-wise independent, so the engine's tokens for a request
     must match a batch-1 greedy run of the same prompt token for token
-    (tests/test_engine.py asserts this, dense and sparse)."""
+    (tests/test_engine.py asserts this, dense and sparse).
+
+    ``prompt_bucket`` replays the engine's bucketed-prefill path (pass
+    ``engine.bucket_for(prompt_len)``): the prompt is right-padded to the
+    bucket with lengths threaded, so the oracle runs the *same padded
+    computation* the engine admitted the request with — the definition of
+    token parity under bucketing (DESIGN.md Section 9)."""
+    batch = pad_prompt_batch(batch, prompt_bucket)
     cache, logits = api.prefill(params, batch, cache_len=cache_len)
     toks = [jnp.argmax(logits, -1).astype(jnp.int32)[:, None]]
     for _ in range(steps - 1):

@@ -2,15 +2,18 @@
 
 Three layers (cheap to slow):
   - ``jit_serve_fns`` regression on a 1-device mesh (the prefill jit must
-    carry the dp logits sharding that used to be computed-then-dropped);
+    carry the dp logits sharding that used to be computed-then-dropped,
+    and the fused chunk ladder must run under the same shardings);
   - engine machinery on a trivial fake ``ModelApi`` (slot reuse, event
-    attribution, prompt-boundary emission, workload-category re-selection);
+    attribution, prompt-boundary emission, workload-category re-selection,
+    fused-vs-stepwise equivalence, stale-slot measurement masking);
   - decode/prefill parity of registry families against the batch-1
-    ``greedy_generate`` oracle: engine tokens == greedy tokens == the
-    prefill-logits argmax at the prompt boundary.  Dense transformer+xlstm
-    run tier-1; the full four-family sweep, dense AND block-pruned-compacted
-    under ``sparse_execution``, is ``tier2`` (scripts/ci.sh runs it in its
-    own stage).
+    ``greedy_generate`` oracle under a chunked + bucketed matrix: engine
+    tokens == greedy tokens (oracle replaying the same prompt bucket) ==
+    the prefill-logits argmax at the prompt boundary.  Dense
+    transformer+xlstm run tier-1; the full four-family sweep, dense AND
+    block-pruned-compacted under ``sparse_execution``, is ``tier2``
+    (scripts/ci.sh runs it in its own stage).
 """
 import dataclasses
 
@@ -24,9 +27,10 @@ from repro.configs import get_config
 from repro.core.spec import Mode
 from repro.models import ModelApi, build_model
 from repro.models.common import sparse_execution
-from repro.runtime.engine import (Request, Scheduler, ServeEngine,
+from repro.runtime.engine import (MIN_BUCKET, Request, Scheduler, ServeEngine,
                                   synthetic_trace, weight_sparsity)
-from repro.runtime.serve import greedy_generate, jit_serve_fns
+from repro.runtime.serve import (greedy_generate, jit_serve_fns,
+                                 make_decode_chunk_fn, pad_prompt_batch)
 from repro.sparsity import sparsify_params
 
 FAMILY_ARCHS = {
@@ -83,15 +87,15 @@ def fake_api(vocab: int = 17, zero_logits: bool = False) -> ModelApi:
                     param_count=lambda: 0, param_count_total=lambda: 0)
 
 
-def _run_greedy(api, params, req, cache_len, scope=None):
+def _run_greedy(api, params, req, cache_len, scope=None, bucket=None):
     if scope is None:
         return greedy_generate(api, params, req.as_batch(),
                                steps=req.max_new_tokens,
-                               cache_len=cache_len)
+                               cache_len=cache_len, prompt_bucket=bucket)
     with scope:
         return greedy_generate(api, params, req.as_batch(),
                                steps=req.max_new_tokens,
-                               cache_len=cache_len)
+                               cache_len=cache_len, prompt_bucket=bucket)
 
 
 # ---------------------------------------------------------------------------
@@ -103,7 +107,7 @@ def test_jit_serve_fns_run_on_one_device_mesh():
     api = build_model(cfg)
     mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
     B, S, clen = 2, 8, 16
-    prefill_jit, decode_jit, (p_sh, c_sh, logits_sh) = \
+    prefill_jit, decode_jit, chunk_for, (p_sh, c_sh, logits_sh) = \
         jit_serve_fns(api, mesh, B, clen)
     params = api.init(jax.random.PRNGKey(0))
     toks = jnp.ones((B, S), jnp.int32)
@@ -117,6 +121,18 @@ def test_jit_serve_fns_run_on_one_device_mesh():
     assert logits2.shape == (B, cfg.vocab_size)
     assert logits2.sharding.is_equivalent_to(logits_sh, logits2.ndim)
     assert int(cache2["pos"]) == S
+    # fused chunk under the same shardings: 3 steps advance pos by 3 and
+    # fill a (3, B) token ring; dead rows stay out of the measurement
+    cache3, logits3 = prefill_jit(params, {"tokens": toks})
+    tokens = jnp.argmax(logits3, -1).astype(jnp.int32)[:, None]
+    remaining = jnp.asarray([3, 0], jnp.int32)
+    cache3, tokens, remaining, ring, zn, zd = chunk_for(3)(
+        params, cache3, tokens, remaining)
+    assert ring.shape == (3, B) and ring.dtype == jnp.int32
+    assert int(cache3["pos"]) == S + 2
+    assert list(np.asarray(remaining)) == [0, 0]
+    assert float(zd) == 3.0                     # one live row x three steps
+    assert chunk_for(3) is chunk_for(3)         # ladder memoized per length
 
 
 def test_jit_serve_fns_shardings_follow_compacted_params():
@@ -126,8 +142,8 @@ def test_jit_serve_fns_shardings_follow_compacted_params():
     api = build_model(cfg)
     mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
     params = sparsify_params(api.init(jax.random.PRNGKey(0)), 0.6, **PRUNE)
-    prefill_jit, _, (p_sh, _, _) = jit_serve_fns(api, mesh, 2, 16,
-                                                 params=params)
+    prefill_jit, _, _, (p_sh, _, _) = jit_serve_fns(api, mesh, 2, 16,
+                                                    params=params)
     assert jax.tree.structure(p_sh) == jax.tree.structure(
         jax.tree.map(lambda x: 0, params))
     with sparse_execution(use_kernels=False, interpret=True):
@@ -253,10 +269,166 @@ def test_weight_sparsity_counts_gemm_leaves_only():
 
 
 # ---------------------------------------------------------------------------
+# fused-path regressions (stale slots, chunk ladder, prompt buckets)
+# ---------------------------------------------------------------------------
+
+def test_chunk_fn_masks_dead_rows_out_of_measurement():
+    """Direct regression on the fused scan: rows with ``remaining == 0``
+    (freed or never-admitted slots) must not leak their stale logits into
+    the zero-fraction accumulator — the bug class the old
+    ``logits[jnp.asarray(active)]`` gather guarded against."""
+    api = fake_api(zero_logits=True)      # one-hot logits: zf ~ 16/17
+    params = api.init(jax.random.PRNGKey(0))
+    chunk_fn = make_decode_chunk_fn(api, 4)
+    cache = {"state": jnp.asarray([[3], [9]], jnp.int32),
+             "pos": jnp.zeros((2,), jnp.int32)}
+    tokens = jnp.asarray([[1], [2]], jnp.int32)
+    # row 1 is dead: its one-hot rows would dominate the mean if leaked
+    _, _, _, _, zn, zd = chunk_fn(params, cache, tokens,
+                                  jnp.asarray([4, 0], jnp.int32))
+    assert float(zd) == 4.0               # only row 0, all four steps
+    assert 0.9 < float(zn) / float(zd) < 1.0
+    # all-dead pool: denominator 0, numerator 0 (engine skips measuring)
+    _, _, _, _, zn0, zd0 = chunk_fn(params, cache, tokens,
+                                    jnp.asarray([0, 0], jnp.int32))
+    assert float(zd0) == 0.0 and float(zn0) == 0.0
+
+
+def test_engine_measurement_ignores_stale_and_unadmitted_slots():
+    """Engine-level twin: a 3-slot pool serving one live dense-logits
+    request must stay DENSE even though the two never-admitted slots keep
+    producing one-hot (zero-heavy) garbage rows every chunk."""
+
+    vocab = 17
+
+    def logits_of_mixed(state):
+        nxt = (state[:, 0] + 1) % vocab
+        onehot = jax.nn.one_hot(nxt, vocab, dtype=jnp.float32)
+        # rows with state 0 (unadmitted slots never leave 0) emit bare
+        # one-hot rows; live rows get a dense +1 offset
+        dense = (state[:, 0] != 0).astype(jnp.float32)[:, None]
+        return onehot + dense
+
+    api = fake_api()
+    api = dataclasses.replace(
+        api,
+        prefill=lambda params, batch, cache_len=None: (
+            {"state": jnp.sum(batch["tokens"], -1, keepdims=True
+                              ).astype(jnp.int32) % vocab,
+             "pos": jnp.asarray(batch["tokens"].shape[1] - 1, jnp.int32)},
+            logits_of_mixed(jnp.sum(batch["tokens"], -1, keepdims=True
+                                    ).astype(jnp.int32) % vocab)),
+        decode_step=lambda params, cache, token: (
+            logits_of_mixed((cache["state"] + token) % vocab),
+            {"state": (cache["state"] + token) % vocab,
+             "pos": cache["pos"] + 1}))
+    params = api.init(jax.random.PRNGKey(0))
+    req = Request(rid=0, tokens=np.asarray([5], np.int32), max_new_tokens=9)
+    eng = ServeEngine(api, params, num_slots=3, cache_len=16,
+                      measure_every=2, decode_chunk=4)
+    eng.run([req])
+    # live row contributes ~16/17 one-hot zeros *plus* the dense offset ->
+    # exactly zero zeros; stale rows would have pushed this above threshold
+    assert eng.a_measured == 0.0, eng.a_measured
+    assert eng.mode == Mode.DENSE
+    assert [m for _, m in eng.mode_history] == [Mode.DENSE]
+
+
+def test_engine_fused_and_stepwise_paths_agree():
+    """`fused=False` preserves the PR 3 per-step hot path; both paths must
+    produce identical per-request tokens and attribution counts."""
+    api = fake_api()
+    params = api.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(5)
+    mk = lambda: [Request(rid=i,
+                          tokens=rng.integers(1, 17, (int(p),), np.int32),
+                          max_new_tokens=int(g), arrival=int(a))
+                  for i, (p, g, a) in enumerate(
+                      zip([3, 7, 2, 5, 4], [6, 1, 9, 3, 5],
+                          [0, 0, 2, 3, 3]))]
+    rng = np.random.default_rng(5)
+    fused = ServeEngine(api, params, num_slots=2, cache_len=32,
+                        decode_chunk=4).run(mk())
+    rng = np.random.default_rng(5)
+    stepwise = ServeEngine(api, params, num_slots=2, cache_len=32,
+                           fused=False).run(mk())
+    assert {r: o.tokens for r, o in fused.items()} == \
+        {r: o.tokens for r, o in stepwise.items()}
+
+
+def test_chunk_ladder_wastes_no_decode_steps():
+    """The completion bound must account for the prefill-boundary token of
+    freshly admitted slots (they owe the device one step fewer than the
+    scheduler's pre-drain ``remaining`` says), and a tick whose live slots
+    all owe zero decode steps must not dispatch a dead chunk."""
+    api = fake_api()
+    params = api.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(api, params, num_slots=2, cache_len=16, decode_chunk=8)
+    eng.run([Request(rid=0, tokens=np.asarray([3, 1], np.int32),
+                     max_new_tokens=4)])
+    # prefill emits token 1; exactly 3 decode steps may run (2 + 1 ladder)
+    assert eng.stats["decode_steps"] == 3, eng.stats
+    assert eng.stats["emitted"] == 4
+    # all-single-token admissions: prefill tokens ride the sync, no chunk
+    eng2 = ServeEngine(api, params, num_slots=2, cache_len=16,
+                       decode_chunk=8, max_admissions_per_step=2)
+    eng2.run([Request(rid=i, tokens=np.asarray([i + 1], np.int32),
+                      max_new_tokens=1) for i in range(2)])
+    assert eng2.stats["decode_steps"] == 0
+    assert eng2.stats["emitted"] == 2 and eng2.stats["host_syncs"] == 1
+
+
+def test_chunk_ladder_is_capped_by_factory():
+    api = fake_api()
+    params = api.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(api, params, num_slots=1, cache_len=16, decode_chunk=4)
+    with pytest.raises(ValueError):
+        eng._fns()[2](5)                      # beyond the configured ladder
+    with pytest.raises(ValueError):
+        eng._fns()[2](0)
+
+
+def test_bucket_for_policy():
+    api = fake_api()
+    params = api.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(api, params, num_slots=1, cache_len=40)
+    assert eng.bucket_for(1) == MIN_BUCKET
+    assert eng.bucket_for(8) == 8
+    assert eng.bucket_for(9) == 16
+    assert eng.bucket_for(17) == 32
+    # bucket would overflow the cache -> exact-length fallback
+    assert eng.bucket_for(33) is None
+    off = ServeEngine(api, params, num_slots=1, cache_len=40,
+                      bucket_prompts=False)
+    assert off.bucket_for(9) is None
+    # windowed archs cap buckets at the usable window, not the cache
+    wcfg = get_config("mixtral-8x7b").reduced()   # window 32
+    wapi = build_model(wcfg)
+    weng = ServeEngine(wapi, wapi.init(jax.random.PRNGKey(0)), num_slots=1,
+                       cache_len=64)
+    assert weng.bucket_for(20) == 32
+    assert weng.bucket_for(33) is None
+
+
+def test_engine_bounds_prefill_shapes_on_ragged_trace():
+    """Many distinct prompt lengths must collapse onto O(log cache_len)
+    admitted prefill shapes — the retrace bound bucketing buys."""
+    api = fake_api()
+    params = api.init(jax.random.PRNGKey(0))
+    reqs = [Request(rid=i, tokens=np.full((i + 1,), 2, np.int32),
+                    max_new_tokens=2) for i in range(24)]   # lens 1..24
+    eng = ServeEngine(api, params, num_slots=2, cache_len=32)
+    eng.run(reqs)
+    assert eng.prefill_buckets <= {8, 16, 32}
+    assert len(eng.prefill_buckets) == 3
+
+
+# ---------------------------------------------------------------------------
 # registry-family decode/prefill parity vs the greedy oracle
 # ---------------------------------------------------------------------------
 
-def _family_parity(arch: str, sparse: bool, num_requests: int = 5):
+def _family_parity(arch: str, sparse: bool, num_requests: int = 5,
+                   decode_chunk: int = 3, bucket_prompts: bool = True):
     cfg = get_config(arch).reduced()
     api = build_model(cfg)
     params = api.init(jax.random.PRNGKey(0))
@@ -268,19 +440,26 @@ def _family_parity(arch: str, sparse: bool, num_requests: int = 5):
                            prompt_lens=(6, 10), gen_lens=(2, 4),
                            arrival_every=1)
     cache_len = 16
-    eng = ServeEngine(api, params, num_slots=2, cache_len=cache_len, **kw)
+    eng = ServeEngine(api, params, num_slots=2, cache_len=cache_len,
+                      decode_chunk=decode_chunk,
+                      bucket_prompts=bucket_prompts, **kw)
     outs = eng.run(reqs)
     # single-category run: the final-mode oracle replay below is only a
     # valid comparison when no mid-run flip occurred (real-model logits
     # have no exact zeros, so measurement cannot flip the category here)
     assert len(eng.mode_history) == 1, eng.mode_history
     for r in reqs:
-        ref = _run_greedy(api, params, r, cache_len, scope=eng._scope())
+        bucket = eng.bucket_for(r.prompt_len)
+        if bucket_prompts:
+            assert bucket is not None     # this trace must exercise buckets
+        ref = _run_greedy(api, params, r, cache_len, scope=eng._scope(),
+                          bucket=bucket)
         got = outs[r.rid].tokens
         assert got == list(np.asarray(ref[0])), (arch, sparse, r.rid)
         # prompt boundary: first emitted token is the prefill-logits argmax
+        # of the same padded batch the engine admitted with
         with eng._scope():
-            _, logits0 = api.prefill(params, r.as_batch(),
+            _, logits0 = api.prefill(params, r.as_batch(bucket),
                                      cache_len=cache_len)
         assert got[0] == int(jnp.argmax(logits0[0])), (arch, sparse)
     if sparse:
@@ -289,14 +468,30 @@ def _family_parity(arch: str, sparse: bool, num_requests: int = 5):
 
 
 @pytest.mark.parametrize("family", ["transformer", "xlstm"])
-def test_engine_parity_dense_fast(family):
-    _family_parity(FAMILY_ARCHS[family], sparse=False, num_requests=3)
+@pytest.mark.parametrize("decode_chunk", [1, 3])
+def test_engine_parity_dense_fast(family, decode_chunk):
+    _family_parity(FAMILY_ARCHS[family], sparse=False, num_requests=3,
+                   decode_chunk=decode_chunk)
+
+
+def test_engine_parity_unbucketed_exact_lengths():
+    """bucket_prompts=False keeps the exact-length prefill path alive (the
+    fallback for prompts whose bucket would overflow the cache)."""
+    _family_parity(FAMILY_ARCHS["transformer"], sparse=False,
+                   num_requests=3, bucket_prompts=False)
 
 
 @pytest.mark.tier2
 @pytest.mark.parametrize("family", sorted(FAMILY_ARCHS))
 def test_engine_parity_dense(family):
     _family_parity(FAMILY_ARCHS[family], sparse=False)
+
+
+@pytest.mark.tier2
+@pytest.mark.parametrize("family", sorted(FAMILY_ARCHS))
+def test_engine_parity_dense_stepwise_chunk1(family):
+    _family_parity(FAMILY_ARCHS[family], sparse=False, num_requests=3,
+                   decode_chunk=1)
 
 
 @pytest.mark.tier2

@@ -11,7 +11,7 @@ import jax.numpy as jnp
 import pytest
 
 from repro.kernels import (balance_columns, dense_matmul, griffin_matmul,
-                           preprocess_weights)
+                           preprocess_weights, stack_weights)
 from repro.kernels.dense_gemm.ref import dense_matmul_ref
 from repro.kernels.griffin_spmm.ref import griffin_spmm_ref
 from repro.sparsity import block_prune, magnitude_prune, sparsity_of
@@ -100,3 +100,89 @@ def test_pruning_hits_target_sparsity():
     assert abs(float(sparsity_of(magnitude_prune(w, 0.8))) - 0.8) < 0.02
     wb = block_prune(w, 0.75, block_k=32, unit=16)
     assert 0.6 < float(sparsity_of(wb)) < 0.9
+
+
+# ---------------------------------------------------------------------------
+# GriffinWeights container: stacking, slicing under jit, density memo
+# ---------------------------------------------------------------------------
+
+def _toy_gw(seed, k=64, n=64, density=0.4, bk=16, bn=32):
+    rng = np.random.RandomState(seed)
+    w = rng.randn(k, n).astype(np.float32)
+    mask = rng.rand(k // bk, n // 8) < density
+    w *= np.repeat(np.repeat(mask, bk, 0), 8, 1)
+    return w, preprocess_weights(w, block_k=bk, block_n=bn, unit=8,
+                                 balance=False)
+
+
+def test_stack_weights_clamp_padding_and_parity():
+    """Members with shallower grids pad kidx by clamp-repeating the last
+    block id with zero data, so the padded tail multiplies by zeros —
+    each stacked slice stays numerically identical to its source."""
+    w0, g0 = _toy_gw(0, density=0.2)
+    w1, g1 = _toy_gw(1, density=0.9)      # deeper grid: forces padding of g0
+    assert g0.kidx.shape[-1] < g1.kidx.shape[-1]
+    stacked = stack_weights([g0, g1])
+    max_cnt = g1.kidx.shape[-1]
+    assert stacked.kidx.shape == (2, g0.kidx.shape[0], max_cnt)
+    assert stacked.b_comp.shape[1] == max_cnt * g0.block_k
+    # clamp padding: dead kidx entries repeat the member's last id ...
+    pad = np.asarray(stacked.kidx[0, :, g0.kidx.shape[-1]:])
+    last = np.asarray(g0.kidx[:, -1])
+    assert (pad == last[:, None]).all()
+    # ... and the padded b_comp rows are exact zeros
+    assert not np.asarray(
+        stacked.b_comp[0, g0.b_comp.shape[0]:, :]).any()
+    # cnt is NOT padded: the kernel walks only the live prefix
+    np.testing.assert_array_equal(np.asarray(stacked.cnt[0]),
+                                  np.asarray(g0.cnt))
+    a = np.random.RandomState(7).randn(8, 64).astype(np.float32)
+    for i, w in enumerate((w0, w1)):
+        out = griffin_matmul(jnp.asarray(a), stacked[i], interpret=True)
+        np.testing.assert_allclose(np.asarray(out), a @ w,
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_stacked_getitem_under_jit():
+    """``gw[i]`` inside a jitted fn (traced index included) must slice
+    every array leaf — the layout the model stacks' ``lax.scan`` and the
+    MoE per-expert loop rely on."""
+    w0, g0 = _toy_gw(2)
+    w1, g1 = _toy_gw(3)
+    stacked = stack_weights([g0, g1])
+    a = jnp.asarray(np.random.RandomState(8).randn(8, 64).astype(np.float32))
+
+    @jax.jit
+    def run(a, gw, i):
+        sl = gw[i]
+        return sl.b_comp.sum(), sl.kidx.shape, sl.cnt
+
+    for i, g in enumerate((g0, g1)):
+        s, kshape, cnt = run(a, stacked, i)
+        assert kshape[0] == g.kidx.shape[0]
+        assert kshape[1] == stacked.kidx.shape[-1]
+        np.testing.assert_array_equal(np.asarray(cnt), np.asarray(g.cnt))
+        np.testing.assert_allclose(float(s), float(jnp.sum(g.b_comp)),
+                                   rtol=1e-6)
+    # concrete slicing composes with execution
+    out = griffin_matmul(a, stacked[1], interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(a) @ w1,
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_density_memoized_without_pytree_leakage():
+    _, gw = _toy_gw(4)
+    d = gw.density
+    assert "_density_memo" in gw.__dict__ and gw.__dict__[
+        "_density_memo"] == d
+    assert gw.density == d                       # second read hits the memo
+    # flatten/unflatten rebuilds from registered fields only: the copy must
+    # not inherit the memo, and must recompute the same value lazily
+    leaves, treedef = jax.tree.flatten(gw)
+    rebuilt = jax.tree.unflatten(treedef, leaves)
+    assert "_density_memo" not in rebuilt.__dict__
+    assert rebuilt.density == d
+    # a tree-mapped copy with different cnt data recomputes, not inherits
+    halved = jax.tree.unflatten(treedef, leaves)
+    halved.cnt = halved.cnt // 2
+    assert halved.density < d

@@ -138,3 +138,21 @@ def test_moe_dispatch_invariants():
     # gradient flows
     g = jax.grad(lambda xx: moe_ffn(p, xx, moe)[0].sum())(x)
     assert np.isfinite(np.asarray(g)).all()
+
+
+def test_moe_valid_mask_makes_padding_invisible():
+    """Bucketed prefill right-pads prompts: with the pad rows masked out
+    via ``valid``, the real rows' outputs must be bit-identical to a
+    drop-free run of the real rows alone — pads consume no expert capacity
+    and contribute nothing (models/moe.py, DESIGN.md Section 9)."""
+    moe = MoEConfig(num_experts=4, top_k=2, capacity_factor=1.25)
+    p = init_moe(jax.random.PRNGKey(3), 16, 32, moe, jnp.float32)
+    rng = np.random.RandomState(6)
+    x = jnp.asarray(rng.randn(10, 16), jnp.float32)
+    pads = jnp.asarray(rng.randn(6, 16), jnp.float32)   # garbage pad rows
+    ref, _ = moe_ffn(p, x, moe, drop_free=True)
+    valid = jnp.arange(16) < 10
+    out, _ = moe_ffn(p, jnp.concatenate([x, pads]), moe, valid=valid)
+    np.testing.assert_array_equal(np.asarray(out[:10]), np.asarray(ref))
+    # pad rows emit exactly zero (routed to the dump row)
+    assert not np.asarray(out[10:]).any()

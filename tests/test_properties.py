@@ -129,6 +129,74 @@ def test_slot_scheduler_trace_invariants(num_slots, policy, max_adm, trace):
     assert not sched.running and not sched.waiting
 
 
+@settings(max_examples=60, deadline=None)
+@given(
+    num_slots=st.integers(1, 4),
+    policy=st.sampled_from(["continuous", "static"]),
+    max_adm=st.integers(1, 3),
+    trace=st.lists(st.tuples(st.integers(0, 25),      # arrival step
+                             st.integers(1, 9)),      # gen len
+                   min_size=1, max_size=40),
+)
+def test_slot_scheduler_admission_order_matches_scan(num_slots, policy,
+                                                     max_adm, trace):
+    """The heap-based O(1) admission path must admit exactly the requests,
+    slots and order the original O(waiting)-per-tick list scan produced —
+    FCFS by submission over the arrived portion of the queue — under
+    arbitrary (including non-monotone) arrival patterns."""
+
+    class ScanScheduler(Scheduler):
+        """Reference: the pre-heap linear-scan admission (PR 3)."""
+
+        def __init__(self, *a, **k):
+            super().__init__(*a, **k)
+            self._scan_waiting = []
+
+        def add(self, req):
+            self._scan_waiting.append(req)
+
+        def has_work(self):
+            return bool(self._scan_waiting or self.running)
+
+        def admissions(self, step):
+            if self.policy == "static" and self.running:
+                return []
+            budget = (self.num_slots if self.policy == "static"
+                      else self.max_admissions)
+            out = []
+            while self._free and len(out) < budget:
+                i = next((j for j, r in enumerate(self._scan_waiting)
+                          if r.arrival <= step), None)
+                if i is None:
+                    break
+                req = self._scan_waiting.pop(i)
+                slot = self._free.pop()
+                self.running[slot] = req
+                self.remaining[slot] = req.max_new_tokens
+                out.append((slot, req))
+            return out
+
+    def drive(sched):
+        reqs = [Request(rid=i, tokens=np.zeros((2,), np.int32),
+                        max_new_tokens=g, arrival=a)
+                for i, (a, g) in enumerate(trace)]
+        for r in reqs:
+            sched.add(r)
+        admitted, step = [], 0
+        while sched.has_work():
+            for slot, req in sched.admissions(step):
+                admitted.append((step, slot, req.rid))
+                sched.emit(slot)
+            for slot in sched.active:
+                sched.emit(slot)
+            step += 1
+            assert step < 10_000
+        return admitted
+
+    assert drive(Scheduler(num_slots, policy, max_adm)) == \
+        drive(ScanScheduler(num_slots, policy, max_adm))
+
+
 @settings(max_examples=12, deadline=None)
 @given(
     num_slots=st.integers(1, 3),
