@@ -16,11 +16,19 @@ Engines sharing a decode_chunk share one memoized set of jitted fns and
 are timed on a warm second run, so the static/continuous gap is pure
 scheduling and the continuous/chunked gap is pure host-synchronization.
 The headline column is tok/s; ``host_syncs_per_token`` is the wall-clock-
-free twin the serve-smoke CI stage bounds.
+free twin the CI serve stage bounds.
+
+``--mesh DxM`` appends a mesh-parallel row (``runtime.mesh_serve
+.MeshServeEngine`` on a data x model device mesh, DESIGN.md Section 10)
+with the same trace — on the emulated CPU mesh the interesting columns
+are the sharding-invariant ones (tok/step and syncs/token match the
+unsharded chunked row exactly; wall clock measures GSPMD emulation, not
+hardware).  Every row carries a ``mesh`` field ("1x1" = unsharded).
 
 Writes benchmarks/out/bench_serve.csv; ``--json`` additionally emits
 benchmarks/out/BENCH_serve.json so the perf trajectory is machine-readable
-across PRs.
+across PRs — scripts/check_bench_regression.py replays the recorded trace
+against the committed file and fails CI on invariant drift.
 """
 from __future__ import annotations
 
@@ -48,31 +56,17 @@ PROMPT_LENS = (8, 16, 24)
 # and long enough that the fused path sustains full 8-step chunks (the
 # chunk-length ladder shortens chunks near each request's end)
 GEN_LENS = (12, 12, 16, 16, 24, 24, 32, 112)
-# (policy, decode_chunk, fused): fused=False is the preserved PR 3 per-step
-# hot path — the baseline the acceptance criterion compares against
-CONFIGS = (("static", 1, False), ("continuous", 1, False),
-           ("continuous", CHUNK, True))
+# (policy, decode_chunk, fused, mesh): fused=False is the preserved PR 3
+# per-step hot path — the baseline the acceptance criterion compares
+# against; mesh=None rows run the unsharded engine
+CONFIGS = (("static", 1, False, None), ("continuous", 1, False, None),
+           ("continuous", CHUNK, True, None))
 
 
-def _name(policy: str, fused: bool) -> str:
-    return f"{policy}-chunked" if fused else policy
-
-
-def _make_engine(api, params, factory_cache, policy, cache_len, chunk,
-                 fused):
-    def factory():
-        if chunk not in factory_cache:
-            from repro.runtime.engine import _default_serve_fns
-            factory_cache[chunk] = _default_serve_fns(api, cache_len, chunk)
-        return factory_cache[chunk]
-
-    return ServeEngine(api, params, num_slots=SLOTS, cache_len=cache_len,
-                       policy=policy, fns_factory=factory,
-                       decode_chunk=chunk, fused=fused)
-
-
-def run(fast: bool = True, json_out: bool = False) -> None:
-    n_req = 16 if fast else 48
+def build_workload(n_req: int):
+    """(cfg, api, params, cache_len, trace_fn) for the benchmark workload —
+    shared with scripts/check_bench_regression.py so the regression check
+    replays exactly the recorded trace."""
     # sized for the dispatch-bound decode regime the fused chunk targets: a
     # pooled decode step does real GEMV work but completes in O(host
     # round-trip) time — on CPU that is a small model; on TPU a batch-4
@@ -87,6 +81,42 @@ def run(fast: bool = True, json_out: bool = False) -> None:
     trace = lambda: synthetic_trace(cfg, num_requests=n_req, seed=7,
                                     prompt_lens=PROMPT_LENS,
                                     gen_lens=GEN_LENS)
+    return cfg, api, params, cache_len, trace
+
+
+def _name(policy: str, fused: bool, mesh=None) -> str:
+    base = f"{policy}-chunked" if fused else policy
+    return f"{base}@{mesh}" if mesh else base
+
+
+def make_engine(api, params, factory_cache, policy, cache_len, chunk,
+                fused, mesh=None):
+    if mesh:
+        from repro.launch.mesh import serve_mesh
+        from repro.runtime.mesh_serve import MeshServeEngine
+        return MeshServeEngine(api, params, mesh=serve_mesh(mesh),
+                               num_slots=SLOTS, cache_len=cache_len,
+                               policy=policy, decode_chunk=chunk,
+                               fused=fused)
+
+    def factory():
+        if chunk not in factory_cache:
+            from repro.runtime.engine import _default_serve_fns
+            factory_cache[chunk] = _default_serve_fns(api, cache_len, chunk)
+        return factory_cache[chunk]
+
+    return ServeEngine(api, params, num_slots=SLOTS, cache_len=cache_len,
+                       policy=policy, fns_factory=factory,
+                       decode_chunk=chunk, fused=fused)
+
+
+def run(fast: bool = True, json_out: bool = False,
+        mesh: str = None) -> None:
+    n_req = 16 if fast else 48
+    cfg, api, params, cache_len, trace = build_workload(n_req)
+    configs = list(CONFIGS)
+    if mesh and mesh != "1x1":
+        configs.append(("continuous", CHUNK, True, mesh))
     factory_cache: dict = {}
     rows = []
     results = {}
@@ -99,17 +129,17 @@ def run(fast: bool = True, json_out: bool = False) -> None:
     # from landing on one config's entire sample (the per-trace step/sync
     # counts are deterministic either way).
     engines, warm_retraces, best = {}, {}, {}
-    for policy, chunk, fused in CONFIGS:
-        name = _name(policy, fused)
-        eng = _make_engine(api, params, factory_cache, policy, cache_len,
-                           chunk, fused)
+    for policy, chunk, fused, cmesh in configs:
+        name = _name(policy, fused, cmesh)
+        eng = make_engine(api, params, factory_cache, policy, cache_len,
+                          chunk, fused, cmesh)
         eng.run(trace())
         engines[name] = eng
         warm_retraces[name] = eng.stats["retraces"]
         best[name] = float("inf")
     for _ in range(3):
-        for policy, chunk, fused in CONFIGS:
-            name = _name(policy, fused)
+        for policy, chunk, fused, cmesh in configs:
+            name = _name(policy, fused, cmesh)
             eng = engines[name]
             eng.stats = {k: 0 for k in eng.stats}
             t0 = time.perf_counter()
@@ -117,8 +147,8 @@ def run(fast: bool = True, json_out: bool = False) -> None:
             best[name] = min(best[name], time.perf_counter() - t0)
             assert len(outs) == n_req and all(o.finished >= 0
                                               for o in outs.values())
-    for policy, chunk, fused in CONFIGS:
-        name = _name(policy, fused)
+    for policy, chunk, fused, cmesh in configs:
+        name = _name(policy, fused, cmesh)
         eng, dt = engines[name], best[name]
         toks = eng.stats["emitted"]
         tok_s = toks / dt
@@ -126,6 +156,7 @@ def run(fast: bool = True, json_out: bool = False) -> None:
         syncs_tok = eng.stats["host_syncs"] / toks
         results[name] = dict(
             policy=policy, decode_chunk=chunk, requests=n_req, slots=SLOTS,
+            mesh=cmesh or "1x1",
             emitted=toks, decode_steps=eng.stats["decode_steps"],
             chunk_calls=eng.stats["chunk_calls"],
             prefill_calls=eng.stats["prefill_calls"],
@@ -138,7 +169,8 @@ def run(fast: bool = True, json_out: bool = False) -> None:
              f"tok_s={tok_s:.1f};tok_per_step={tok_step:.2f};"
              f"syncs_per_tok={syncs_tok:.3f};"
              f"decode_steps={eng.stats['decode_steps']}")
-        rows.append({"config": name, "requests": n_req, "slots": SLOTS,
+        rows.append({"config": name, "mesh": cmesh or "1x1",
+                     "requests": n_req, "slots": SLOTS,
                      "emitted": toks, "decode_chunk": chunk,
                      "decode_steps": eng.stats["decode_steps"],
                      "prefill_calls": eng.stats["prefill_calls"],
@@ -149,23 +181,30 @@ def run(fast: bool = True, json_out: bool = False) -> None:
                      results["static"]["tok_s"])
     fused_speedup = (results["continuous-chunked"]["tok_s"] /
                      results["continuous"]["tok_s"])
-    rows.append({"config": "continuous/static", "requests": n_req,
-                 "slots": SLOTS, "emitted": "", "decode_chunk": "",
-                 "decode_steps": "", "prefill_calls": "",
-                 "host_syncs_per_token": "", "wall_s": "",
-                 "tok_s": round(sched_speedup, 3), "tok_per_step": ""})
-    rows.append({"config": "chunked/continuous", "requests": n_req,
-                 "slots": SLOTS, "emitted": "", "decode_chunk": "",
-                 "decode_steps": "", "prefill_calls": "",
-                 "host_syncs_per_token": "", "wall_s": "",
-                 "tok_s": round(fused_speedup, 3), "tok_per_step": ""})
+    blank = {"mesh": "", "requests": n_req, "slots": SLOTS, "emitted": "",
+             "decode_chunk": "", "decode_steps": "", "prefill_calls": "",
+             "host_syncs_per_token": "", "wall_s": "", "tok_per_step": ""}
+    rows.append({"config": "continuous/static",
+                 "tok_s": round(sched_speedup, 3), **blank})
+    rows.append({"config": "chunked/continuous",
+                 "tok_s": round(fused_speedup, 3), **blank})
     path = write_csv("bench_serve", rows)
     print(f"# bench_serve -> {path} (continuous/static tok/s = "
           f"{sched_speedup:.2f}x, chunked/continuous tok/s = "
           f"{fused_speedup:.2f}x)")
+    if mesh and mesh != "1x1":
+        sh = results[_name("continuous", True, mesh)]
+        un = results["continuous-chunked"]
+        assert sh["tok_per_step"] == un["tok_per_step"], \
+            "mesh sharding changed tokens/step — scheduling is no longer " \
+            "placement-invariant"
+        print(f"# sharded row {mesh}: tok/step {sh['tok_per_step']} == "
+              f"unsharded, syncs/token {sh['host_syncs_per_token']} "
+              f"(vs {un['host_syncs_per_token']})")
     if json_out:
         out = {
             "arch": ARCH, "backend": jax.default_backend(),
+            "mesh": mesh or "1x1",
             "trace": {"requests": n_req, "slots": SLOTS,
                       "prompt_lens": list(PROMPT_LENS),
                       "gen_lens": list(GEN_LENS), "seed": 7},
@@ -184,5 +223,9 @@ if __name__ == "__main__":
                     help="longer trace (48 requests)")
     ap.add_argument("--json", action="store_true",
                     help="emit benchmarks/out/BENCH_serve.json")
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help="append a mesh-parallel engine row (needs D*M "
+                         "devices; on CPU export XLA_FLAGS=--xla_force_"
+                         "host_platform_device_count=8)")
     args = ap.parse_args()
-    run(fast=not args.full, json_out=args.json)
+    run(fast=not args.full, json_out=args.json, mesh=args.mesh)

@@ -5,6 +5,12 @@ workload-category measurement) and verify every request token-identical
 against the batch-1 greedy oracle.
 
   python examples/sparse_serve.py
+
+Extra launch/serve.py flags pass through, e.g. mesh-parallel serving on an
+emulated 8-device CPU mesh (the CI sharded stage runs exactly this):
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+      python examples/sparse_serve.py --mesh 2x4
 """
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
@@ -14,4 +20,5 @@ from repro.launch.serve import main
 main(["--arch", "llama3.2-1b", "--reduced", "--slots", "3",
       "--requests", "6", "--prompt-lens", "8,12,16", "--gen-lens", "6,10,14",
       "--arrival-every", "1", "--sparsity", "0.8", "--parity",
-      "--decode-chunk", "8", "--max-syncs-per-token", "0.25"])
+      "--decode-chunk", "8", "--max-syncs-per-token", "0.25"]
+     + sys.argv[1:])

@@ -1,0 +1,112 @@
+#!/usr/bin/env python
+"""Serve-benchmark regression gate: replay the trace recorded in the
+committed ``benchmarks/out/BENCH_serve.json`` and fail on *invariant*
+drift.
+
+The committed JSON is the perf record ``bench_serve --full --json`` wrote;
+wall-clock columns in it are machine-dependent and are **not** gated — a
+slow CI box must not fail the build.  What is gated is the deterministic
+skeleton of the serving engine, per recorded config:
+
+  - emitted tokens, decode steps (hence tokens/step) and prefill calls:
+    exact — these change only when scheduling, the chunk-length ladder or
+    prompt bucketing change behaviour;
+  - host syncs/token: <= recorded + 0.02 — the fused decode path quietly
+    re-synchronizing per step is exactly the regression PR 4 exists to
+    prevent (DESIGN.md Section 9), while a small slack absorbs intentional
+    accounting tweaks without masking a per-step sync (+1.0).
+
+Configs whose ``mesh`` needs more devices than this process has are
+skipped with a note (the CI sharded job runs with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
+
+Run from the repo root (scripts/ci.sh bench-regression stage):
+
+  PYTHONPATH=src python scripts/check_bench_regression.py
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+sys.path.insert(0, str(ROOT))
+
+SYNC_SLACK = 0.02
+
+
+def main() -> int:
+    import jax
+    from benchmarks.bench_serve import build_workload, make_engine
+
+    jpath = ROOT / "benchmarks" / "out" / "BENCH_serve.json"
+    if not jpath.exists():
+        print(f"FAIL: {jpath} missing — run "
+              "`python -m benchmarks.bench_serve --full --json` and commit")
+        return 1
+    rec = json.loads(jpath.read_text())
+    n_req = rec["trace"]["requests"]
+    cfg, api, params, cache_len, trace = build_workload(n_req)
+    # sanity: the committed record must describe the workload this repo
+    # builds, otherwise "exact" comparisons are meaningless
+    from benchmarks.bench_serve import GEN_LENS, PROMPT_LENS, SLOTS
+    if (rec["trace"]["prompt_lens"] != list(PROMPT_LENS)
+            or rec["trace"]["gen_lens"] != list(GEN_LENS)
+            or rec["trace"]["slots"] != SLOTS or rec["trace"]["seed"] != 7):
+        print("FAIL: committed trace parameters differ from "
+              "benchmarks/bench_serve.py — regenerate BENCH_serve.json")
+        return 1
+
+    n_dev = len(jax.devices())
+    failures, checked = [], 0
+    factory_cache: dict = {}
+    for name, c in rec["configs"].items():
+        mesh = c.get("mesh", "1x1")
+        if mesh != "1x1":
+            d, m = (int(x) for x in mesh.split("x"))
+            if d * m > n_dev:
+                print(f"skip {name}: mesh {mesh} needs {d * m} devices, "
+                      f"have {n_dev}")
+                continue
+        fused = c["decode_chunk"] > 1
+        eng = make_engine(api, params, factory_cache, c["policy"],
+                          cache_len, c["decode_chunk"], fused,
+                          None if mesh == "1x1" else mesh)
+        outs = eng.run(trace())
+        assert len(outs) == n_req and all(o.finished >= 0
+                                          for o in outs.values())
+        toks = eng.stats["emitted"]
+        syncs_tok = eng.stats["host_syncs"] / toks
+        checked += 1
+
+        def exact(field, got):
+            if got != c[field]:
+                failures.append(f"{name}: {field} drifted "
+                                f"{c[field]} -> {got}")
+
+        exact("emitted", toks)
+        exact("decode_steps", eng.stats["decode_steps"])
+        exact("prefill_calls", eng.stats["prefill_calls"])
+        if syncs_tok > c["host_syncs_per_token"] + SYNC_SLACK:
+            failures.append(
+                f"{name}: host syncs/token {syncs_tok:.4f} exceeds recorded "
+                f"{c['host_syncs_per_token']} + {SYNC_SLACK} — the fused "
+                "decode path is synchronizing more often than the record")
+        print(f"{name}: emitted={toks} decode_steps="
+              f"{eng.stats['decode_steps']} syncs/token={syncs_tok:.4f} "
+              f"(recorded {c['host_syncs_per_token']})")
+
+    for f in failures:
+        print("FAIL:", f)
+    print(f"check_bench_regression: {checked} configs replayed against "
+          f"{jpath.name}, {len(failures)} drifts")
+    if checked == 0:
+        print("FAIL: no configs replayed")
+        return 1
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

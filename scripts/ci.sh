@@ -1,8 +1,24 @@
 #!/usr/bin/env bash
-# CI entry point: install, tier-1 tests, benchmark + substrate smoke checks.
+# CI entry point: install, tier-1 tests, benchmark + substrate smoke checks,
+# mesh-serving parity, and worktree hygiene.
 #
-#   scripts/ci.sh            # full flow (editable install if pip works)
+#   scripts/ci.sh                  # full flow (editable install if pip works)
+#   scripts/ci.sh tier1 docs       # selected stages only
 #   SKIP_INSTALL=1 scripts/ci.sh   # offline: fall back to PYTHONPATH=src
+#
+# Stages (in default order) — .github/workflows/ci.yml runs the same
+# stages as separate jobs, so this script IS the local mirror of CI:
+#   tier1             fast default-on pytest suite (kernels split out)
+#   kernel            kernel parity (interpret mode, CPU)
+#   tier2             serving-engine e2e sweep (all families)
+#   serve             fused-chunk serve smoke + parity + sync budget
+#   bench-regression  fresh run vs committed BENCH_serve.json invariants
+#   serve-bench       static / per-step / fused-chunk benchmark smoke
+#   fig5              batched-sweep benchmark smoke (results cache)
+#   e2e               registry models through the substrate (smoke)
+#   docs              DESIGN.md citation check
+#   mesh              8-device emulated mesh: sharded parity tier + smoke
+#   clean             worktree clean after the run (smoke CSV churn reset)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -13,44 +29,108 @@ else
     echo "== pip install unavailable; using PYTHONPATH=src fallback"
     PYPATH="src"
 fi
+run() { PYTHONPATH="${PYPATH}${PYTHONPATH:+:$PYTHONPATH}" "$@"; }
 
 KERNEL_TESTS="tests/test_kernels.py tests/test_sparse_a.py \
 tests/test_griffin_linear.py"
 
-echo "== tier-1 tests (kernel parity split into its own stage below)"
-PYTHONPATH="${PYPATH}${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q \
-    $(for t in $KERNEL_TESTS; do printf -- "--ignore=%s " "$t"; done)
+stage_tier1() {
+    echo "== tier-1 tests (kernel parity split into its own stage)"
+    run python -m pytest -x -q \
+        $(for t in $KERNEL_TESTS; do printf -- "--ignore=%s " "$t"; done)
+}
 
-echo "== kernel parity (interpret mode, CPU): dense / Sparse.B / Sparse.A"
-PYTHONPATH="${PYPATH}${PYTHONPATH:+:$PYTHONPATH}" \
-    python -m pytest -x -q $KERNEL_TESTS
+stage_kernel() {
+    echo "== kernel parity (interpret mode, CPU): dense / Sparse.B / Sparse.A"
+    run python -m pytest -x -q $KERNEL_TESTS
+}
 
-echo "== tier-2: serving-engine e2e (all families, dense + sparse)"
-PYTHONPATH="${PYPATH}${PYTHONPATH:+:$PYTHONPATH}" \
-    python -m pytest -x -q -m tier2
+stage_tier2() {
+    echo "== tier-2: serving-engine e2e (all families, dense + sparse)"
+    run python -m pytest -x -q -m tier2
+}
 
-echo "== serve smoke: fused-chunk engine, bucketed prefill, parity, and"
-echo "==   host_syncs/token <= 1/4 (asserted inside via --max-syncs-per-token)"
-PYTHONPATH="${PYPATH}${PYTHONPATH:+:$PYTHONPATH}" \
-    python examples/sparse_serve.py
+stage_serve() {
+    echo "== serve smoke: fused-chunk engine, bucketed prefill, parity, and"
+    echo "==   host_syncs/token <= 1/4 (asserted inside via --max-syncs-per-token)"
+    run python examples/sparse_serve.py
+}
 
-echo "== serve bench: static / per-step (PR 3) / fused-chunk decode"
-# smoke-mode run: rewrites bench_serve.csv with 16-request rows (like the
-# other benchmark smokes, restore before committing); the committed
-# BENCH_serve.json perf record is only written by `bench_serve --full
-# --json` and never touched here
-PYTHONPATH="${PYPATH}${PYTHONPATH:+:$PYTHONPATH}" \
-    python -m benchmarks.bench_serve
+stage_bench_regression() {
+    echo "== bench regression: fresh serve run vs committed BENCH_serve.json"
+    echo "==   (tokens/step + prefills exact, syncs/token <= recorded + 0.02)"
+    run python scripts/check_bench_regression.py
+}
 
-echo "== benchmark smoke: fig5 (fast mode, batched sweep + results cache)"
-PYTHONPATH="${PYPATH}${PYTHONPATH:+:$PYTHONPATH}" \
-    python -m benchmarks.run --only fig5
+stage_serve_bench() {
+    echo "== serve bench: static / per-step (PR 3) / fused-chunk decode"
+    # smoke-mode run: rewrites bench_serve.csv with 16-request rows (the
+    # clean stage restores it); the committed BENCH_serve.json perf record
+    # is only written by `bench_serve --full --json` and never touched here
+    run python -m benchmarks.bench_serve
+}
 
-echo "== e2e smoke: registry models through the mode-dispatched substrate"
-PYTHONPATH="${PYPATH}${PYTHONPATH:+:$PYTHONPATH}" \
-    python -m benchmarks.bench_e2e --smoke
+stage_fig5() {
+    echo "== benchmark smoke: fig5 (fast mode, batched sweep + results cache)"
+    run python -m benchmarks.run --only fig5
+}
 
-echo "== docs: every DESIGN.md section cited from a docstring exists"
-python scripts/check_design_refs.py
+stage_e2e() {
+    echo "== e2e smoke: registry models through the mode-dispatched substrate"
+    run python -m benchmarks.bench_e2e --smoke
+}
 
-echo "== CI OK"
+stage_docs() {
+    echo "== docs: every DESIGN.md section cited from a docstring exists"
+    python scripts/check_design_refs.py
+}
+
+stage_mesh() {
+    echo "== mesh: sharded-serving parity tier + serve smoke on an emulated"
+    echo "==   8-device CPU mesh (DESIGN.md Section 10)"
+    # subshell-scoped env: a later stage in the same invocation (e.g.
+    # `ci.sh mesh bench-regression`) must not inherit the emulation
+    (
+        export XLA_FLAGS="--xla_force_host_platform_device_count=8 ${XLA_FLAGS:-}"
+        run python -m pytest -x -q -m mesh tests/test_mesh_serve.py
+        run python examples/sparse_serve.py --mesh 2x4
+    )
+}
+
+stage_clean() {
+    echo "== clean worktree: the smoke stages above just rewrote the two"
+    echo "==   committed benchmark CSVs — restore exactly those (their"
+    echo "==   pre-run content is already gone either way), then require"
+    echo "==   an otherwise clean tree (stray build junk must be"
+    echo "==   gitignored; intentional changes must be committed first)"
+    git checkout -- benchmarks/out/bench_serve.csv \
+        benchmarks/out/bench_e2e.csv 2>/dev/null || true
+    if [ -n "$(git status --porcelain)" ]; then
+        echo "FAIL: worktree dirty after CI run:"
+        git status --short
+        exit 1
+    fi
+    echo "worktree clean"
+}
+
+ALL_STAGES="tier1 kernel tier2 serve bench-regression serve-bench fig5 e2e \
+docs mesh clean"
+STAGES="${*:-$ALL_STAGES}"
+for s in $STAGES; do
+    case "$s" in
+        tier1) stage_tier1 ;;
+        kernel) stage_kernel ;;
+        tier2) stage_tier2 ;;
+        serve) stage_serve ;;
+        bench-regression) stage_bench_regression ;;
+        serve-bench) stage_serve_bench ;;
+        fig5) stage_fig5 ;;
+        e2e) stage_e2e ;;
+        docs) stage_docs ;;
+        mesh) stage_mesh ;;
+        clean) stage_clean ;;
+        *) echo "unknown stage: $s (known: $ALL_STAGES)"; exit 2 ;;
+    esac
+done
+
+echo "== CI OK ($STAGES)"

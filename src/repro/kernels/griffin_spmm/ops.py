@@ -202,11 +202,53 @@ def _run(a, b_comp, kidx, cnt, inv_perm, *, block_m, block_k, block_n, n,
     return out[:, :n]
 
 
+def decompact_weights(gw: GriffinWeights) -> jax.Array:
+    """jnp reconstruction of the (padded K, n) block-pruned dense matrix a
+    single (non-stacked) ``GriffinWeights`` denotes — the spec-respecting
+    SPMD fallback's weight operand (DESIGN.md Section 10).
+
+    Pure jnp (one-hot scatter of the compacted blocks back to their global
+    K rows, then the balance shuffle's inverse column permutation), so it
+    traces under jit and GSPMD can partition it where ``pallas_call`` —
+    which has no SPMD partitioning rule — cannot run at all.  Clamp-padded
+    dead ``kidx`` entries duplicate a live block id but their ``b_comp``
+    rows are zero, so the scatter-add contributes nothing for them.
+    Surviving values are reconstructed exactly (preprocessing never changes
+    them), hence ``a @ decompact_weights(gw)`` is bit-equal to the dense
+    product with the block-pruned weights.
+    """
+    assert gw.b_comp.ndim == 2, "decompact a per-layer slice, not a stack"
+    bk = gw.block_k
+    nb_k = gw.k // bk
+    nt, mc = gw.kidx.shape
+    pn = gw.b_comp.shape[-1]
+    bn = pn // nt
+    bc = gw.b_comp.reshape(mc, bk, nt, bn)                    # (c, r, t, s)
+    onehot = jax.nn.one_hot(gw.kidx, nb_k, dtype=gw.b_comp.dtype)
+    w = jnp.einsum("crts,tcK->Krts", bc, onehot)              # (K, r, t, s)
+    w = w.reshape(nb_k * bk, pn)
+    if gw.inv_perm is not None:
+        w = w[:, gw.inv_perm]
+    return w[:, :gw.n]
+
+
 def griffin_matmul(a: jax.Array, gw: GriffinWeights, *,
                    block_m: int = DEFAULT_BLOCK_M, dual: bool = False,
-                   interpret: bool = False) -> jax.Array:
-    """C = A @ W_pruned from the compacted representation."""
+                   interpret: bool = False, spmd: bool = False) -> jax.Array:
+    """C = A @ W_pruned from the compacted representation.
+
+    ``spmd=True`` is the mesh-partitionable fallback (DESIGN.md
+    Section 10): decompact to the denoted block-pruned dense matrix and
+    take a plain jnp dot, which GSPMD shards along the weights' output
+    (N) axis — the only sharded axis the serving layout gives ``b_comp``
+    — without ever splitting the contraction.  Dual-mode predication is a
+    no-op on values (skipped A blocks are exactly zero), so the fallback
+    covers Mode.AB too.
+    """
     m, k = a.shape
+    if spmd:
+        w = decompact_weights(gw)
+        return jnp.dot(a, w[:k], preferred_element_type=jnp.float32)
     bm = min(block_m, max(8, -(-m // 8) * 8))
     pm = -(-m // bm) * bm
     ap = jnp.pad(a, ((0, pm - m), (0, gw.k - k)))

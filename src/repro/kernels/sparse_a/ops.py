@@ -114,11 +114,24 @@ def sparse_a_matmul(a: jax.Array, w: jax.Array, *,
                     block_k: int = DEFAULT_BLOCK_K,
                     block_n: int = DEFAULT_BLOCK_N,
                     meta: Optional[ActivationMeta] = None,
-                    interpret: bool = False) -> jax.Array:
-    """C = A @ W visiting only the live A blocks (Sparse.A execution)."""
+                    interpret: bool = False,
+                    spmd: bool = False) -> jax.Array:
+    """C = A @ W visiting only the live A blocks (Sparse.A execution).
+
+    ``spmd=True`` is the mesh-partitionable fallback (DESIGN.md
+    Section 10): skipped A blocks are exactly zero, so the compacted
+    product *is* the plain dense product (``ref.sparse_a_ref``), which
+    GSPMD can shard along W's output axis — ``pallas_call`` has no SPMD
+    partitioning rule, and the runtime-compaction metadata would diverge
+    per shard anyway.  MXU skipping is forfeited on the emulated mesh;
+    the mode dispatch and jit-set keying upstream stay identical.
+    """
     m, k = a.shape
     kw, n = w.shape
     assert k == kw, (k, kw)
+    if spmd:
+        from .ref import sparse_a_ref
+        return sparse_a_ref(a, w)
     if meta is None:
         meta = compact_activations(a, block_m=block_m, block_k=block_k)
     bm, bk = meta.block_m, meta.block_k

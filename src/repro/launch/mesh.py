@@ -12,6 +12,32 @@ from __future__ import annotations
 import jax
 
 
+def serve_mesh(spec: str = "1x1", devices=None):
+    """Serving mesh from a ``"DxM"`` spec (data x model), e.g. ``"2x4"`` —
+    the ``--mesh`` flag of launch/serve.py and the shape the mesh-parallel
+    engine (runtime.mesh_serve, DESIGN.md Section 10) partitions over.
+    ``"1x1"`` is the single-device special case.  Raises when the spec is
+    malformed or asks for more devices than exist (on CPU, export
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to emulate a
+    multi-device host — the CI sharded job does)."""
+    import numpy as np
+    from jax.sharding import Mesh
+
+    parts = spec.lower().split("x")
+    if len(parts) != 2 or not all(p.isdigit() for p in parts):
+        raise ValueError(f"mesh spec {spec!r} is not 'DxM' (e.g. '2x4')")
+    d, m = int(parts[0]), int(parts[1])
+    if d < 1 or m < 1:
+        raise ValueError(f"mesh spec {spec!r}: axes must be >= 1")
+    devs = list(devices if devices is not None else jax.devices())
+    if d * m > len(devs):
+        raise ValueError(
+            f"mesh {spec} needs {d * m} devices, have {len(devs)} "
+            "(set XLA_FLAGS=--xla_force_host_platform_device_count=N "
+            "to emulate)")
+    return Mesh(np.array(devs[:d * m]).reshape(d, m), ("data", "model"))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")

@@ -10,7 +10,7 @@ jitted prefill/decode fns and shardings come from
 ``runtime.serve.jit_serve_fns`` on the planned mesh.
 
 On CPU this drives a reduced config (examples/sparse_serve.py, the
-scripts/ci.sh serve-smoke stage); on TPU the same code serves the full
+scripts/ci.sh serve stage); on TPU the same code serves the full
 configs.  ``--parity`` replays every request through the batch-1
 ``greedy_generate`` oracle and asserts token-identical output.
 """
@@ -24,8 +24,10 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import build_model
+from repro.launch.mesh import serve_mesh
 from repro.runtime.elastic import plan_mesh
 from repro.runtime.engine import ServeEngine, synthetic_trace
+from repro.runtime.mesh_serve import MeshServeEngine
 from repro.runtime.serve import greedy_generate, jit_serve_fns
 from repro.sparsity import sparsify_params
 
@@ -36,6 +38,21 @@ def _lens(spec: str):
 
 def build_engine(api, params, args, mesh) -> ServeEngine:
     cache_len = max(_lens(args.prompt_lens)) + max(_lens(args.gen_lens)) + 1
+    if args.mesh:
+        # mesh-parallel path (DESIGN.md Section 10): params model-sharded,
+        # arena slot/head-sharded, per-Mode jits carry explicit shardings;
+        # "1x1" is the single-device special case.  The engine keeps the
+        # Pallas kernels only there — a >1 mesh runs the spec-respecting
+        # jnp fallbacks, so --use-kernels implies interpret only on 1x1.
+        smesh = serve_mesh(args.mesh)
+        return MeshServeEngine(
+            api, params, mesh=smesh, num_slots=args.slots,
+            cache_len=cache_len, policy=args.policy,
+            use_kernels=args.use_kernels,
+            interpret=(args.use_kernels and smesh.size == 1
+                       and jax.default_backend() == "cpu"),
+            measure_every=args.measure_every,
+            decode_chunk=args.decode_chunk)
     return ServeEngine(
         api, params, num_slots=args.slots, cache_len=cache_len,
         fns_factory=lambda: jit_serve_fns(api, mesh, args.slots, cache_len,
@@ -68,8 +85,15 @@ def main(argv=None) -> None:
                          "per-step PR 3 hot path)")
     ap.add_argument("--max-syncs-per-token", type=float, default=0.0,
                     help="assert host_syncs/token <= this after the run "
-                         "(0 disables; scripts/ci.sh serve-smoke uses 0.25)")
+                         "(0 disables; the scripts/ci.sh serve stage "
+                         "uses 0.25)")
     ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help="serve mesh-parallel on a data x model device mesh "
+                         "(e.g. 2x4; needs D*M devices — on CPU export "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count"
+                         "=8).  '1x1' is the single-device special case; "
+                         "default keeps the unsharded engine")
     ap.add_argument("--parity", action="store_true",
                     help="assert engine tokens == greedy_generate per "
                          "request")
@@ -91,7 +115,8 @@ def main(argv=None) -> None:
 
     engine = build_engine(api, params, args, mesh)
     print(f"engine: {args.slots} slots x cache_len {engine.cache_len}, "
-          f"policy={args.policy}, weight sparsity "
+          f"policy={args.policy}, mesh={args.mesh or 'unsharded'}, "
+          f"weight sparsity "
           f"{engine.b_sparsity:.2f} -> mode {engine.mode.value}")
 
     reqs = synthetic_trace(cfg, num_requests=args.requests, seed=1,

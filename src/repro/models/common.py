@@ -35,12 +35,22 @@ class SparseExecution:
     *declared* activation sparsity of the workload category (paper
     Table I) — it must be a concrete float because the mode decision picks
     between kernels at trace time (DESIGN.md Section 5).
+
+    ``spmd_mesh`` (a ``jax.sharding.Mesh`` with > 1 device) switches every
+    GEMM to the mesh-partitionable path (DESIGN.md Section 10): inputs and
+    outputs are pinned replicated with sharding constraints so GSPMD never
+    splits a contraction dim, and the Pallas kernels — which have no SPMD
+    partitioning rule — are swapped for their spec-respecting jnp
+    fallbacks (``griffin_matmul(spmd=True)`` decompaction,
+    ``sparse_a_matmul(spmd=True)``).  A 1-device mesh (or None) keeps the
+    single-device kernel paths byte-identical to before.
     """
 
     use_kernels: bool = False
     interpret: bool = False
     a_sparsity: float = 0.0
     block_m: int = 128
+    spmd_mesh: Optional[Any] = None
 
 
 _EXEC_STACK = [SparseExecution()]
@@ -48,7 +58,8 @@ _EXEC_STACK = [SparseExecution()]
 
 @contextlib.contextmanager
 def sparse_execution(use_kernels: bool = True, interpret: bool = False,
-                     a_sparsity: float = 0.0, block_m: int = 128):
+                     a_sparsity: float = 0.0, block_m: int = 128,
+                     spmd_mesh: Optional[Any] = None):
     """Scope under which ``griffin_linear`` dispatches to the Pallas
     kernels (mode per GEMM via ``core.hybrid.select_mode``).
 
@@ -61,7 +72,8 @@ def sparse_execution(use_kernels: bool = True, interpret: bool = False,
     _EXEC_STACK.append(SparseExecution(use_kernels=use_kernels,
                                        interpret=interpret,
                                        a_sparsity=a_sparsity,
-                                       block_m=block_m))
+                                       block_m=block_m,
+                                       spmd_mesh=spmd_mesh))
     try:
         yield _EXEC_STACK[-1]
     finally:
@@ -70,6 +82,18 @@ def sparse_execution(use_kernels: bool = True, interpret: bool = False,
 
 def execution_context() -> SparseExecution:
     return _EXEC_STACK[-1]
+
+
+def _replicated(x: jax.Array, mesh) -> jax.Array:
+    """Pin ``x`` fully replicated on ``mesh`` (an all-gather when it
+    arrived sharded).  The mesh-serving GEMM contract (DESIGN.md
+    Section 10): replicated activations x output-axis-sharded weights mean
+    every contraction runs whole on every device, so GSPMD collectives
+    only ever *move* values — nothing reorders a floating-point reduction
+    and the sharded trace stays bit-identical to the single-device one."""
+    from jax.sharding import NamedSharding, PartitionSpec
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, PartitionSpec()))
 
 
 def griffin_linear(x: jax.Array, w) -> jax.Array:
@@ -86,27 +110,43 @@ def griffin_linear(x: jax.Array, w) -> jax.Array:
       GriffinWeights    -> Sparse.B kernel; dual when a is also declared
                            sparse (on-the-fly A-block predication)
 
+    Under a multi-device ``spmd_mesh`` scope the same dispatch runs
+    through the mesh-partitionable fallbacks with replicated inputs and
+    outputs (``_replicated``; DESIGN.md Section 10) — Pallas kernels have
+    no SPMD partitioning rule, and the replication constraints keep every
+    reduction whole so sharding never changes a logit bit.
+
     Leading batch/sequence axes are flattened into the GEMM M axis.
     """
     ctx = _EXEC_STACK[-1]
+    mesh = ctx.spmd_mesh
+    spmd = mesh is not None and mesh.size > 1
+    if spmd:
+        x = _replicated(x, mesh)
     if isinstance(w, GriffinWeights):
         lead = x.shape[:-1]
         mode = select_mode(ctx.a_sparsity, 1.0)
         out = griffin_matmul(x.reshape(-1, x.shape[-1]), w,
                              block_m=ctx.block_m, dual=(mode == Mode.AB),
-                             interpret=ctx.interpret)
-        return out.reshape(*lead, w.n).astype(x.dtype)
-    if not ctx.use_kernels:
+                             interpret=ctx.interpret, spmd=spmd)
+        out = out.reshape(*lead, w.n).astype(x.dtype)
+        return _replicated(out, mesh) if spmd else out
+    if not ctx.use_kernels and not spmd:
         return x @ w
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
-    if select_mode(ctx.a_sparsity, 0.0) == Mode.A:
+    sparse_a = select_mode(ctx.a_sparsity, 0.0) == Mode.A
+    if spmd:
+        out = (sparse_a_matmul(x2, w, spmd=True)
+               if ctx.use_kernels and sparse_a else x2 @ w)
+    elif sparse_a:
         out = sparse_a_matmul(x2, w, block_m=ctx.block_m,
                               interpret=ctx.interpret)
     else:
         out = dense_matmul(x2, w, block_m=ctx.block_m,
                            interpret=ctx.interpret)
-    return out.reshape(*lead, w.shape[-1]).astype(x.dtype)
+    out = out.reshape(*lead, w.shape[-1]).astype(x.dtype)
+    return _replicated(out, mesh) if spmd else out
 
 
 def write_kv_slot(cache: jax.Array, update: jax.Array, slot: jax.Array

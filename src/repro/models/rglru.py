@@ -5,6 +5,16 @@ The RG-LRU diagonal linear recurrence is evaluated with
 ``lax.associative_scan`` (log-depth, fully counted by cost analysis); decode
 carries O(1) recurrent + conv state plus a rolling window cache for the
 attention layers, which is what makes long_500k decode O(window).
+
+Every weight GEMM goes through ``models.common.griffin_linear``, like the
+other families (DESIGN.md Section 4): plain ``x @ w`` outside a
+``sparse_execution`` scope, kernel/mesh dispatch inside one.  This is
+what lets block-pruned hybrid weights execute (``sparsity.sparsify_params``
+already selected rglru's attention/MLP names) and what makes the family
+mesh-servable: the SPMD scope's replication constraints live in
+``griffin_linear``, and without them GSPMD is free to leave ``k``/``q``
+sharded across the rope half-split — a miscompile-prone layout on the
+emulated CPU mesh (DESIGN.md Section 10).
 """
 from __future__ import annotations
 
@@ -16,8 +26,9 @@ import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
 from .attention import decode_attention, local_attention
-from .common import (act_fn, dense_init, layer_scan, length_mask, rms_norm,
-                     rope, stack_layers, take_last, write_kv_slot)
+from .common import (act_fn, dense_init, griffin_linear, layer_scan,
+                     length_mask, rms_norm, rope, stack_layers, take_last,
+                     write_kv_slot)
 
 Params = Dict[str, Any]
 LRU_C = 8.0
@@ -82,8 +93,8 @@ def _rg_lru(x: jax.Array, p: Params, h0=None, mask=None):
     (bucketed prefill): pad steps run with (a, b) = (1, 0) — an exact
     identity — so ``h_last`` is the state at each row's last real token."""
     xf = x.astype(jnp.float32)
-    r = jax.nn.sigmoid(xf @ p["w_rg"].astype(jnp.float32))
-    i = jax.nn.sigmoid(xf @ p["w_ig"].astype(jnp.float32))
+    r = jax.nn.sigmoid(griffin_linear(xf, p["w_rg"].astype(jnp.float32)))
+    i = jax.nn.sigmoid(griffin_linear(xf, p["w_ig"].astype(jnp.float32)))
     log_a = -LRU_C * jax.nn.softplus(p["lam"]) * r
     a = jnp.exp(log_a)
     b = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * xf)
@@ -109,12 +120,13 @@ def rec_mix(cfg: ModelConfig, p: Params, x: jax.Array, state=None,
     """Recurrent mixing block.  state: (h0 (B,R) f32, conv (B,cw-1,R)).
     ``mask``/``lengths`` describe right padding (bucketed prefill)."""
     h = rms_norm(x, p["ln"], cfg.norm_eps)
-    xr = h @ p["w_x"]
-    gate = jax.nn.gelu((h @ p["w_gate"]).astype(jnp.float32)).astype(x.dtype)
+    xr = griffin_linear(h, p["w_x"])
+    gate = jax.nn.gelu(griffin_linear(h, p["w_gate"])
+                       .astype(jnp.float32)).astype(x.dtype)
     h0, conv_state = (None, None) if state is None else state
     xr, new_conv = _causal_conv(xr, p["conv"], conv_state, lengths=lengths)
     hr, h_last = _rg_lru(xr, p, h0, mask=mask)
-    out = (hr * gate) @ p["w_out"]
+    out = griffin_linear(hr * gate, p["w_out"])
     return (x + out).astype(x.dtype), (h_last, new_conv)
 
 
@@ -148,20 +160,24 @@ def init_mlp(cfg: ModelConfig, key) -> Params:
 
 def mlp(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
     h = rms_norm(x, p["ln"], cfg.norm_eps)
-    f = act_fn(cfg.act)(h @ p["w_gate"]) * (h @ p["w_up"])
-    return (x + f @ p["w_down"]).astype(x.dtype)
+    f = act_fn(cfg.act)(griffin_linear(h, p["w_gate"])) * \
+        griffin_linear(h, p["w_up"])
+    return (x + griffin_linear(f, p["w_down"])).astype(x.dtype)
 
 
 def attn_mix(cfg: ModelConfig, p: Params, x: jax.Array, positions):
     B, S, D = x.shape
     H, KVH, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
     h = rms_norm(x, p["ln"], cfg.norm_eps)
-    q = rope((h @ p["wq"]).reshape(B, S, H, hd), positions, cfg.rope_theta)
-    k = rope((h @ p["wk"]).reshape(B, S, KVH, hd), positions, cfg.rope_theta)
-    v = (h @ p["wv"]).reshape(B, S, KVH, hd)
+    q = rope(griffin_linear(h, p["wq"]).reshape(B, S, H, hd), positions,
+             cfg.rope_theta)
+    k = rope(griffin_linear(h, p["wk"]).reshape(B, S, KVH, hd), positions,
+             cfg.rope_theta)
+    v = griffin_linear(h, p["wv"]).reshape(B, S, KVH, hd)
     o = local_attention(q, k, v, window=cfg.window,
                         q_chunk=min(cfg.kv_chunk, cfg.window))
-    return (x + o.reshape(B, S, -1) @ p["wo"]).astype(x.dtype), (k, v)
+    return (x + griffin_linear(o.reshape(B, S, -1), p["wo"])
+            ).astype(x.dtype), (k, v)
 
 
 def attn_decode(cfg: ModelConfig, p: Params, x: jax.Array, kc, vc, pos):
@@ -173,16 +189,19 @@ def attn_decode(cfg: ModelConfig, p: Params, x: jax.Array, kc, vc, pos):
     h = rms_norm(x, p["ln"], cfg.norm_eps)
     per_slot = pos.ndim > 0
     posv = pos[:, None] if per_slot else pos[None]
-    q = rope((h @ p["wq"]).reshape(B, 1, H, hd), posv, cfg.rope_theta)
-    k = rope((h @ p["wk"]).reshape(B, 1, KVH, hd), posv, cfg.rope_theta)
-    v = (h @ p["wv"]).reshape(B, 1, KVH, hd)
+    q = rope(griffin_linear(h, p["wq"]).reshape(B, 1, H, hd), posv,
+             cfg.rope_theta)
+    k = rope(griffin_linear(h, p["wk"]).reshape(B, 1, KVH, hd), posv,
+             cfg.rope_theta)
+    v = griffin_linear(h, p["wv"]).reshape(B, 1, KVH, hd)
     clen = kc.shape[1]
     slot = pos % clen
     kc = write_kv_slot(kc, k, slot)
     vc = write_kv_slot(vc, v, slot)
     eff = jnp.minimum(pos, clen - 1)
     o = decode_attention(q, kc, vc, eff, window=None)
-    return (x + o.reshape(B, 1, -1) @ p["wo"]).astype(x.dtype), kc, vc
+    return (x + griffin_linear(o.reshape(B, 1, -1), p["wo"])
+            ).astype(x.dtype), kc, vc
 
 
 # ---------------------------------------------------------------------------
@@ -309,7 +328,7 @@ def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array,
     else:
         last = take_last(x, lengths)
         pos = (lengths - 1).astype(jnp.int32)          # per-row (B,) vector
-    logits = last @ params["head"]
+    logits = griffin_linear(last, params["head"])
     # roll the window cache so that slot (pos % clen) is consistent; short
     # prompts pad the tail so the cache is always exactly clen long — the
     # arena shape init_cache declares (decode writes slots S, S+1, ... and
@@ -356,6 +375,6 @@ def decode_step(cfg: ModelConfig, params: Params, cache: Params,
         cfg.scan_layers, tail, x,
         (params["tail"], cache["tail_h"], cache["tail_conv"]))
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
-    logits = x[:, 0] @ params["head"]
+    logits = griffin_linear(x[:, 0], params["head"])
     return logits, {"rec_h": rec_h, "rec_conv": rec_conv, "tail_h": tail_h,
                     "tail_conv": tail_conv, "k": ks, "v": vs, "pos": pos}

@@ -219,6 +219,17 @@ class Scheduler:
 # cache-arena plumbing
 # ---------------------------------------------------------------------------
 
+def _promote_arena(cache: Any, num_slots: int) -> Any:
+    """``init_cache``'s tree with scalar counters promoted to per-slot
+    (B,) vectors — the decode paths' vector-pos branch.  The single
+    definition of the arena's shape contract: both engines allocate with
+    it and the mesh layer's jit in_shardings are derived from it
+    (runtime.mesh_serve), so the promotion rule cannot drift."""
+    return jax.tree.map(
+        lambda leaf: jnp.zeros((num_slots,), leaf.dtype)
+        if leaf.ndim == 0 else leaf, cache)
+
+
 def _batch_axes(api: ModelApi, cache_len: int) -> Any:
     """Per-leaf batch-axis index of the cache tree (-1 for scalar position
     counters), discovered by diffing the shapes ``init_cache`` declares for
@@ -242,15 +253,22 @@ def _batch_axes(api: ModelApi, cache_len: int) -> Any:
     return jax.tree.map(axis, two, one)
 
 
-def _make_insert(axes: Any) -> Callable:
+def _make_insert(axes: Any, jit_wrap: Optional[Callable] = None) -> Callable:
     """Jitted in-place (donated) admission: writes a single-request cache
     into one slot of the pool arena, seeds the slot's feedback token from
     the prefill logits (argmax on device) and its owed-token counter — one
     dispatch per admission, no host sync.  Scalar counters (axis -1) land
     in the promoted per-slot (B,) vector.  Returns the (1,) first token so
-    the host can emit it lazily with the next chunk's sync."""
+    the host can emit it lazily with the next chunk's sync.
 
-    @functools.partial(jax.jit, donate_argnums=(0, 1, 2))
+    ``jit_wrap`` supplies the jit policy: plain donation by default; the
+    mesh-parallel engine (``runtime.mesh_serve``, DESIGN.md Section 10)
+    passes donation *plus* the arena in/out shardings, so a sharded pool
+    stays sharded across admissions and the replicated batch-1 prefill
+    cache reshards on the way in."""
+    wrap = jit_wrap or functools.partial(jax.jit, donate_argnums=(0, 1, 2))
+
+    @wrap
     def insert(pool, tokens, remaining, sub, logits, slot, rem):
         def one(pl, sl, ax):
             if ax < 0:
@@ -303,7 +321,9 @@ def weight_sparsity(params: Any,
             for v in t:
                 walk(v, name)
         elif name in names and hasattr(t, "ndim") and t.ndim >= 2 and \
-                jnp.issubdtype(t.dtype, jnp.floating):
+                t.size and jnp.issubdtype(t.dtype, jnp.floating):
+            # t.size == 0: zero-length layer stacks (stack_layers(n=0),
+            # e.g. the reduced hybrid's empty tail) have no zero fraction
             vals.append(float(sparsity_of(t)))
 
     walk(params)
@@ -376,15 +396,25 @@ class ServeEngine:
         # fall back to exact-length prefill
         window = getattr(api.cfg, "window", None)
         self._bucket_cap = min(cache_len, window or cache_len)
-        # the arena: init_cache's tree with scalar counters promoted to
-        # per-slot (B,) vectors (the decode paths' vector-pos branch)
-        cache = api.init_cache(num_slots, cache_len)
-        self.cache = jax.tree.map(
-            lambda leaf: jnp.zeros((num_slots,), leaf.dtype)
-            if leaf.ndim == 0 else leaf, cache)
-        self._insert = _make_insert(_batch_axes(api, cache_len))
-        self._tokens = jnp.zeros((num_slots, 1), jnp.int32)
-        self._remaining = jnp.zeros((num_slots,), jnp.int32)
+        self._init_device_state()
+
+    # device placement hooks: the mesh-parallel engine
+    # (runtime.mesh_serve.MeshServeEngine, DESIGN.md Section 10) overrides
+    # these to place the arena sharded and wrap _insert with shardings; the
+    # host-side bookkeeping above (scheduler, remaining mirror, outputs) is
+    # identical either way
+    _spmd_mesh = None          # consumed by _scope(); None = single-device
+
+    def _init_device_state(self) -> None:
+        """Allocate the arena (``_promote_arena`` over init_cache's tree),
+        the donated slot-insert jit, and the token/remaining device
+        buffers."""
+        self.cache = _promote_arena(
+            self.api.init_cache(self.num_slots, self.cache_len),
+            self.num_slots)
+        self._insert = _make_insert(_batch_axes(self.api, self.cache_len))
+        self._tokens = jnp.zeros((self.num_slots, 1), jnp.int32)
+        self._remaining = jnp.zeros((self.num_slots,), jnp.int32)
 
     # -- mode plumbing ------------------------------------------------------
 
@@ -401,7 +431,8 @@ class ServeEngine:
                        else DEFAULT_DECLARED_A)
         return sparse_execution(use_kernels=self.use_kernels,
                                 interpret=self.interpret,
-                                a_sparsity=a_scope, block_m=self.block_m)
+                                a_sparsity=a_scope, block_m=self.block_m,
+                                spmd_mesh=self._spmd_mesh)
 
     def _fns(self) -> Tuple[Callable, Callable, Callable]:
         fns = self._mode_fns.get(self.mode)

@@ -1,0 +1,183 @@
+"""Mesh-parallel serving: the fused-chunk engine partitioned over a
+("data", "model") device mesh (DESIGN.md Section 10).
+
+``MeshServeEngine`` is the multi-device face of ``runtime.engine
+.ServeEngine``: same scheduler, same host mirror, same fused decode-chunk
+ladder — but parameters live model-sharded (output-axis-only TP via
+``runtime.sharding.shard_params(serve=True)``, with ``GriffinWeights``
+b_comp sharding its N axis and the kidx/cnt/inv_perm scalar-prefetch
+metadata replicated), and the slot-pool KV arena shards its batch (slot)
+axis over "data" and its head axes over "model"
+(``runtime.sharding.shard_cache(decode=True)``).  Every per-Mode jit set
+(prefill, pooled decode, the fused chunk scan) is traced with explicit
+``in_shardings``/``out_shardings`` plus donation, so the arena updates in
+place *sharded* and only the (chunk, B) token ring, the admissions' first
+tokens, and the live-rows zero-fraction scalars cross back to the host —
+the host-sync budget of DESIGN.md Section 9 is unchanged by sharding.
+
+The layout is chosen so that no floating-point reduction is ever split
+across devices (contraction dims and softmax axes stay whole; sharded
+axes are output/batch/head axes, all reduction-free), which makes the
+sharded engine's logits — and therefore its greedy tokens — bit-identical
+to the single-device engine on the same trace, for all four execution
+Modes.  ``mesh=1x1`` degenerates to the single-device engine: the
+sharding specs are trivial and the Pallas kernel paths are kept;
+``mesh.size > 1`` swaps the kernels for their spec-respecting jnp
+fallbacks (``griffin_matmul(spmd=True)``, ``sparse_a_matmul(spmd=True)``)
+because ``pallas_call`` has no SPMD partitioning rule.
+
+Runs unmodified on an emulated CPU mesh
+(``XLA_FLAGS=--xla_force_host_platform_device_count=8``) — which is how
+the CI ``sharded`` job executes the parity matrix in
+``tests/test_mesh_serve.py`` — and on a real TPU slice via
+``launch/serve.py --mesh DxM``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.registry import ModelApi
+from .engine import ServeEngine, _batch_axes, _make_insert, _promote_arena
+from .serve import make_chunk_ladder
+from .sharding import shard_cache, shard_params
+
+
+def cache_heads(api: ModelApi) -> int:
+    """Head-axis extent of the model's cache leaves — the size
+    ``cache_spec(decode=True)`` matches to place "model" (KV heads for
+    attention caches, the head axis of mLSTM/sLSTM states).  Families
+    whose cache head count differs from ``num_kv_heads`` simply match
+    nothing and keep those leaves replicated (spec-respecting, never
+    wrong)."""
+    cfg = api.cfg
+    return int(getattr(cfg, "num_kv_heads", 0)
+               or getattr(cfg, "num_heads", 0) or 0)
+
+
+def _promoted_arena_shapes(api: ModelApi, num_slots: int,
+                           cache_len: int) -> Any:
+    """ShapeDtypeStructs of the engine's arena — ``engine._promote_arena``
+    over ``init_cache``, exactly what ``_init_device_state`` allocates."""
+    return jax.eval_shape(
+        lambda: _promote_arena(api.init_cache(num_slots, cache_len),
+                               num_slots))
+
+
+def serve_shardings(api: ModelApi, mesh: Mesh, params: Any, num_slots: int,
+                    cache_len: int) -> Tuple[Any, Any, NamedSharding]:
+    """(param, arena, replicated) NamedSharding trees for the mesh-serving
+    layout (DESIGN.md Section 10).  ``params`` is the tree actually being
+    served, so block-compacted ``GriffinWeights`` leaves get their own
+    b_comp/metadata specs."""
+    p_sh = shard_params(params, mesh, fsdp=False, serve=True)
+    arena = _promoted_arena_shapes(api, num_slots, cache_len)
+    c_sh = shard_cache(arena, mesh, num_slots, decode=True,
+                       heads=cache_heads(api))
+    return p_sh, c_sh, NamedSharding(mesh, P())
+
+
+def mesh_serve_fns(api: ModelApi, mesh: Mesh, params: Any, num_slots: int,
+                   cache_len: int, decode_chunk: int = 8, shardings=None):
+    """Returns (prefill_fn, decode_fn, chunk_for, (p_sh, c_sh, rep)) — the
+    sharded twin of ``runtime.serve.jit_serve_fns``, shaped for
+    ``ServeEngine``'s fns factory (one invocation per selected Mode, each
+    traced under that Mode's ``sparse_execution`` scope at first call).
+
+    Batch-1 admission prefills produce a *replicated* cache and logits
+    (their batch axis cannot shard), which the sharded ``_insert`` then
+    reshards into the arena; the fused chunk scan carries the arena with
+    its shardings end to end and donates cache/token/remaining buffers so
+    the pool updates in place.  Out-shardings pin the token ring and the
+    measurement scalars replicated — they are the only values the host
+    fetches per chunk.
+
+    ``shardings``: a precomputed ``serve_shardings`` triple —
+    ``MeshServeEngine`` passes its own so the per-Mode factory invocations
+    skip four redundant full-tree spec walks.
+    """
+    p_sh, c_sh, rep = shardings or serve_shardings(api, mesh, params,
+                                                   num_slots, cache_len)
+
+    def prefill_fn(params, inp):
+        return api.prefill(params, inp, cache_len=cache_len)
+
+    def decode_fn(params, cache, token):
+        return api.decode_step(params, cache, token)
+
+    prefill_jit = jax.jit(prefill_fn, in_shardings=(p_sh, rep),
+                          out_shardings=(rep, rep))
+    decode_jit = jax.jit(decode_fn, in_shardings=(p_sh, c_sh, rep),
+                         out_shardings=(rep, c_sh), donate_argnums=(1,))
+    chunk_for = make_chunk_ladder(
+        api, decode_chunk,
+        lambda fn: jax.jit(fn,
+                           in_shardings=(p_sh, c_sh, rep, rep),
+                           out_shardings=(c_sh, rep, rep, rep, rep, rep),
+                           donate_argnums=(1, 2, 3)))
+    return prefill_jit, decode_jit, chunk_for, (p_sh, c_sh, rep)
+
+
+class MeshServeEngine(ServeEngine):
+    """``ServeEngine`` partitioned over a ("data", "model") mesh.
+
+    Construction places the (possibly ``GriffinWeights``-compacted) param
+    tree onto the serving layout and the slot-pool arena onto the decode
+    cache layout; the admission insert is re-jitted with the arena
+    shardings (donated, so sharded admissions still update in place); and
+    every ``sparse_execution`` scope the engine enters carries
+    ``spmd_mesh`` so ``griffin_linear`` runs the mesh-partitionable GEMM
+    paths.  All host-side bookkeeping — scheduler, remaining mirror, ring
+    drain, measurement cadence, Mode-keyed jit sets — is inherited
+    untouched, which is the point: sharding is a placement concern, not a
+    scheduling one (DESIGN.md Section 10).
+
+    ``mesh=1x1`` (``launch.mesh.serve_mesh("1x1")``) is the single-device
+    special case: specs are trivial, ``spmd_mesh`` stays None, and the
+    engine behaves exactly like ``ServeEngine`` with sharding-annotated
+    jits.
+    """
+
+    def __init__(self, api: ModelApi, params: Any, *, mesh: Mesh,
+                 num_slots: int, cache_len: int,
+                 fns_factory: Optional[Callable] = None, **kw):
+        missing = {"data", "model"} - set(mesh.axis_names)
+        if missing:
+            raise ValueError(f"serving mesh needs axes ('data', 'model'), "
+                             f"got {mesh.axis_names}")
+        self.mesh = mesh
+        if mesh.size > 1:
+            self._spmd_mesh = mesh          # class default is None
+        self._shardings = serve_shardings(api, mesh, params, num_slots,
+                                          cache_len)
+        params = jax.tree.map(jax.device_put, params, self._shardings[0])
+        if fns_factory is None:
+            fns_factory = lambda: mesh_serve_fns(
+                api, mesh, self.params, num_slots, cache_len,
+                decode_chunk=self.decode_chunk, shardings=self._shardings)
+        super().__init__(api, params, num_slots=num_slots,
+                         cache_len=cache_len, fns_factory=fns_factory, **kw)
+
+    def _init_device_state(self) -> None:
+        """Sharded twin of the base allocation: arena placed on the decode
+        cache layout, ``_insert`` jitted with the arena in/out shardings
+        (pool donated), token/remaining buffers replicated — they return
+        to the host every chunk anyway."""
+        cache = _promote_arena(
+            self.api.init_cache(self.num_slots, self.cache_len),
+            self.num_slots)
+        _, c_sh, rep = self._shardings
+        self.cache = jax.tree.map(jax.device_put, cache, c_sh)
+        wrap = lambda f: jax.jit(
+            f, in_shardings=(c_sh, rep, rep, rep, rep, rep, rep),
+            out_shardings=(c_sh, rep, rep, rep), donate_argnums=(0, 1, 2))
+        self._insert = _make_insert(_batch_axes(self.api, self.cache_len),
+                                    jit_wrap=wrap)
+        self._tokens = jax.device_put(
+            jnp.zeros((self.num_slots, 1), jnp.int32), rep)
+        self._remaining = jax.device_put(
+            jnp.zeros((self.num_slots,), jnp.int32), rep)

@@ -1,6 +1,12 @@
 """Serving runtime: batched prefill + decode with sharded KV caches, the
 fused multi-step decode chunk (DESIGN.md Section 9), and prompt-bucket
-padding shared by the engine and its greedy oracle."""
+padding shared by the engine and its greedy oracle.
+
+``jit_serve_fns`` is the *lockstep* sharded factory (dp logits, pooled
+decode); the mesh-parallel slot-pool engine builds its per-Mode jit sets
+from ``runtime.mesh_serve.mesh_serve_fns`` instead, which reuses
+``make_chunk_ladder``/``make_decode_chunk_fn`` below with the serving
+layout's explicit shardings (DESIGN.md Section 10)."""
 from __future__ import annotations
 
 import dataclasses

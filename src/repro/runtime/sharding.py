@@ -19,6 +19,18 @@ Strategy (MaxText-style 2D "FSDP + TP"):
     the parent GEMM's rule, the compacted K rows stay whole (kidx ids are
     global), scalar-prefetch metadata replicates (DESIGN.md Section 4).
 
+A second, stricter layout serves the mesh-parallel decode engine
+(``serve=True`` / ``decode=True``, consumed by runtime.mesh_serve —
+DESIGN.md Section 10): every GEMM weight shards its **output (N) axis
+only** on "model" (contraction dims never split, so no partial-sum
+collectives reorder the reduction and sharded logits stay bit-identical
+to the single-device trace), embeddings shard the vocab axis (the tied
+unembed transpose then also contracts locally), and the slot-pool cache
+arena shards its batch axis over the dp axes plus its *head* axes on
+"model" — head axes are batch-like (per-head independence), so sharding
+them is also reduction-order-free.  Metadata stays replicated in both
+layouts.
+
 Divisibility is not required for correctness (GSPMD pads), but rules avoid
 padding where it matters; `_divides` guards the places XLA would waste.
 """
@@ -60,25 +72,40 @@ def _axis_size(mesh: Mesh, name) -> int:
 
 
 def param_spec(path: str, leaf, mesh: Mesh, fsdp: bool = True,
-               ep: bool = False) -> P:
+               ep: bool = False, serve: bool = False) -> P:
     """PartitionSpec for one parameter leaf, by trailing name + rank.
 
     ``ep=True`` shards MoE expert weights (L, E, D, F) with the *expert*
     axis on "model" (expert parallelism: token all-to-alls instead of
     expert-weight gathers) rather than TP-within-expert on F.
+
+    ``serve=True`` selects the decode-serving layout (DESIGN.md
+    Section 10): output-axis-only TP — every GEMM weight (including the
+    ``_OUT_IN`` projections that train-time TP shards on their input dim)
+    puts its last (output) axis on "model" and nothing on "data", and
+    embeddings shard the vocab axis so the tied-unembed transpose keeps
+    its contraction local.  No contraction dim is ever split, so the
+    sharded compute is a reduction-order-preserving rearrangement of the
+    single-device compute.
     """
     name = path.rstrip("']").split("'")[-1] if "'" in path else path
     rank = len(leaf.shape)
-    data_ax = "data" if (fsdp and "data" in mesh.axis_names) else None
+    data_ax = "data" if (fsdp and not serve
+                         and "data" in mesh.axis_names) else None
     child = name.rsplit(".", 1)[-1] if "." in name else ""
     if child in _GRIFFIN_META:
         return P(*([None] * rank))
     if child == "b_comp":
-        # parent GEMM name decides which mesh axis the output (N) dim gets
+        # parent GEMM name decides which mesh axis the output (N) dim gets;
+        # in the serving layout every parent's output axis goes to "model"
+        # (the compacted K rows are never split in either layout)
         parent = path[:path.rfind(".")]
         pname = parent.rstrip("']").split("'")[-1] if "'" in parent else parent
-        ax = "model" if pname in _IN_OUT else \
-            (data_ax if pname in _OUT_IN else None)
+        if serve:
+            ax = "model" if pname in _IN_OUT + _OUT_IN else None
+        else:
+            ax = "model" if pname in _IN_OUT else \
+                (data_ax if pname in _OUT_IN else None)
         return _checked(P(*([None] * (rank - 1) + [ax])), leaf, mesh)
     if name in _REPLICATE or rank <= 1:
         return P()
@@ -87,7 +114,7 @@ def param_spec(path: str, leaf, mesh: Mesh, fsdp: bool = True,
         # (L, E, D, F) or (L, E, F, D): experts over "model", in-dim FSDP
         return _checked(P(None, "model", data_ax, None), leaf, mesh)
     if name == "embed":
-        spec = ["model", data_ax]
+        spec = ["model", None] if serve else ["model", data_ax]
     elif name == "conv":
         spec = [None, "model"]
     elif name in ("rz", "ri", "rf", "ro") or (name in ("wq", "wk", "wv")
@@ -99,7 +126,8 @@ def param_spec(path: str, leaf, mesh: Mesh, fsdp: bool = True,
     elif name in _IN_OUT:
         spec = [None] * (rank - 2) + [data_ax, "model"]
     elif name in _OUT_IN:
-        spec = [None] * (rank - 2) + ["model", data_ax]
+        spec = ([None] * (rank - 2) + [None, "model"] if serve
+                else [None] * (rank - 2) + ["model", data_ax])
     else:
         spec = [None] * rank
     return _checked(P(*spec), leaf, mesh)
@@ -119,11 +147,11 @@ def _checked(spec: P, leaf, mesh: Mesh) -> P:
 
 
 def shard_params(params_shape: Any, mesh: Mesh, fsdp: bool = True,
-                 ep: bool = False) -> Any:
+                 ep: bool = False, serve: bool = False) -> Any:
     """NamedSharding tree for a (ShapeDtypeStruct or array) param tree."""
     flat, treedef = jax.tree_util.tree_flatten_with_path(params_shape)
     specs = [NamedSharding(mesh, param_spec(jax.tree_util.keystr(p), leaf,
-                                            mesh, fsdp, ep))
+                                            mesh, fsdp, ep, serve))
              for p, leaf in flat]
     return jax.tree_util.tree_unflatten(treedef, specs)
 
@@ -148,16 +176,32 @@ def shard_batch(batch: Any, mesh: Mesh) -> Any:
         lambda leaf: NamedSharding(mesh, batch_spec(leaf, mesh)), batch)
 
 
-def cache_spec(path: str, leaf, mesh: Mesh, batch: int) -> P:
+def cache_spec(path: str, leaf, mesh: Mesh, batch: int,
+               decode: bool = False, heads: int = 0) -> P:
     """KV caches and recurrent state.
 
-    batch dim -> dp axes; the *sequence* axis (longest remaining divisible
-    dim) -> 'model'.  Sequence-sharding the cache keeps per-chip capacity
-    (a command-r decode_32k cache is ~1 TB) while decode attention reduces
-    tiny (B, H) softmax partials instead of all-gathering the cache — the
+    Default (train/long-context) layout: batch dim -> dp axes; the
+    *sequence* axis (longest remaining divisible dim) -> 'model'.
+    Sequence-sharding the cache keeps per-chip capacity (a command-r
+    decode_32k cache is ~1 TB) while decode attention reduces tiny (B, H)
+    softmax partials instead of all-gathering the cache — the
     head_dim-sharded layout all-gathered the full cache every step
     (EXPERIMENTS.md Section Perf, iteration 4).  Batch-1 long-context cells
     shard the sequence over dp as well.
+
+    ``decode=True`` is the slot-pool arena layout of the mesh-parallel
+    serving engine (runtime.mesh_serve, DESIGN.md Section 10): the batch
+    (slot) axis shards over the dp axes — including rank-1 per-slot
+    position/state counters, the promoted ``(B,)`` vectors of
+    runtime.engine — and axes whose extent equals ``heads`` (KV heads of
+    attention caches, mLSTM/sLSTM head axes) shard on "model".  Head axes
+    are batch-like — no reduction ever crosses them — and the last axis
+    (head_dim / feature, a contraction dim in decode attention and the
+    recurrent cell updates) is deliberately never split, so sharded decode
+    stays a reduction-order-preserving rearrangement of the single-device
+    step.  Sequence stays whole: per-slot ``dynamic_update_slice`` writes
+    land at runtime-variable positions, and splitting them would turn every
+    cache write into cross-device traffic.
     """
     dp = dp_axes(mesh)
     dpn = _axis_size(mesh, dp)
@@ -172,6 +216,18 @@ def cache_spec(path: str, leaf, mesh: Mesh, batch: int) -> P:
             spec[i] = dp
             placed_dp = i
             break
+    if decode:
+        if mdl > 1 and heads > 0 and _divides(heads, mdl):
+            # scan from the tail (skipping the last, contraction-bearing
+            # axis): head axes sit rightmost in every family's cache
+            # layout, so when a leading layer/sequence axis coincidentally
+            # equals ``heads`` (e.g. cache_len == num_kv_heads) the real
+            # head axis still wins and sequence stays whole
+            for i in range(len(shape) - 2, -1, -1):
+                if i != placed_dp and shape[i] == heads:
+                    spec[i] = "model"
+                    break
+        return P(*spec)
     if placed_dp is None:
         # batch too small: shard the longest divisible axis (the KV seq)
         cand = [(d, i) for i, d in enumerate(shape[:-1])
@@ -188,9 +244,10 @@ def cache_spec(path: str, leaf, mesh: Mesh, batch: int) -> P:
     return P(*spec)
 
 
-def shard_cache(cache: Any, mesh: Mesh, batch: int) -> Any:
+def shard_cache(cache: Any, mesh: Mesh, batch: int,
+                decode: bool = False, heads: int = 0) -> Any:
     flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
     specs = [NamedSharding(mesh, cache_spec(jax.tree_util.keystr(p), leaf,
-                                            mesh, batch))
+                                            mesh, batch, decode, heads))
              for p, leaf in flat]
     return jax.tree_util.tree_unflatten(treedef, specs)

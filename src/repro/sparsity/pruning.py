@@ -146,6 +146,11 @@ def sparsify_params(params: Any, sparsity: float, *, block_k: int = 128,
                                       unit=un, balance=balance)
         lead = w.shape[:-2]
         flat = w.reshape((-1,) + w.shape[-2:])
+        if flat.shape[0] == 0:
+            # zero-length layer stack (stack_layers(n=0), e.g. the reduced
+            # hybrid's empty tail): nothing to compact, and scan over the
+            # length-0 xs is a no-op either way — keep the empty leaf
+            return w
         slices = [one(flat[i]) for i in range(flat.shape[0])]
         if not compact:
             return jnp.stack(slices).reshape(w.shape)

@@ -40,10 +40,10 @@ FAMILY_ARCHS = {
     "xlstm": "xlstm-1.3b",
     "hybrid": "recurrentgemma-9b",
 }
-# rglru's weight GEMMs are plain jnp matmuls (not griffin_linear-wired), so
-# sparsify_params would hand its blocks GriffinWeights they cannot execute:
-# the hybrid family runs the dense parity sweep only
-SPARSE_FAMILIES = sorted(f for f in FAMILY_ARCHS if f != "hybrid")
+# all five families are griffin_linear-wired (the rglru hybrid joined the
+# substrate with the mesh-serving PR), so every family runs the sparse
+# sweep too
+SPARSE_FAMILIES = sorted(FAMILY_ARCHS)
 PRUNE = dict(block_k=16, block_n=16, unit=8)   # reduced dims (d_model 64)
 
 

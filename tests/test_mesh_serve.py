@@ -1,0 +1,311 @@
+"""Mesh-parallel serving tests (DESIGN.md Section 10).
+
+Two tiers:
+
+  - tier-1 (unmarked, runs on one device): the sharding *rules* — the
+    serving param layout never splits a contraction dim, the decode cache
+    layout places slots on "data" and head axes on "model" — plus the
+    ``decompact_weights`` fallback oracle, the ``serve_mesh`` spec parser,
+    and the ``mesh=1x1`` special case collapsing onto the plain engine.
+
+  - tier2 + mesh (the CI ``sharded`` job:
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8 pytest -m mesh``):
+    the parity matrix — mesh {1x2, 2x2, 2x4} x {dense, sparse-B} x
+    decode_chunk {1, 3} must emit tokens identical to the *unsharded*
+    ``ServeEngine`` on the same mixed trace, plus all four execution Modes
+    on 2x4, family coverage (xlstm / whisper / moe / hybrid), and the
+    host-sync budget surviving sharding.  Skipped (not failed) when the
+    process has too few devices, so the default tier-2 job stays green on
+    one device.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.core.spec import Mode
+from repro.kernels.griffin_spmm.ops import (decompact_weights,
+                                            preprocess_weights)
+from repro.launch.mesh import serve_mesh
+from repro.models import build_model
+from repro.runtime.engine import ServeEngine, synthetic_trace
+from repro.runtime.mesh_serve import MeshServeEngine, cache_heads
+from repro.runtime.sharding import cache_spec, param_spec
+from repro.sparsity import sparsify_params
+from repro.sparsity.pruning import block_prune
+
+PRUNE = dict(block_k=16, block_n=16, unit=8)   # reduced dims (d_model 64)
+
+
+def _needs_devices(n: int):
+    return pytest.mark.skipif(
+        len(jax.devices()) < n,
+        reason=f"needs {n} devices (export XLA_FLAGS="
+               "--xla_force_host_platform_device_count=8)")
+
+
+@dataclasses.dataclass(frozen=True)
+class _SpecMesh:
+    """Shape-only stand-in: the spec rules consult only .shape/.axis_names,
+    so tier-1 can exercise multi-device layouts without multiple devices."""
+    shape: dict
+    axis_names: tuple
+
+
+MESH22 = _SpecMesh({"data": 2, "model": 2}, ("data", "model"))
+
+
+# ---------------------------------------------------------------------------
+# tier-1: layout rules
+# ---------------------------------------------------------------------------
+
+def test_serve_param_spec_shards_output_axes_only():
+    """The serving layout must never split a contraction dim: _IN_OUT and
+    _OUT_IN weights alike get their *last* (output) axis on "model", and
+    nothing lands on "data" (no FSDP at decode)."""
+    wq = jax.ShapeDtypeStruct((4, 64, 128), jnp.float32)
+    assert param_spec("['layers']['wq']", wq, MESH22, serve=True) == \
+        P(None, None, "model")
+    wo = jax.ShapeDtypeStruct((4, 128, 64), jnp.float32)
+    assert param_spec("['layers']['wo']", wo, MESH22, serve=True) == \
+        P(None, None, "model")          # train layout shards the input dim
+    assert param_spec("['layers']['wo']", wo, MESH22, serve=False) == \
+        P(None, "model", "data")
+    # embeddings shard the vocab axis: the tied unembed transpose then
+    # contracts locally too
+    emb = jax.ShapeDtypeStruct((1000, 64), jnp.float32)
+    assert param_spec("['embed']", emb, MESH22, serve=True) == \
+        P("model", None)
+    ln = jax.ShapeDtypeStruct((64,), jnp.float32)
+    assert param_spec("['ln1']", ln, MESH22, serve=True) == P()
+
+
+def test_serve_param_spec_compacted_metadata_replicates():
+    """b_comp shards its N axis on "model" for *both* GEMM directions in
+    the serving layout; kidx/cnt/inv_perm metadata always replicates (the
+    ids are global — per-shard counts would diverge)."""
+    b = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    assert param_spec("['layers']['wq'].b_comp", b, MESH22, serve=True) == \
+        P(None, "model")
+    assert param_spec("['layers']['wo'].b_comp", b, MESH22, serve=True) == \
+        P(None, "model")
+    # train layout: _OUT_IN parents put N on the fsdp axis instead
+    assert param_spec("['layers']['wo'].b_comp", b, MESH22, serve=False) == \
+        P(None, "data")
+    kidx = jax.ShapeDtypeStruct((8, 4), jnp.int32)
+    for meta in ("kidx", "cnt", "inv_perm"):
+        assert param_spec(f"['layers']['wq'].{meta}", kidx, MESH22,
+                          serve=True) == P(None, None)
+
+
+def test_cache_spec_decode_layout():
+    """Arena layout: slot (batch) axis -> dp, head axes -> "model", and the
+    last axis (head_dim / feature — a contraction dim in decode attention)
+    never splits."""
+    kv = jax.ShapeDtypeStruct((2, 4, 31, 4, 16), jnp.float32)  # L,B,S,KVH,hd
+    spec = cache_spec("['k']", kv, MESH22, batch=4, decode=True, heads=4)
+    assert spec[1] in ("data", ("data",))
+    assert spec[3] == "model"
+    assert spec[4] is None
+    # promoted per-slot (B,) counters ride the dp axes too
+    pos = cache_spec("['pos']", jax.ShapeDtypeStruct((4,), jnp.int32),
+                     MESH22, batch=4, decode=True, heads=4)
+    assert pos[0] in ("data", ("data",))
+    # heads that do not divide the model axis: leaf stays replicated on
+    # that axis rather than sharded wrong (spec-respecting fallback)
+    spec3 = cache_spec("['k']", kv, MESH22, batch=4, decode=True, heads=3)
+    assert spec3[3] is None
+    # a sequence/layer axis coincidentally equal to `heads` must lose to
+    # the real (rightmost non-last) head axis — sequence stays whole
+    kv_eq = jax.ShapeDtypeStruct((2, 4, 8, 8, 16), jnp.float32)
+    spec_eq = cache_spec("['k']", kv_eq, MESH22, batch=4, decode=True,
+                         heads=8)
+    assert spec_eq[3] == "model" and spec_eq[2] is None
+    # the default (train/long-context) layout is untouched by the new args
+    legacy = cache_spec("['k']", kv, MESH22, batch=4)
+    assert legacy == cache_spec("['k']", kv, MESH22, batch=4, decode=False)
+
+
+def test_decompact_weights_is_exact():
+    """The SPMD fallback's decompaction must reproduce the block-pruned
+    matrix bit-exactly — surviving values are never changed by
+    preprocessing — including under the balance shuffle's permutation."""
+    rng = np.random.default_rng(0)
+    w = rng.standard_normal((64, 96)).astype(np.float32)
+    wp = np.asarray(block_prune(jnp.asarray(w), 0.6, 16, 8))
+    for balance in (False, True):
+        gw = preprocess_weights(wp, block_k=16, block_n=16, unit=8,
+                                balance=balance)
+        np.testing.assert_array_equal(np.asarray(decompact_weights(gw)), wp)
+
+
+def test_serve_mesh_spec_parsing():
+    m = serve_mesh("1x1")
+    assert m.axis_names == ("data", "model") and m.size == 1
+    for bad in ("", "2", "2x", "x2", "ax2", "0x1", "2x2x2"):
+        with pytest.raises(ValueError):
+            serve_mesh(bad)
+    with pytest.raises(ValueError):
+        serve_mesh(f"{len(jax.devices()) + 1}x1")   # more than exist
+
+
+def test_cache_heads_matches_config():
+    api = build_model(get_config("llama3.2-1b").reduced())
+    assert cache_heads(api) == api.cfg.num_kv_heads
+
+
+# ---------------------------------------------------------------------------
+# tier-1: mesh=1x1 special case == plain engine
+# ---------------------------------------------------------------------------
+
+def _trace(cfg, n=4):
+    return synthetic_trace(cfg, num_requests=n, seed=11,
+                           prompt_lens=(6, 10), gen_lens=(2, 4),
+                           arrival_every=1)
+
+
+def test_mesh_engine_1x1_matches_plain_engine():
+    cfg = get_config("llama3.2-1b").reduced()
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    ref = ServeEngine(api, params, num_slots=4, cache_len=16,
+                      decode_chunk=3).run(_trace(cfg))
+    eng = MeshServeEngine(api, params, mesh=serve_mesh("1x1"), num_slots=4,
+                          cache_len=16, decode_chunk=3)
+    assert eng._spmd_mesh is None       # kernels stay on the 1-device paths
+    out = eng.run(_trace(cfg))
+    assert {r: o.tokens for r, o in out.items()} == \
+        {r: o.tokens for r, o in ref.items()}
+
+
+def test_mesh_engine_rejects_wrong_axis_names():
+    cfg = get_config("llama3.2-1b").reduced()
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    from jax.sharding import Mesh
+    bad = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("x", "y"))
+    with pytest.raises(ValueError):
+        MeshServeEngine(api, params, mesh=bad, num_slots=2, cache_len=16)
+
+
+# ---------------------------------------------------------------------------
+# tier2 + mesh: the sharded parity matrix (CI `sharded` job)
+# ---------------------------------------------------------------------------
+
+_REF_CACHE: dict = {}
+
+
+def _reference(api, params, key, n_req, chunk, **kw):
+    """Unsharded ServeEngine tokens for a workload, memoized per matrix
+    cell family so the 12-cell sweep does not rebuild it 12 times."""
+    if key not in _REF_CACHE:
+        eng = ServeEngine(api, params, num_slots=4, cache_len=16,
+                          decode_chunk=chunk, **kw)
+        outs = eng.run(_trace(api.cfg, n_req))
+        _REF_CACHE[key] = ({r: o.tokens for r, o in outs.items()},
+                           eng.mode, eng.mode_history)
+    return _REF_CACHE[key]
+
+
+def _mesh_parity(arch, mesh_spec, sparse, chunk, n_req=4, a_sparsity=None,
+                 expect_mode=None):
+    cfg = get_config(arch).reduced()
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    refkw, kw = {}, {}
+    if sparse:
+        params = sparsify_params(params, 0.6, **PRUNE)
+        refkw = dict(use_kernels=True, interpret=True)
+    if a_sparsity is not None:
+        refkw["a_sparsity"] = kw["a_sparsity"] = a_sparsity
+    ref_tokens, ref_mode, ref_hist = _reference(
+        api, params, (arch, sparse, chunk, a_sparsity), n_req, chunk,
+        **refkw)
+    assert len(ref_hist) == 1, "mid-run mode flip would break the replay"
+    eng = MeshServeEngine(api, params, mesh=serve_mesh(mesh_spec),
+                          num_slots=4, cache_len=16, decode_chunk=chunk,
+                          **kw)
+    outs = eng.run(_trace(cfg, n_req))
+    assert eng.mode == ref_mode
+    if expect_mode is not None:
+        assert eng.mode == expect_mode
+    got = {r: o.tokens for r, o in outs.items()}
+    assert got == ref_tokens, (arch, mesh_spec, sparse, chunk)
+    if eng.mesh.size > 1:
+        # the run must actually have been sharded: at least one param leaf
+        # and one arena leaf carry a non-trivial spec
+        def axes(tree):
+            return {ax for leaf in jax.tree.leaves(tree)
+                    for entry in leaf.sharding.spec if entry is not None
+                    for ax in ((entry,) if isinstance(entry, str)
+                               else tuple(entry))}
+        assert "model" in axes(eng.params), "no param leaf is model-sharded"
+        assert axes(eng.cache), "no arena leaf is sharded"
+    return eng
+
+
+@pytest.mark.tier2
+@pytest.mark.mesh
+@_needs_devices(8)
+@pytest.mark.parametrize("mesh_spec", ["1x2", "2x2", "2x4"])
+@pytest.mark.parametrize("sparse", [False, True], ids=["dense", "sparseB"])
+@pytest.mark.parametrize("chunk", [1, 3])
+def test_mesh_parity_matrix(mesh_spec, sparse, chunk):
+    """Tokens identical to the single-device engine across mesh shapes,
+    weight representations and chunk lengths (acceptance criterion)."""
+    _mesh_parity("llama3.2-1b", mesh_spec, sparse, chunk)
+
+
+@pytest.mark.tier2
+@pytest.mark.mesh
+@_needs_devices(8)
+@pytest.mark.parametrize("mode", list(Mode), ids=[m.value for m in Mode])
+def test_mesh_parity_all_four_modes_2x4(mode):
+    """Each execution Mode's jit set serves token-identically under
+    sharding: declared activation sparsity drives DENSE->A and B->AB
+    exactly as in core.hybrid.select_mode."""
+    sparse = mode in (Mode.B, Mode.AB)
+    a = 0.9 if mode in (Mode.A, Mode.AB) else None
+    eng = _mesh_parity("llama3.2-1b", "2x4", sparse, chunk=3, a_sparsity=a,
+                       expect_mode=mode)
+    assert [m for _, m in eng.mode_history] == [mode]
+
+
+@pytest.mark.tier2
+@pytest.mark.mesh
+@_needs_devices(8)
+@pytest.mark.parametrize("arch", ["xlstm-1.3b", "whisper-large-v3",
+                                  "mixtral-8x7b", "recurrentgemma-9b"])
+def test_mesh_parity_families_2x2(arch):
+    """Every registry family — including the rglru hybrid, whose GEMMs
+    joined the griffin_linear substrate with this PR — serves
+    token-identically on a 2x2 mesh."""
+    _mesh_parity(arch, "2x2", sparse=False, chunk=3, n_req=3)
+
+
+@pytest.mark.tier2
+@pytest.mark.mesh
+@_needs_devices(8)
+def test_mesh_sync_budget_survives_sharding():
+    """Sharding must not add host syncs: the fused-chunk budget of
+    DESIGN.md Section 9 holds on the mesh for a chunk-sustaining trace."""
+    cfg = get_config("llama3.2-1b").reduced()
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    reqs = synthetic_trace(cfg, num_requests=6, seed=1,
+                           prompt_lens=(8, 12), gen_lens=(12, 16, 24),
+                           arrival_every=1)
+    ref = ServeEngine(api, params, num_slots=4, cache_len=48,
+                      decode_chunk=8)
+    refout = ref.run([dataclasses.replace(r) for r in reqs])
+    eng = MeshServeEngine(api, params, mesh=serve_mesh("2x4"), num_slots=4,
+                          cache_len=48, decode_chunk=8)
+    out = eng.run(reqs)
+    assert {r: o.tokens for r, o in out.items()} == \
+        {r: o.tokens for r, o in refout.items()}
+    assert eng.stats["host_syncs"] == ref.stats["host_syncs"]
+    assert eng.stats["host_syncs"] / eng.stats["emitted"] <= 0.25
