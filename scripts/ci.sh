@@ -18,6 +18,7 @@
 #   e2e               registry models through the substrate (smoke)
 #   docs              DESIGN.md citation check
 #   mesh              8-device emulated mesh: sharded parity tier + smoke
+#   chaos             8-device emulated mesh: fault-injection matrix + smoke
 #   clean             worktree clean after the run (smoke CSV churn reset)
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -97,6 +98,18 @@ stage_mesh() {
     )
 }
 
+stage_chaos() {
+    echo "== chaos: deterministic fault injection on an emulated 8-device"
+    echo "==   CPU mesh (DESIGN.md Section 11) — kill/delay mid-trace, the"
+    echo "==   engine must remesh onto the survivors and finish token-exact"
+    (
+        export XLA_FLAGS="--xla_force_host_platform_device_count=8 ${XLA_FLAGS:-}"
+        run python -m pytest -x -q -m chaos tests/test_fault_tolerance.py
+        run python examples/sparse_serve.py --mesh 2x2 \
+            --inject-fault kill:-1@3:decode
+    )
+}
+
 stage_clean() {
     echo "== clean worktree: the smoke stages above just rewrote the two"
     echo "==   committed benchmark CSVs — restore exactly those (their"
@@ -114,7 +127,7 @@ stage_clean() {
 }
 
 ALL_STAGES="tier1 kernel tier2 serve bench-regression serve-bench fig5 e2e \
-docs mesh clean"
+docs mesh chaos clean"
 STAGES="${*:-$ALL_STAGES}"
 for s in $STAGES; do
     case "$s" in
@@ -128,6 +141,7 @@ for s in $STAGES; do
         e2e) stage_e2e ;;
         docs) stage_docs ;;
         mesh) stage_mesh ;;
+        chaos) stage_chaos ;;
         clean) stage_clean ;;
         *) echo "unknown stage: $s (known: $ALL_STAGES)"; exit 2 ;;
     esac

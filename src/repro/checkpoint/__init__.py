@@ -1,1 +1,2 @@
-from .checkpoint import (PreemptionGuard, latest_step, restore, save)
+from .checkpoint import (PreemptionGuard, latest_step, read_manifest,
+                         restore, save)

@@ -9,7 +9,12 @@
   recovery after node failure, see runtime/elastic.py);
 - retention: keeps the newest ``keep`` checkpoints;
 - preemption: ``install_sigterm_handler`` flips a flag the train loop polls
-  to save-and-exit cleanly.
+  to save-and-exit cleanly;
+- serving snapshots: the fault-tolerant engines write their live state
+  (slot-pool arena, per-slot counters, compacted weights) through ``save``
+  with the scheduler queues in the manifest's ``extra`` (``read_manifest``
+  gets them back), and recover through ``restore`` onto the post-loss
+  mesh's shardings (DESIGN.md Section 11).
 """
 from __future__ import annotations
 
@@ -81,6 +86,21 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
         return None
     steps = sorted(d for d in os.listdir(ckpt_dir) if d.startswith("step_"))
     return int(steps[-1].split("_")[1]) if steps else None
+
+
+def read_manifest(ckpt_dir: str, step: Optional[int] = None) -> Dict:
+    """The manifest of checkpoint ``step`` (latest by default): tree keys,
+    shapes, dtypes and the ``extra`` dict ``save`` recorded.  The serving
+    engines keep their scheduler queues there
+    (``runtime.engine.Scheduler.state_dict``), so a fresh process can
+    rebuild the host side of a snapshot and resume the trace (DESIGN.md
+    Section 11)."""
+    step = step if step is not None else latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:010d}", "manifest.json")
+    with open(path) as f:
+        return json.load(f)
 
 
 def restore(ckpt_dir: str, template: Any, step: Optional[int] = None,

@@ -38,6 +38,13 @@ def serve_mesh(spec: str = "1x1", devices=None):
     return Mesh(np.array(devs[:d * m]).reshape(d, m), ("data", "model"))
 
 
+def mesh_spec(mesh) -> str:
+    """The ``"DxM"`` spec of a serving mesh — inverse of ``serve_mesh`` and
+    the string the fault-tolerant engines log after an elastic remesh
+    (DESIGN.md Section 11)."""
+    return (f"{mesh.shape.get('data', 1)}x{mesh.shape.get('model', 1)}")
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")

@@ -24,16 +24,33 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import build_model
-from repro.launch.mesh import serve_mesh
+from repro.launch.mesh import mesh_spec, serve_mesh
 from repro.runtime.elastic import plan_mesh
 from repro.runtime.engine import ServeEngine, synthetic_trace
+from repro.runtime.fault import parse_fault_spec
 from repro.runtime.mesh_serve import MeshServeEngine
 from repro.runtime.serve import greedy_generate, jit_serve_fns
+from repro.runtime.straggler import StragglerConfig, StragglerDetector
 from repro.sparsity import sparsify_params
 
 
 def _lens(spec: str):
     return tuple(int(x) for x in spec.split(",") if x)
+
+
+def _fault_hooks(args, devices, num_hosts):
+    """(injector, detector) from ``--inject-fault`` (DESIGN.md Section 11);
+    a delay spec also arms a straggler detector so the eviction path — not
+    the injector — drives the recovery."""
+    if not args.inject_fault:
+        return None, None
+    spec = parse_fault_spec(args.inject_fault)
+    injector = spec.build(devices)
+    detector = None
+    if spec.kind == "delay":
+        detector = StragglerDetector(
+            num_hosts, StragglerConfig(evict_after=args.evict_after))
+    return injector, detector
 
 
 def build_engine(api, params, args, mesh) -> ServeEngine:
@@ -45,6 +62,8 @@ def build_engine(api, params, args, mesh) -> ServeEngine:
         # Pallas kernels only there — a >1 mesh runs the spec-respecting
         # jnp fallbacks, so --use-kernels implies interpret only on 1x1.
         smesh = serve_mesh(args.mesh)
+        injector, detector = _fault_hooks(
+            args, list(smesh.devices.flat), smesh.devices.shape[0])
         return MeshServeEngine(
             api, params, mesh=smesh, num_slots=args.slots,
             cache_len=cache_len, policy=args.policy,
@@ -52,7 +71,11 @@ def build_engine(api, params, args, mesh) -> ServeEngine:
             interpret=(args.use_kernels and smesh.size == 1
                        and jax.default_backend() == "cpu"),
             measure_every=args.measure_every,
-            decode_chunk=args.decode_chunk)
+            decode_chunk=args.decode_chunk,
+            fault_injector=injector, straggler=detector,
+            snapshot_dir=args.snapshot_dir,
+            recovery_model_parallel=args.remesh_model_parallel)
+    injector, detector = _fault_hooks(args, jax.devices(), 1)
     return ServeEngine(
         api, params, num_slots=args.slots, cache_len=cache_len,
         fns_factory=lambda: jit_serve_fns(api, mesh, args.slots, cache_len,
@@ -60,7 +83,9 @@ def build_engine(api, params, args, mesh) -> ServeEngine:
                                           decode_chunk=args.decode_chunk),
         policy=args.policy, use_kernels=args.use_kernels,
         interpret=args.use_kernels and jax.default_backend() == "cpu",
-        measure_every=args.measure_every, decode_chunk=args.decode_chunk)
+        measure_every=args.measure_every, decode_chunk=args.decode_chunk,
+        fault_injector=injector, straggler=detector,
+        snapshot_dir=args.snapshot_dir)
 
 
 def main(argv=None) -> None:
@@ -97,6 +122,26 @@ def main(argv=None) -> None:
     ap.add_argument("--parity", action="store_true",
                     help="assert engine tokens == greedy_generate per "
                          "request")
+    ap.add_argument("--inject-fault", default=None, metavar="SPEC",
+                    help="deterministic chaos (DESIGN.md Section 11): "
+                         "'kill:<dev>@<step>[:<phase>]' raises a DeviceLoss "
+                         "for mesh device index <dev> at engine step <step> "
+                         "(phase admission|prefill|decode, default decode); "
+                         "'delay:<host>@<step>[:<factor>]' inflates one "
+                         "data-row's step times until the straggler "
+                         "detector evicts it.  Either way the engine "
+                         "snapshots, remeshes onto the survivors and "
+                         "finishes the trace token-exactly")
+    ap.add_argument("--snapshot-dir", default=None,
+                    help="write tick-start snapshots through "
+                         "checkpoint.save here and recover via "
+                         "checkpoint.restore (default keeps snapshots "
+                         "in host memory)")
+    ap.add_argument("--remesh-model-parallel", type=int, default=None,
+                    help="TP degree cap for the post-loss mesh "
+                         "(default: keep the current model-axis size)")
+    ap.add_argument("--evict-after", type=int, default=3,
+                    help="straggler eviction streak for delay faults")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -139,6 +184,17 @@ def main(argv=None) -> None:
           f"mode history {[(s, m.value) for s, m in engine.mode_history]}")
     first = outs[reqs[0].rid]
     print("request 0 token ids:", np.asarray(first.tokens[:12]))
+
+    if args.inject_fault:
+        assert len(outs) == len(reqs), (
+            f"fault run finished {len(outs)}/{len(reqs)} requests")
+        assert all(len(o.tokens) > 0 for o in outs.values()), (
+            "fault run produced an empty completion")
+        final = (mesh_spec(engine.mesh) if isinstance(engine, MeshServeEngine)
+                 else "unsharded")
+        print(f"fault injected ({args.inject_fault}): "
+              f"{engine.recoveries} recoveries, log {engine.recovery_log}, "
+              f"final mesh {final}; all {len(reqs)} requests completed")
 
     if args.max_syncs_per_token > 0:
         assert syncs_per_tok <= args.max_syncs_per_token, (

@@ -1,33 +1,70 @@
-"""Elastic scaling: remesh on device-count change and reshard state.
+"""Elastic scaling: remesh on device-count change and reshard state
+(DESIGN.md Section 11).
 
-On node failure (or quota change) the launcher calls ``plan_mesh`` with the
-surviving device count, rebuilds shardings, and ``reshard``s the latest
-state (either live arrays or a checkpoint via checkpoint.restore's
-shardings argument).  The data pipeline is deterministic in (step, shard),
-so the run continues bit-exactly modulo the reduction order.
+On device loss (or quota change) the recovering engine/launcher calls
+``plan_mesh`` with the surviving devices, rebuilds shardings
+(``runtime.sharding``), and ``reshard``s the latest state — either live
+arrays or a checkpoint via ``checkpoint.restore``'s shardings argument.
+The serving layout never splits a reduction (DESIGN.md Section 10) and the
+data pipeline is deterministic in (step, shard), so the run continues
+bit-exactly on the new mesh.
 """
 from __future__ import annotations
 
-from typing import Any, Optional, Sequence, Tuple
+from typing import Any, List, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
-from jax.sharding import Mesh, NamedSharding
+from jax.sharding import Mesh
+
+
+def _pow2_floor(n: int) -> int:
+    return 1 << (int(n).bit_length() - 1)
+
+
+def plan_mesh_shape(n_devices: int, model_parallel: int) -> Tuple[int, int]:
+    """The (data, model) shape ``plan_mesh`` will build — a pure function
+    so degenerate survivor counts are unit-testable without devices
+    (tests/test_fault_tolerance.py pins the full table).
+
+    Contract: both axes are powers of two (stable collectives); the model
+    axis is the largest power of two that is <= ``model_parallel`` *and*
+    fits ``n_devices`` (a lone survivor serves 1x1 no matter the requested
+    TP degree); the data axis then takes the largest power-of-two number
+    of model-axis blocks; devices beyond ``data * model`` are dropped
+    (stragglers beyond the largest usable block).
+    """
+    if n_devices < 1:
+        raise ValueError(f"n_devices must be >= 1, got {n_devices}")
+    if model_parallel < 1:
+        raise ValueError(f"model_parallel must be >= 1, got {model_parallel}")
+    model = _pow2_floor(min(model_parallel, n_devices))
+    data = _pow2_floor(max(n_devices // model, 1))
+    return data, model
 
 
 def plan_mesh(n_devices: int, model_parallel: int,
               devices: Optional[Sequence] = None) -> Mesh:
-    """Largest (data, model) mesh that fits n_devices with the given TP
-    degree; drops stragglers beyond the largest usable power-of-two block."""
-    if n_devices < model_parallel:
-        model_parallel = max(1, 2 ** int(np.floor(np.log2(n_devices))))
-    data = n_devices // model_parallel
-    # keep data a power of two for stable collectives
-    data = 2 ** int(np.floor(np.log2(max(data, 1))))
-    use = data * model_parallel
-    devs = list(devices or jax.devices())[:use]
-    arr = np.array(devs).reshape(data, model_parallel)
-    return Mesh(arr, ("data", "model"))
+    """Largest ("data", "model") mesh that fits ``n_devices`` with TP
+    degree at most ``model_parallel`` (shape per ``plan_mesh_shape``).
+    ``devices`` defaults to ``jax.devices()``; passing the survivor list
+    after a loss is the elastic-recovery path (DESIGN.md Section 11)."""
+    data, model = plan_mesh_shape(n_devices, model_parallel)
+    use = data * model
+    devs = list(jax.devices() if devices is None else devices)
+    if len(devs) < use:
+        raise ValueError(f"planned mesh {data}x{model} needs {use} devices, "
+                         f"have {len(devs)}")
+    arr = np.empty((use,), dtype=object)
+    arr[:] = devs[:use]
+    return Mesh(arr.reshape(data, model), ("data", "model"))
+
+
+def surviving(mesh_devices: Any, lost_ids: Sequence[int]) -> List:
+    """A mesh's device list minus the lost ids, in mesh order — the
+    ``devices`` argument the recovering engine hands ``plan_mesh``."""
+    lost = set(int(i) for i in lost_ids)
+    return [d for d in np.asarray(mesh_devices).flat if d.id not in lost]
 
 
 def reshard(state: Any, shardings: Any) -> Any:

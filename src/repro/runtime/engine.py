@@ -35,22 +35,27 @@ bucket — token for token.
 """
 from __future__ import annotations
 
+import copy
 import dataclasses
 import functools
 import heapq
+import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..checkpoint.checkpoint import restore as ckpt_restore, save as ckpt_save
 from ..core.hybrid import SPARSE_THRESHOLD, select_mode
 from ..core.spec import Mode
 from ..kernels.griffin_spmm.ops import GriffinWeights
 from ..models.common import sparse_execution
 from ..models.registry import ModelApi
 from ..sparsity.pruning import GEMM_WEIGHTS, sparsity_of
+from .fault import DeviceLoss, FaultInjector
 from .serve import make_chunk_ladder, pad_prompt_batch
+from .straggler import StragglerDetector
 
 # Category knob handed to the sparse_execution scope when the *measured*
 # activation sparsity selects an A-side mode and no declared value exists:
@@ -214,6 +219,59 @@ class Scheduler:
     def has_work(self) -> bool:
         return bool(self._by_arrival or self._ready or self.running)
 
+    # -- snapshot plumbing (DESIGN.md Section 11) ---------------------------
+
+    def state_dict(self) -> Dict:
+        """JSON-serializable snapshot of every queue — rides a checkpoint
+        manifest's ``extra`` (checkpoint.read_manifest) so a fresh process
+        can rebuild the host side of an engine snapshot and resume the
+        trace.  Request token arrays become int lists; ``extras`` arrays
+        (whisper frames) nested float lists — exact round-trips, floats
+        included (float32 -> Python float -> float32 is lossless)."""
+        def req(r: Request) -> Dict:
+            d = {"rid": r.rid, "tokens": np.asarray(r.tokens).tolist(),
+                 "max_new_tokens": r.max_new_tokens, "arrival": r.arrival}
+            if r.extras:
+                d["extras"] = {k: [str(np.asarray(v).dtype),
+                                   np.asarray(v).tolist()]
+                               for k, v in r.extras.items()}
+            return d
+        return {"num_slots": self.num_slots, "policy": self.policy,
+                "max_admissions": self.max_admissions, "seq": self._seq,
+                "by_arrival": [[a, s, req(r)]
+                               for a, s, r in sorted(self._by_arrival)],
+                "ready": [[s, req(r)] for s, r in sorted(self._ready)],
+                "running": {str(slot): req(r)
+                            for slot, r in self.running.items()},
+                "remaining": {str(s): int(n)
+                              for s, n in self.remaining.items()},
+                "finished": list(self.finished),
+                "free": list(self._free)}
+
+    @classmethod
+    def from_state_dict(cls, d: Dict) -> "Scheduler":
+        """Inverse of ``state_dict`` — reconstructs the exact queue state
+        (heap entries, submission counter, free-slot stack), so admission
+        order after a restore equals the uninterrupted run's."""
+        def req(rd: Dict) -> Request:
+            extras = {k: np.asarray(v, np.dtype(dt))
+                      for k, (dt, v) in rd.get("extras", {}).items()} or None
+            return Request(rid=rd["rid"],
+                           tokens=np.asarray(rd["tokens"], np.int32),
+                           max_new_tokens=rd["max_new_tokens"],
+                           arrival=rd["arrival"], extras=extras)
+        sched = cls(d["num_slots"], d["policy"], d["max_admissions"])
+        sched._seq = d["seq"]
+        sched._by_arrival = [(a, s, req(r)) for a, s, r in d["by_arrival"]]
+        heapq.heapify(sched._by_arrival)
+        sched._ready = [(s, req(r)) for s, r in d["ready"]]
+        heapq.heapify(sched._ready)
+        sched.running = {int(k): req(r) for k, r in d["running"].items()}
+        sched.remaining = {int(k): int(n) for k, n in d["remaining"].items()}
+        sched.finished = list(d["finished"])
+        sched._free = list(d["free"])
+        return sched
+
 
 # ---------------------------------------------------------------------------
 # cache-arena plumbing
@@ -331,6 +389,37 @@ def weight_sparsity(params: Any,
 
 
 # ---------------------------------------------------------------------------
+# recovery snapshots (DESIGN.md Section 11)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class EngineSnapshot:
+    """Host-side copy of everything one engine tick can mutate, captured at
+    tick start while recovery is armed: the device buffers (arena, token
+    feedback, per-slot remaining) as numpy trees, deep copies of the pure-
+    Python scheduler/outputs, and the measurement/mode/clock scalars.
+    Rolling an engine back to a snapshot and replaying is deterministic, so
+    a tick interrupted by a fault finishes with the same tokens as an
+    uninterrupted run (DESIGN.md Section 11).  ``ckpt_step`` is set when
+    the snapshot also went to disk (``ServeEngine(snapshot_dir=...)``) —
+    recovery then reloads the device state through ``checkpoint.restore``
+    onto the post-loss shardings instead of from memory."""
+
+    device: Dict[str, Any]
+    sched: Scheduler
+    outputs: Dict[int, RequestOutput]
+    events_len: int
+    clock: int
+    mode: Mode
+    a_measured: float
+    since_measure: int
+    mode_history: List[Tuple[int, Mode]]
+    stats: Dict[str, int]
+    prefill_buckets: set
+    ckpt_step: Optional[int] = None
+
+
+# ---------------------------------------------------------------------------
 # engine
 # ---------------------------------------------------------------------------
 
@@ -350,6 +439,13 @@ class ServeEngine:
     prefill retraces are bounded O(log cache_len) per mode instead of one
     per distinct prompt length; decode runs ``decode_chunk`` fused steps
     per host round-trip (DESIGN.md Section 9).
+
+    Failure handling (DESIGN.md Section 11) arms when a ``fault_injector``
+    (deterministic chaos, ``runtime.fault``), a ``straggler`` detector, or
+    a ``snapshot_dir`` is passed: every tick captures a host-side snapshot
+    first, a ``DeviceLoss`` rolls back/remeshes/replays, and persistent
+    stragglers are evicted into the same path at tick boundaries.
+    ``recoveries``/``recovery_log`` record what happened.
     """
 
     def __init__(self, api: ModelApi, params: Any, *, num_slots: int,
@@ -358,7 +454,10 @@ class ServeEngine:
                  use_kernels: bool = False, interpret: bool = False,
                  a_sparsity: Optional[float] = None, block_m: int = 128,
                  measure_every: int = 8, decode_chunk: int = 8,
-                 bucket_prompts: bool = True, fused: bool = True):
+                 bucket_prompts: bool = True, fused: bool = True,
+                 fault_injector: Optional[FaultInjector] = None,
+                 straggler: Optional[StragglerDetector] = None,
+                 snapshot_dir: Optional[str] = None):
         self.api = api
         self.params = params
         self.num_slots = num_slots
@@ -396,6 +495,20 @@ class ServeEngine:
         # fall back to exact-length prefill
         window = getattr(api.cfg, "window", None)
         self._bucket_cap = min(cache_len, window or cache_len)
+        # failure handling (DESIGN.md Section 11): while any of these are
+        # armed, every tick starts by capturing a host-side snapshot —
+        # detection (an injected/real DeviceLoss, or the straggler
+        # detector's eviction verdict) then rolls back, remeshes onto the
+        # survivors, reshards, and replays
+        self.faults = fault_injector
+        self.straggler = straggler
+        self.snapshot_dir = snapshot_dir
+        self.recoveries = 0
+        self.recovery_log: List[Dict] = []
+        self._snapshot: Optional[EngineSnapshot] = None
+        self._evicted: set = set()
+        self._params_host = (jax.tree.map(np.asarray, params)
+                             if self._recovery_armed() else None)
         self._init_device_state()
 
     # device placement hooks: the mesh-parallel engine
@@ -412,9 +525,14 @@ class ServeEngine:
         self.cache = _promote_arena(
             self.api.init_cache(self.num_slots, self.cache_len),
             self.num_slots)
-        self._insert = _make_insert(_batch_axes(self.api, self.cache_len))
+        self._build_insert()
         self._tokens = jnp.zeros((self.num_slots, 1), jnp.int32)
         self._remaining = jnp.zeros((self.num_slots,), jnp.int32)
+
+    def _build_insert(self) -> None:
+        """(Re)jit the donated slot-insert — recovery rebuilds it when the
+        arena shardings changed with the mesh (runtime.mesh_serve)."""
+        self._insert = _make_insert(_batch_axes(self.api, self.cache_len))
 
     # -- mode plumbing ------------------------------------------------------
 
@@ -552,13 +670,33 @@ class ServeEngine:
         by ``decode_chunk`` steps (DESIGN.md Section 9, though the
         chunk-length ladder caps chunks at known completions/arrivals so
         neither happens on predictable traces).
+
+        While recovery is armed (a ``FaultInjector``, a
+        ``StragglerDetector``, or a ``snapshot_dir``), the tick starts by
+        capturing a host-side snapshot; a ``DeviceLoss`` detected anywhere
+        inside the tick rolls back to it, remeshes onto the survivors, and
+        replays the tick — deterministically, so the finished trace is
+        token-identical to an uninterrupted run (DESIGN.md Section 11).
         """
-        if not self.fused:
-            return self._step_stepwise()
+        t0 = time.perf_counter()
+        if self._recovery_armed():
+            self._snapshot = self._capture()
+        impl = self._step_fused if self.fused else self._step_stepwise
+        try:
+            events = impl()
+        except DeviceLoss as loss:
+            self._recover(list(loss.lost), self._snapshot)
+            events = impl()
+        self._observe_hosts(time.perf_counter() - t0)
+        return events
+
+    def _step_fused(self) -> List[Tuple[int, int, int]]:
         ev_start = len(self.events)
         pending: List[Tuple[int, int, jax.Array]] = []  # slot, rid, dev tok
+        self._poll_fault("admission")
         for slot, req in self.sched.admissions(self.clock):
             cache1, logits = self._prefill(req)
+            self._poll_fault("prefill")
             rem = jnp.asarray(req.max_new_tokens - 1, jnp.int32)
             self.cache, self._tokens, self._remaining, tok = self._insert(
                 self.cache, self._tokens, self._remaining, cache1, logits,
@@ -585,6 +723,7 @@ class ServeEngine:
                 (self.cache, self._tokens, self._remaining, ring,
                  zf_num, zf_den) = chunk_fn(self.params, self.cache,
                                             self._tokens, self._remaining)
+            self._poll_fault("decode")
             ring, first_toks, zf_num, zf_den = jax.device_get(
                 (ring, [t for _, _, t in pending], zf_num, zf_den))
             self.stats["host_syncs"] += 1
@@ -618,8 +757,10 @@ class ServeEngine:
         and as a behavioural reference — token output is identical to the
         fused path by construction."""
         ev_start = len(self.events)
+        self._poll_fault("admission")
         for slot, req in self.sched.admissions(self.clock):
             cache1, logits = self._prefill(req)
+            self._poll_fault("prefill")
             rem = jnp.asarray(req.max_new_tokens - 1, jnp.int32)
             self.cache, self._tokens, self._remaining, tok = self._insert(
                 self.cache, self._tokens, self._remaining, cache1, logits,
@@ -634,6 +775,7 @@ class ServeEngine:
             with self._scope():
                 logits, self.cache = decode_fn(self.params, self.cache,
                                                self._tokens)
+            self._poll_fault("decode")
             toks = jnp.argmax(logits, -1).astype(jnp.int32)    # (B,)
             self._tokens = toks[:, None]
             host = np.asarray(toks)
@@ -650,6 +792,135 @@ class ServeEngine:
             self.stats["idle_steps"] += 1
         self.clock += 1
         return self.events[ev_start:]
+
+    # -- failure handling (DESIGN.md Section 11) ----------------------------
+
+    def _recovery_armed(self) -> bool:
+        return (self.faults is not None or self.straggler is not None
+                or self.snapshot_dir is not None)
+
+    def _poll_fault(self, phase: str) -> None:
+        if self.faults is not None:
+            self.faults.poll(phase, self.clock)
+
+    def _capture(self) -> EngineSnapshot:
+        """Consistent host-side snapshot of the tick-mutable state — one
+        extra device_get per tick while recovery is armed, the price of
+        rollback consistency (DESIGN.md Section 11).  With a
+        ``snapshot_dir`` the device state (plus the compacted params and
+        the scheduler queues) also goes to disk through
+        ``checkpoint.save``, so recovery — or a fresh process — can restore
+        through ``checkpoint.restore`` onto any mesh's shardings."""
+        device = jax.device_get({"cache": self.cache,
+                                 "tokens": self._tokens,
+                                 "remaining": self._remaining})
+        snap = EngineSnapshot(
+            device=device, sched=copy.deepcopy(self.sched),
+            outputs=copy.deepcopy(self.outputs),
+            events_len=len(self.events), clock=self.clock, mode=self.mode,
+            a_measured=self.a_measured, since_measure=self._since_measure,
+            mode_history=list(self.mode_history), stats=dict(self.stats),
+            prefill_buckets=set(self.prefill_buckets))
+        if self.snapshot_dir is not None:
+            ckpt_save(self.snapshot_dir, self.clock,
+                      dict(device, params=self._params_host), keep=2,
+                      extra={"scheduler": self.sched.state_dict(),
+                             "clock": self.clock, "mode": self.mode.value})
+            snap.ckpt_step = self.clock
+        return snap
+
+    def _recover(self, lost: List[int], snap: Optional[EngineSnapshot]) -> None:
+        """Device loss detected (an injected/real ``DeviceLoss`` mid-tick,
+        or a straggler eviction at a tick boundary): remesh onto the
+        survivors, roll every host structure back to ``snap``, and rebuild
+        the device state from it on the new mesh.  The caller then replays
+        from the snapshot's clock; replay is deterministic and the sharded
+        layouts are reduction-order-preserving (DESIGN.md Section 10), so
+        the finished trace is token-identical to an uninterrupted run."""
+        if snap is None:
+            raise RuntimeError("device loss with no snapshot armed")
+        self._remesh(lost)
+        self.sched = copy.deepcopy(snap.sched)
+        self.outputs = copy.deepcopy(snap.outputs)
+        del self.events[snap.events_len:]
+        self.clock = snap.clock
+        self.mode = snap.mode
+        self.a_measured = snap.a_measured
+        self._since_measure = snap.since_measure
+        self.mode_history = list(snap.mode_history)
+        self.stats = dict(snap.stats)
+        self.prefill_buckets = set(snap.prefill_buckets)
+        self._restore_device(snap)
+        self.recoveries += 1
+        self.recovery_log.append({"step": snap.clock, "lost": sorted(lost),
+                                  "mesh": self._mesh_desc()})
+
+    def _remesh(self, lost: List[int]) -> None:
+        """A single-device engine has no mesh to shrink: recovery is a
+        restart in place (the snapshot rebuilds the device state, the jits
+        stay valid).  The mesh engine overrides this with plan_mesh on the
+        survivors plus a sharding-spec / Mode-keyed-jit rebuild."""
+
+    def _mesh_desc(self) -> str:
+        return "unsharded"
+
+    def _host_device_ids(self, host: int) -> List[int]:
+        """Device ids owned by straggler host ``host`` — the single-device
+        engine has one host and nothing to evict onto, so evictions only
+        land in the recovery log.  The mesh engine maps hosts to data-rows
+        of its device array."""
+        return []
+
+    def _snapshot_state(self, snap: EngineSnapshot, shardings: Optional[Any]):
+        """The snapshot's device-state tree, from disk (through
+        ``checkpoint.restore``, placing onto ``shardings``) when the
+        snapshot was checkpointed, else from the in-memory copy (placement
+        left to the caller)."""
+        if snap.ckpt_step is None:
+            return dict(snap.device)
+        state = dict(snap.device)
+        if self._params_host is not None:
+            state["params"] = self._params_host
+        template = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(np.shape(x), np.asarray(x).dtype),
+            state)
+        return ckpt_restore(self.snapshot_dir, template, step=snap.ckpt_step,
+                            shardings=shardings)
+
+    def _restore_device(self, snap: EngineSnapshot) -> None:
+        state = self._snapshot_state(snap, shardings=None)
+        self.cache = jax.tree.map(jnp.asarray, state["cache"])
+        self._tokens = jnp.asarray(state["tokens"])
+        self._remaining = jnp.asarray(state["remaining"])
+
+    def _observe_hosts(self, dt: float) -> None:
+        """Feed per-host step timings to the ``StragglerDetector`` (the
+        injector's ``delay_host`` inflates one host's reading — a simulated
+        persistent straggler) and route its eviction verdict into the same
+        snapshot → remesh → reshard path as a detected device loss.  Runs
+        at the tick boundary, where the state is already consistent: the
+        recovery snapshot is captured on the spot and nothing is replayed."""
+        if self.straggler is None:
+            return
+        for h in range(self.straggler.num_hosts):
+            f = (self.faults.host_delay(h, self.clock)
+                 if self.faults is not None else 1.0)
+            self.straggler.record(h, dt * f)
+        self.straggler.observe()
+        evict = [h for h in self.straggler.evictions()
+                 if h not in self._evicted]
+        if not evict:
+            return
+        self._evicted.update(evict)
+        lost = sorted({d for h in evict for d in self._host_device_ids(h)})
+        if not lost or not self._survivors_exist(lost):
+            self.recovery_log.append({"step": self.clock, "evicted": evict,
+                                      "lost": [], "mesh": self._mesh_desc()})
+            return
+        self._recover(lost, self._capture())
+
+    def _survivors_exist(self, lost: List[int]) -> bool:
+        return True     # mesh engine checks against its device array
 
     def run(self, requests: Sequence[Request] = (),
             max_steps: Optional[int] = None) -> Dict[int, RequestOutput]:

@@ -1,0 +1,153 @@
+"""Deterministic fault injection for the serving engines (DESIGN.md
+Section 11).
+
+Chaos testing a serving stack only proves something when the chaos is
+*reproducible*: the same fault at the same engine step must yield the same
+recovery and — because the engines are deterministic and the sharded
+layouts are reduction-order-preserving (DESIGN.md Section 10) — the same
+tokens as an uninterrupted run.  ``FaultInjector`` is the hook both
+``runtime.engine.ServeEngine`` and ``runtime.mesh_serve.MeshServeEngine``
+poll at three points of every tick:
+
+  - ``"admission"``  — before the scheduler pops this tick's admissions;
+  - ``"prefill"``    — after an admission's prefill computed but before its
+                       slot insert (the prefill result is lost);
+  - ``"decode"``     — after the fused decode chunk was dispatched but
+                       before its token ring was consumed (the chunk's work
+                       is lost).
+
+A kill fires exactly once, at the first poll of the matching phase whose
+engine clock has reached ``at_step``, by raising :class:`DeviceLoss` with
+the dead device ids; the engine catches it, rolls back to its tick-start
+snapshot, remeshes onto the survivors (``runtime.elastic``), reshards, and
+replays the tick.  ``delay_host`` instead inflates one host's recorded
+step times so the ``runtime.straggler.StragglerDetector`` — not the
+injector — is what triggers the very same recovery path after its eviction
+streak fills.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+PHASES = ("admission", "prefill", "decode")
+
+
+class DeviceLoss(RuntimeError):
+    """A device (or set of devices) died mid-tick; carries the lost device
+    ids.  Raised by :meth:`FaultInjector.poll`, caught by the engine's
+    ``step`` wrapper, which recovers and retries the interrupted tick."""
+
+    def __init__(self, lost: Sequence[int]):
+        self.lost = tuple(sorted(set(int(d) for d in lost)))
+        super().__init__(f"lost devices {list(self.lost)}")
+
+
+@dataclasses.dataclass
+class FaultInjector:
+    """Deterministic chaos hook (DESIGN.md Section 11).
+
+    ``kill_devices`` are jax device *ids* (``device.id``) to kill at the
+    first ``phase`` poll at or after engine step ``at_step`` — once only
+    (``fired_at`` records when).  ``delay_host`` multiplies the named
+    host's step-time readings by ``delay_factor`` from ``at_step`` on, for
+    as long as the trace runs — a persistent straggler, not a blip — so
+    the detector's eviction streak can fill.
+    """
+
+    kill_devices: Tuple[int, ...] = ()
+    at_step: int = 0
+    phase: str = "decode"
+    delay_host: Optional[int] = None
+    delay_factor: float = 8.0
+    fired_at: Optional[int] = None
+
+    def __post_init__(self):
+        if self.phase not in PHASES:
+            raise ValueError(f"unknown fault phase {self.phase!r} "
+                             f"(known: {PHASES})")
+        if self.at_step < 0:
+            raise ValueError("at_step must be >= 0")
+
+    @property
+    def fired(self) -> bool:
+        return self.fired_at is not None
+
+    def poll(self, phase: str, clock: int) -> None:
+        """Engine-side injection point; raises :class:`DeviceLoss` when the
+        configured kill is due.  Never fires twice (recovery re-executes the
+        tick through the same polls)."""
+        if (self.kill_devices and not self.fired and phase == self.phase
+                and clock >= self.at_step):
+            self.fired_at = int(clock)
+            raise DeviceLoss(self.kill_devices)
+
+    def host_delay(self, host: int, clock: int) -> float:
+        """Multiplier for ``host``'s recorded step time at ``clock``."""
+        if self.delay_host is not None and host == self.delay_host \
+                and clock >= self.at_step:
+            return self.delay_factor
+        return 1.0
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """Parsed ``--inject-fault`` flag (launch/serve.py); ``build`` resolves
+    the device *index* against the serving mesh's device list into the
+    device *ids* a :class:`FaultInjector` wants."""
+
+    kind: str                   # "kill" | "delay"
+    index: int                  # device index (kill) / host row (delay)
+    at_step: int
+    phase: str = "decode"
+    factor: float = 8.0
+
+    def build(self, devices: Sequence) -> FaultInjector:
+        if self.kind == "kill":
+            dev = list(devices)[self.index]
+            return FaultInjector(kill_devices=(int(dev.id),),
+                                 at_step=self.at_step, phase=self.phase)
+        return FaultInjector(delay_host=self.index, at_step=self.at_step,
+                             delay_factor=self.factor)
+
+
+def parse_fault_spec(spec: str) -> FaultSpec:
+    """``kill:<dev>@<step>[:<phase>]`` or ``delay:<host>@<step>[:<factor>]``.
+
+    ``<dev>`` indexes the serving mesh's device list (negative counts from
+    the end, so ``kill:-1@3`` kills the last device at engine step 3);
+    ``<phase>`` is one of ``admission|prefill|decode`` (default decode);
+    ``<factor>`` is the straggler slowdown multiplier (default 8).
+    """
+    kind, _, rest = spec.partition(":")
+    if kind not in ("kill", "delay") or not rest:
+        raise ValueError(f"fault spec {spec!r} is not "
+                         "'kill:<dev>@<step>[:<phase>]' or "
+                         "'delay:<host>@<step>[:<factor>]'")
+    head, _, tail = rest.partition("@")
+    if not tail:
+        raise ValueError(f"fault spec {spec!r} is missing '@<step>'")
+    try:
+        index = int(head)
+    except ValueError:
+        raise ValueError(f"fault spec {spec!r}: bad index {head!r}")
+    at, _, opt = tail.partition(":")
+    try:
+        step = int(at)
+    except ValueError:
+        raise ValueError(f"fault spec {spec!r}: bad step {at!r}")
+    if step < 0:
+        raise ValueError(f"fault spec {spec!r}: step must be >= 0")
+    if kind == "kill":
+        phase = opt or "decode"
+        if phase not in PHASES:
+            raise ValueError(f"fault spec {spec!r}: unknown phase "
+                             f"{phase!r} (known: {PHASES})")
+        return FaultSpec("kill", index, step, phase=phase)
+    try:
+        factor = float(opt) if opt else 8.0
+    except ValueError:
+        raise ValueError(f"fault spec {spec!r}: bad factor {opt!r}")
+    if factor <= 1.0:
+        raise ValueError(f"fault spec {spec!r}: delay factor must be > 1")
+    return FaultSpec("delay", index, step, factor=factor)

@@ -42,7 +42,9 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..models.registry import ModelApi
-from .engine import ServeEngine, _batch_axes, _make_insert, _promote_arena
+from .elastic import plan_mesh, reshard, surviving
+from .engine import (EngineSnapshot, ServeEngine, _batch_axes, _make_insert,
+                     _promote_arena)
 from .serve import make_chunk_ladder
 from .sharding import shard_cache, shard_params
 
@@ -140,24 +142,40 @@ class MeshServeEngine(ServeEngine):
     special case: specs are trivial, ``spmd_mesh`` stays None, and the
     engine behaves exactly like ``ServeEngine`` with sharding-annotated
     jits.
+
+    Failure handling (DESIGN.md Section 11): on a detected ``DeviceLoss``
+    (or a straggler eviction — hosts are the data-rows of the mesh), the
+    inherited recovery rolls back to the tick-start snapshot and this class
+    rebuilds the whole device story on the survivors — ``elastic.plan_mesh``
+    plans the new mesh (TP degree capped by ``recovery_model_parallel``,
+    default the current model-axis size), ``serve_shardings`` re-derives the
+    layout, the Mode-keyed jit sets are dropped (they bake the old mesh's
+    in/out-shardings), and params/arena/counters reshard via
+    ``elastic.reshard`` (or ``checkpoint.restore`` when snapshots go to
+    disk).  Because every mesh serves bit-identical tokens (Section 10),
+    the finished trace equals an uninterrupted run's token for token.
     """
 
     def __init__(self, api: ModelApi, params: Any, *, mesh: Mesh,
                  num_slots: int, cache_len: int,
-                 fns_factory: Optional[Callable] = None, **kw):
+                 fns_factory: Optional[Callable] = None,
+                 recovery_model_parallel: Optional[int] = None, **kw):
         missing = {"data", "model"} - set(mesh.axis_names)
         if missing:
             raise ValueError(f"serving mesh needs axes ('data', 'model'), "
                              f"got {mesh.axis_names}")
         self.mesh = mesh
+        self._recovery_mp = recovery_model_parallel
         if mesh.size > 1:
             self._spmd_mesh = mesh          # class default is None
         self._shardings = serve_shardings(api, mesh, params, num_slots,
                                           cache_len)
         params = jax.tree.map(jax.device_put, params, self._shardings[0])
         if fns_factory is None:
+            # late-bound self.mesh/self._shardings: after a recovery remesh
+            # the per-Mode factory invocations trace for the new layout
             fns_factory = lambda: mesh_serve_fns(
-                api, mesh, self.params, num_slots, cache_len,
+                api, self.mesh, self.params, num_slots, cache_len,
                 decode_chunk=self.decode_chunk, shardings=self._shardings)
         super().__init__(api, params, num_slots=num_slots,
                          cache_len=cache_len, fns_factory=fns_factory, **kw)
@@ -172,12 +190,71 @@ class MeshServeEngine(ServeEngine):
             self.num_slots)
         _, c_sh, rep = self._shardings
         self.cache = jax.tree.map(jax.device_put, cache, c_sh)
+        self._build_insert()
+        self._tokens = jax.device_put(
+            jnp.zeros((self.num_slots, 1), jnp.int32), rep)
+        self._remaining = jax.device_put(
+            jnp.zeros((self.num_slots,), jnp.int32), rep)
+
+    def _build_insert(self) -> None:
+        """Admission insert carrying the *current* arena shardings —
+        rebuilt by recovery after every remesh."""
+        _, c_sh, rep = self._shardings
         wrap = lambda f: jax.jit(
             f, in_shardings=(c_sh, rep, rep, rep, rep, rep, rep),
             out_shardings=(c_sh, rep, rep, rep), donate_argnums=(0, 1, 2))
         self._insert = _make_insert(_batch_axes(self.api, self.cache_len),
                                     jit_wrap=wrap)
-        self._tokens = jax.device_put(
-            jnp.zeros((self.num_slots, 1), jnp.int32), rep)
-        self._remaining = jax.device_put(
-            jnp.zeros((self.num_slots,), jnp.int32), rep)
+
+    # -- failure handling (DESIGN.md Section 11) ----------------------------
+
+    def _mesh_desc(self) -> str:
+        from ..launch.mesh import mesh_spec
+        return mesh_spec(self.mesh)
+
+    def _host_device_ids(self, host: int) -> list:
+        """Hosts are the data-rows of the serving mesh's device array; a
+        row index beyond the (possibly already shrunk) mesh owns nothing."""
+        rows = self.mesh.devices
+        if host >= rows.shape[0]:
+            return []
+        return [int(d.id) for d in rows[host].flat]
+
+    def _survivors_exist(self, lost) -> bool:
+        return bool(surviving(self.mesh.devices, lost))
+
+    def _remesh(self, lost) -> None:
+        """``elastic.plan_mesh`` over the survivors, then rebuild everything
+        that baked the old mesh: sharding specs, the model-sharded params
+        (from the host-side copy — the dead devices' shards are gone), the
+        Mode-keyed jit sets, and the admission insert."""
+        survivors = surviving(self.mesh.devices, lost)
+        if not survivors:
+            raise RuntimeError(f"no surviving devices after losing {lost}")
+        mp = self._recovery_mp or int(self.mesh.shape["model"])
+        self.mesh = plan_mesh(len(survivors), mp, devices=survivors)
+        self._spmd_mesh = self.mesh if self.mesh.size > 1 else None
+        self._shardings = serve_shardings(self.api, self.mesh,
+                                          self._params_host, self.num_slots,
+                                          self.cache_len)
+        self.params = reshard(self._params_host, self._shardings[0])
+        self._mode_fns.clear()      # jits bake in/out-shardings: retrace
+        self._build_insert()
+
+    def _restore_device(self, snap: EngineSnapshot) -> None:
+        """Place the snapshot's arena/counters onto the (new) mesh's decode
+        layout — through ``checkpoint.restore`` when the snapshot went to
+        disk (which also re-reads the compacted params), else
+        ``elastic.reshard`` from the in-memory copy."""
+        p_sh, c_sh, rep = self._shardings
+        shardings = {"cache": c_sh, "tokens": rep, "remaining": rep}
+        if snap.ckpt_step is not None:
+            shardings["params"] = p_sh
+            state = self._snapshot_state(snap, shardings=shardings)
+            self.params = state["params"]
+        else:
+            state = {k: reshard(v, shardings[k])
+                     for k, v in self._snapshot_state(snap, None).items()}
+        self.cache = state["cache"]
+        self._tokens = state["tokens"]
+        self._remaining = state["remaining"]

@@ -6,7 +6,12 @@ padding shared by the engine and its greedy oracle.
 decode); the mesh-parallel slot-pool engine builds its per-Mode jit sets
 from ``runtime.mesh_serve.mesh_serve_fns`` instead, which reuses
 ``make_chunk_ladder``/``make_decode_chunk_fn`` below with the serving
-layout's explicit shardings (DESIGN.md Section 10)."""
+layout's explicit shardings (DESIGN.md Section 10).
+
+Everything here is stateless in the engine's failure-handling sense: these
+factories hold no arena or scheduler state, so elastic recovery (DESIGN.md
+Section 11) rebuilds them freely on the post-loss mesh — only the jit
+caches are lost, never tokens."""
 from __future__ import annotations
 
 import dataclasses

@@ -5,12 +5,22 @@ detector keeps per-host EMA step times; hosts slower than
 ``threshold x median`` are flagged and the planner reassigns their data
 shards to healthy hosts (work stays deterministic: shard assignment is an
 explicit map consumed by data.DataConfig).  Persistent stragglers are
-recommended for eviction → runtime.elastic handles the remesh.
+recommended for eviction → runtime.elastic handles the remesh, and the
+serving engines route the eviction through the same snapshot → remesh →
+reshard recovery as a detected device loss (DESIGN.md Section 11).
+
+Observation and query are separate: ``record`` feeds one host's step
+time, ``observe`` closes the step — updating the per-host flagged streaks
+exactly once — and ``stragglers`` is the side-effect-free query of the
+current verdict, callable any number of times per step.  (The pre-split
+version mutated ``flagged_streak`` inside ``stragglers()``, so a second
+query in the same step double-counted the streak and evicted hosts in half
+the configured time; tests/test_fault_tolerance.py pins the fix.)
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List
 
 import numpy as np
 
@@ -24,12 +34,17 @@ class StragglerConfig:
 
 class StragglerDetector:
     def __init__(self, num_hosts: int, cfg: StragglerConfig = StragglerConfig()):
+        if num_hosts < 1:
+            raise ValueError("need at least one host")
         self.cfg = cfg
+        self.num_hosts = num_hosts
         self.ema = np.zeros(num_hosts)
         self.flagged_streak = np.zeros(num_hosts, dtype=int)
         self._seen = np.zeros(num_hosts, dtype=bool)
 
     def record(self, host: int, step_time: float) -> None:
+        """Feed one host's measured step time (any number per step; the
+        EMA absorbs them)."""
         if not self._seen[host]:
             self.ema[host] = step_time
             self._seen[host] = True
@@ -38,19 +53,27 @@ class StragglerDetector:
                               (1 - self.cfg.ema) * step_time)
 
     def stragglers(self) -> List[int]:
+        """Hosts currently slower than ``threshold x median`` EMA — a pure
+        query with no streak side effects, safe to call repeatedly."""
         if not self._seen.any():
             return []
         med = float(np.median(self.ema[self._seen]))
-        out = []
-        for h in np.nonzero(self._seen)[0]:
-            if self.ema[h] > self.cfg.threshold * med:
-                self.flagged_streak[h] += 1
-                out.append(int(h))
-            else:
-                self.flagged_streak[h] = 0
-        return out
+        return [int(h) for h in np.nonzero(self._seen)[0]
+                if self.ema[h] > self.cfg.threshold * med]
+
+    def observe(self) -> List[int]:
+        """Close one step: advance each flagged host's streak (reset the
+        rest) exactly once, and return the flagged hosts.  Call once per
+        engine step, after the step's ``record`` feeds."""
+        flagged = self.stragglers()
+        hit = np.zeros(self.num_hosts, dtype=bool)
+        hit[flagged] = True
+        self.flagged_streak = np.where(hit, self.flagged_streak + 1, 0)
+        return flagged
 
     def evictions(self) -> List[int]:
+        """Hosts whose flagged streak reached ``evict_after`` (a pure
+        query, like ``stragglers``)."""
         return [int(h) for h in
                 np.nonzero(self.flagged_streak >= self.cfg.evict_after)[0]]
 
