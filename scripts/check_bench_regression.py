@@ -14,7 +14,13 @@ skeleton of the serving engine, per recorded config:
   - host syncs/token: <= recorded + 0.02 — the fused decode path quietly
     re-synchronizing per step is exactly the regression PR 4 exists to
     prevent (DESIGN.md Section 9), while a small slack absorbs intentional
-    accounting tweaks without masking a per-step sync (+1.0).
+    accounting tweaks without masking a per-step sync (+1.0);
+  - sharded/unsharded tok-per-step ratio: must equal the recorded ratio
+    (1.0 — sharding is placement, not scheduling) whenever a sharded row
+    and its unsharded twin both replay.  Wall-clock tok/s stays ungated:
+    on an emulated mesh it measures GSPMD emulation, not hardware
+    (bench_serve only asserts the tok/s direction when the host has a
+    core per device).
 
 Configs whose ``mesh`` needs more devices than this process has are
 skipped with a note (the CI sharded job runs with
@@ -62,6 +68,7 @@ def main() -> int:
     n_dev = len(jax.devices())
     failures, checked = [], 0
     factory_cache: dict = {}
+    replayed_tps: dict = {}
     for name, c in rec["configs"].items():
         mesh = c.get("mesh", "1x1")
         if mesh != "1x1":
@@ -79,6 +86,7 @@ def main() -> int:
                                           for o in outs.values())
         toks = eng.stats["emitted"]
         syncs_tok = eng.stats["host_syncs"] / toks
+        replayed_tps[name] = toks / max(eng.stats["decode_steps"], 1)
         checked += 1
 
         def exact(field, got):
@@ -97,6 +105,26 @@ def main() -> int:
         print(f"{name}: emitted={toks} decode_steps="
               f"{eng.stats['decode_steps']} syncs/token={syncs_tok:.4f} "
               f"(recorded {c['host_syncs_per_token']})")
+
+    # sharded rows are named "<config>@<mesh>"; their deterministic perf
+    # invariant vs the unsharded twin is the tok-per-step ratio
+    for name, tps in sorted(replayed_tps.items()):
+        if "@" not in name:
+            continue
+        base = name.split("@", 1)[0]
+        if base not in replayed_tps:
+            continue
+        got = tps / replayed_tps[base]
+        want = (rec["configs"][name]["tok_per_step"] /
+                rec["configs"][base]["tok_per_step"])
+        if abs(got - want) > 1e-9:
+            failures.append(
+                f"{name}: sharded/unsharded tok-per-step ratio drifted "
+                f"{want:.3f} -> {got:.3f} — sharding is changing the "
+                "decode schedule")
+        else:
+            print(f"{name}: tok-per-step ratio vs {base} = {got:.3f} "
+                  f"(recorded {want:.3f})")
 
     for f in failures:
         print("FAIL:", f)

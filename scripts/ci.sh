@@ -87,14 +87,19 @@ stage_docs() {
 }
 
 stage_mesh() {
-    echo "== mesh: sharded-serving parity tier + serve smoke on an emulated"
-    echo "==   8-device CPU mesh (DESIGN.md Section 10)"
+    echo "== mesh: shard-parity tier (real Pallas kernels under shard_map)"
+    echo "==   + serve smokes on an emulated 8-device CPU mesh (DESIGN.md"
+    echo "==   Section 10) — kernels forced on, then the decompaction-oracle"
+    echo "==   fallback forced to keep the parity baseline alive"
     # subshell-scoped env: a later stage in the same invocation (e.g.
     # `ci.sh mesh bench-regression`) must not inherit the emulation
     (
         export XLA_FLAGS="--xla_force_host_platform_device_count=8 ${XLA_FLAGS:-}"
-        run python -m pytest -x -q -m mesh tests/test_mesh_serve.py
-        run python examples/sparse_serve.py --mesh 2x4
+        run python -m pytest -x -q -m mesh \
+            tests/test_shard_map_kernels.py tests/test_mesh_serve.py
+        run python examples/sparse_serve.py --mesh 2x4 --use-kernels
+        run python examples/sparse_serve.py --mesh 2x2 --use-kernels \
+            --spmd-fallback
     )
 }
 

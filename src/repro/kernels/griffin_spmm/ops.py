@@ -202,6 +202,70 @@ def _run(a, b_comp, kidx, cnt, inv_perm, *, block_m, block_k, block_n, n,
     return out[:, :n]
 
 
+# ---------------------------------------------------------------------------
+# shard-local execution (SPMD via shard_map, DESIGN.md Section 10)
+# ---------------------------------------------------------------------------
+
+def griffin_matmul_shard(a, b_comp, kidx, cnt, *, block_m: int, block_k: int,
+                         block_n: int, dual: bool = False,
+                         interpret: bool = False) -> jax.Array:
+    """Shard-local kernel entry: the raw griffin_spmm kernel on one
+    device's slice of the compacted operands.
+
+    ``a`` is the whole (padded) activation — replicated, because ``kidx``
+    holds *global* K-block ids and the serving layout never splits the
+    contraction dim.  ``b_comp``/``kidx``/``cnt`` are pre-sliced along the
+    N-tile axis (``shard_specs``): a contiguous group of N tiles with their
+    own metadata rows is a complete, self-contained kernel problem, so the
+    per-shard call is literally the unsharded kernel on a narrower grid —
+    zero in-kernel collectives.  The balance shuffle's ``inv_perm`` gather
+    and the ``[:, :n]`` unpad are *global* column operations and stay with
+    the caller (``griffin_matmul``).
+    """
+    return griffin_spmm_kernel(a, b_comp, kidx, cnt, block_m=block_m,
+                               block_k=block_k, block_n=block_n, dual=dual,
+                               interpret=interpret)
+
+
+def shard_specs(axis: str = "model"):
+    """(in_specs, out_spec) partitioning ``griffin_matmul_shard``'s
+    operands over mesh axis ``axis``: activations replicated, ``b_comp``
+    split on its padded-N (last) axis, ``kidx``/``cnt`` split on their
+    N-tile (first) axis, output split on N.  Exposed (and re-exported by
+    ``runtime.sharding``) so tests and the layout rules agree on one
+    definition of the per-shard operand layout."""
+    from jax.sharding import PartitionSpec as P
+    return (P(), P(None, axis), P(axis, None), P(axis)), P(None, axis)
+
+
+def shardable(gw: GriffinWeights, n_shards: int) -> bool:
+    """True when the compacted operands split evenly into ``n_shards``
+    whole-N-tile groups — the condition for the shard_map path.  A stacked
+    instance is never shardable at the op level (the engine slices per
+    layer inside its scan)."""
+    if gw.b_comp.ndim != 2 or n_shards < 1:
+        return False
+    n_tiles = gw.kidx.shape[0]
+    return n_tiles % n_shards == 0
+
+
+def _shard_map_run(ap, gw: GriffinWeights, mesh, axis, *, block_m, dual,
+                   interpret):
+    from jax.experimental.shard_map import shard_map
+    in_specs, out_spec = shard_specs(axis)
+    local = functools.partial(
+        griffin_matmul_shard, block_m=block_m, block_k=gw.block_k,
+        block_n=gw.block_n, dual=dual, interpret=interpret)
+    # check_rep=False: pallas_call has no replication rule either — the
+    # out_spec states the (easily checked) fact that shards are disjoint
+    out = shard_map(local, mesh=mesh, in_specs=in_specs,
+                    out_specs=out_spec, check_rep=False)(
+                        ap, gw.b_comp, gw.kidx, gw.cnt)
+    if gw.inv_perm is not None:
+        out = out[:, gw.inv_perm]
+    return out[:, :gw.n]
+
+
 def decompact_weights(gw: GriffinWeights) -> jax.Array:
     """jnp reconstruction of the (padded K, n) block-pruned dense matrix a
     single (non-stacked) ``GriffinWeights`` denotes — the spec-respecting
@@ -234,16 +298,26 @@ def decompact_weights(gw: GriffinWeights) -> jax.Array:
 
 def griffin_matmul(a: jax.Array, gw: GriffinWeights, *,
                    block_m: int = DEFAULT_BLOCK_M, dual: bool = False,
-                   interpret: bool = False, spmd: bool = False) -> jax.Array:
+                   interpret: bool = False, spmd: bool = False,
+                   mesh=None, mesh_axis: str = "model") -> jax.Array:
     """C = A @ W_pruned from the compacted representation.
 
-    ``spmd=True`` is the mesh-partitionable fallback (DESIGN.md
-    Section 10): decompact to the denoted block-pruned dense matrix and
-    take a plain jnp dot, which GSPMD shards along the weights' output
-    (N) axis — the only sharded axis the serving layout gives ``b_comp``
-    — without ever splitting the contraction.  Dual-mode predication is a
-    no-op on values (skipped A blocks are exactly zero), so the fallback
-    covers Mode.AB too.
+    ``mesh`` (a ``jax.sharding.Mesh``) runs the **real kernel under SPMD**
+    via ``shard_map`` (DESIGN.md Section 10): every device executes
+    ``griffin_matmul_shard`` on its whole-N-tile slice of
+    b_comp/kidx/cnt against the replicated activations — bit-identical to
+    the unsharded kernel (same per-tile fp32 accumulation order), with
+    zero in-kernel collectives.  Requires ``shardable(gw,
+    mesh.shape[mesh_axis])``; callers (``models.common.griffin_linear``)
+    check and fall back to ``spmd=True`` otherwise.
+
+    ``spmd=True`` is the decompaction **oracle** (previously the only
+    multi-device path): reconstruct the denoted block-pruned dense matrix
+    and take a plain jnp dot, which GSPMD shards along the weights'
+    output (N) axis without ever splitting the contraction.  Bit-equal to
+    the dense product with the pruned weights, allclose (different
+    reduction order) to the kernel.  Dual-mode predication is a no-op on
+    values (skipped A blocks are exactly zero), so it covers Mode.AB too.
     """
     m, k = a.shape
     if spmd:
@@ -252,6 +326,12 @@ def griffin_matmul(a: jax.Array, gw: GriffinWeights, *,
     bm = min(block_m, max(8, -(-m // 8) * 8))
     pm = -(-m // bm) * bm
     ap = jnp.pad(a, ((0, pm - m), (0, gw.k - k)))
+    if mesh is not None:
+        assert shardable(gw, mesh.shape[mesh_axis]), \
+            (gw.kidx.shape, dict(mesh.shape), mesh_axis)
+        out = _shard_map_run(ap, gw, mesh, mesh_axis, block_m=bm, dual=dual,
+                             interpret=interpret)
+        return out[:m]
     out = _run(ap, gw.b_comp, gw.kidx, gw.cnt, gw.inv_perm, block_m=bm,
                block_k=gw.block_k, block_n=gw.block_n, n=gw.n, dual=dual,
                interpret=interpret)

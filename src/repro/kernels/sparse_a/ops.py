@@ -109,21 +109,66 @@ def _run(a, b, kidx, cnt, *, block_m, block_k, block_n, interpret):
                                 interpret=interpret)
 
 
+# ---------------------------------------------------------------------------
+# shard-local execution (SPMD via shard_map, DESIGN.md Section 10)
+# ---------------------------------------------------------------------------
+
+def sparse_a_matmul_shard(a, w, kidx, cnt, *, block_m: int, block_k: int,
+                          block_n: int, interpret: bool = False) -> jax.Array:
+    """Shard-local kernel entry: the raw sparse_a kernel on one device's
+    N-slice of the dense weights.
+
+    ``a`` and the runtime-compaction metadata are replicated — the
+    metadata is per-*M-tile* (live K blocks of the activations), which an
+    output-axis split never touches, so every shard skips exactly the
+    same A blocks.  ``w`` arrives pre-sliced on N (``shard_specs``); each
+    shard pads its slice up to its own block_n grid and unpads after, so
+    uneven tile alignment at the global scale never forces a fallback.
+    """
+    n_local = w.shape[1]
+    bn = min(block_n, _rup(n_local))
+    pn = -(-n_local // bn) * bn
+    out = sparse_a_gemm_kernel(a, _pad2(w, a.shape[1], pn), kidx, cnt,
+                               block_m=block_m, block_k=block_k, block_n=bn,
+                               interpret=interpret)
+    return out[:, :n_local]
+
+
+def shard_specs(axis: str = "model"):
+    """(in_specs, out_spec) for ``sparse_a_matmul_shard`` over mesh axis
+    ``axis``: only the weights (and the output) split, on N; activations
+    and per-M-tile metadata replicate."""
+    from jax.sharding import PartitionSpec as P
+    return (P(), P(None, axis), P(), P()), P(None, axis)
+
+
+def shardable(w, n_shards: int) -> bool:
+    """True when the dense weights' output axis splits evenly (each shard
+    re-pads locally, so N-tile alignment is not required)."""
+    return w.ndim == 2 and n_shards >= 1 and w.shape[1] % n_shards == 0
+
+
 def sparse_a_matmul(a: jax.Array, w: jax.Array, *,
                     block_m: int = DEFAULT_BLOCK_M,
                     block_k: int = DEFAULT_BLOCK_K,
                     block_n: int = DEFAULT_BLOCK_N,
                     meta: Optional[ActivationMeta] = None,
                     interpret: bool = False,
-                    spmd: bool = False) -> jax.Array:
+                    spmd: bool = False,
+                    mesh=None, mesh_axis: str = "model") -> jax.Array:
     """C = A @ W visiting only the live A blocks (Sparse.A execution).
 
-    ``spmd=True`` is the mesh-partitionable fallback (DESIGN.md
-    Section 10): skipped A blocks are exactly zero, so the compacted
-    product *is* the plain dense product (``ref.sparse_a_ref``), which
-    GSPMD can shard along W's output axis — ``pallas_call`` has no SPMD
-    partitioning rule, and the runtime-compaction metadata would diverge
-    per shard anyway.  MXU skipping is forfeited on the emulated mesh;
+    ``mesh`` runs the **real kernel under SPMD** via ``shard_map``
+    (DESIGN.md Section 10): metadata is compacted once (replicated — it is
+    per-M-tile and the output-axis split never touches it), then every
+    device runs ``sparse_a_matmul_shard`` on its N-slice of ``w`` with
+    zero in-kernel collectives.  Requires ``shardable(w,
+    mesh.shape[mesh_axis])``.
+
+    ``spmd=True`` is the dense-product oracle (previously the only
+    multi-device path): skipped A blocks are exactly zero, so the
+    compacted product *is* the plain dense product (``ref.sparse_a_ref``),
+    which GSPMD shards along W's output axis.  MXU skipping is forfeited;
     the mode dispatch and jit-set keying upstream stay identical.
     """
     m, k = a.shape
@@ -135,9 +180,21 @@ def sparse_a_matmul(a: jax.Array, w: jax.Array, *,
     if meta is None:
         meta = compact_activations(a, block_m=block_m, block_k=block_k)
     bm, bk = meta.block_m, meta.block_k
+    ap = _pad2(a, meta.m, meta.k)
+    if mesh is not None:
+        from jax.experimental.shard_map import shard_map
+        assert shardable(w, mesh.shape[mesh_axis]), \
+            (w.shape, dict(mesh.shape), mesh_axis)
+        in_specs, out_spec = shard_specs(mesh_axis)
+        local = functools.partial(sparse_a_matmul_shard, block_m=bm,
+                                  block_k=bk, block_n=block_n,
+                                  interpret=interpret)
+        out = shard_map(local, mesh=mesh, in_specs=in_specs,
+                        out_specs=out_spec, check_rep=False)(
+                            ap, _pad2(w, meta.k, n), meta.kidx, meta.cnt)
+        return out[:m]
     bn = min(block_n, _rup(n))
     pn = -(-n // bn) * bn
-    ap = _pad2(a, meta.m, meta.k)
     wp = _pad2(w, meta.k, pn)
     out = _run(ap, wp, meta.kidx, meta.cnt, block_m=bm, block_k=bk,
                block_n=bn, interpret=interpret)

@@ -23,6 +23,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
+from repro.configs.platform import kernel_interpret
 from repro.models import build_model
 from repro.launch.mesh import mesh_spec, serve_mesh
 from repro.runtime.elastic import plan_mesh
@@ -57,10 +58,11 @@ def build_engine(api, params, args, mesh) -> ServeEngine:
     cache_len = max(_lens(args.prompt_lens)) + max(_lens(args.gen_lens)) + 1
     if args.mesh:
         # mesh-parallel path (DESIGN.md Section 10): params model-sharded,
-        # arena slot/head-sharded, per-Mode jits carry explicit shardings;
-        # "1x1" is the single-device special case.  The engine keeps the
-        # Pallas kernels only there — a >1 mesh runs the spec-respecting
-        # jnp fallbacks, so --use-kernels implies interpret only on 1x1.
+        # arena slot/head-sharded, per-Mode jits carry explicit shardings.
+        # The real Pallas kernels run on every mesh size — griffin_linear
+        # shard_maps them over the model axis — so --use-kernels implies
+        # interpret on any CPU mesh (configs.platform picks the lowering);
+        # --spmd-fallback retires them to the decompaction oracle.
         smesh = serve_mesh(args.mesh)
         injector, detector = _fault_hooks(
             args, list(smesh.devices.flat), smesh.devices.shape[0])
@@ -68,8 +70,8 @@ def build_engine(api, params, args, mesh) -> ServeEngine:
             api, params, mesh=smesh, num_slots=args.slots,
             cache_len=cache_len, policy=args.policy,
             use_kernels=args.use_kernels,
-            interpret=(args.use_kernels and smesh.size == 1
-                       and jax.default_backend() == "cpu"),
+            interpret=args.use_kernels and kernel_interpret(),
+            spmd_kernels=not args.spmd_fallback,
             measure_every=args.measure_every,
             decode_chunk=args.decode_chunk,
             fault_injector=injector, straggler=detector,
@@ -82,7 +84,7 @@ def build_engine(api, params, args, mesh) -> ServeEngine:
                                           params=params,
                                           decode_chunk=args.decode_chunk),
         policy=args.policy, use_kernels=args.use_kernels,
-        interpret=args.use_kernels and jax.default_backend() == "cpu",
+        interpret=args.use_kernels and kernel_interpret(),
         measure_every=args.measure_every, decode_chunk=args.decode_chunk,
         fault_injector=injector, straggler=detector,
         snapshot_dir=args.snapshot_dir)
@@ -119,6 +121,11 @@ def main(argv=None) -> None:
                          "XLA_FLAGS=--xla_force_host_platform_device_count"
                          "=8).  '1x1' is the single-device special case; "
                          "default keeps the unsharded engine")
+    ap.add_argument("--spmd-fallback", action="store_true",
+                    help="serve >1 meshes through the decompaction oracle "
+                         "instead of the shard_map'd Pallas kernels (the "
+                         "parity baseline; scripts/ci.sh smokes it to keep "
+                         "the oracle alive)")
     ap.add_argument("--parity", action="store_true",
                     help="assert engine tokens == greedy_generate per "
                          "request")

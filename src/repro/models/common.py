@@ -12,10 +12,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..configs.platform import kernel_interpret
 from ..core.hybrid import select_mode
 from ..core.spec import Mode
+from ..kernels.dense_gemm import ops as _dense_ops
 from ..kernels.dense_gemm.ops import dense_matmul
+from ..kernels.griffin_spmm import ops as _spmm_ops
 from ..kernels.griffin_spmm.ops import GriffinWeights, griffin_matmul
+from ..kernels.sparse_a import ops as _sparse_a_ops
 from ..kernels.sparse_a.ops import sparse_a_matmul
 
 Params = Dict[str, Any]
@@ -39,11 +43,17 @@ class SparseExecution:
     ``spmd_mesh`` (a ``jax.sharding.Mesh`` with > 1 device) switches every
     GEMM to the mesh-partitionable path (DESIGN.md Section 10): inputs and
     outputs are pinned replicated with sharding constraints so GSPMD never
-    splits a contraction dim, and the Pallas kernels — which have no SPMD
-    partitioning rule — are swapped for their spec-respecting jnp
-    fallbacks (``griffin_matmul(spmd=True)`` decompaction,
-    ``sparse_a_matmul(spmd=True)``).  A 1-device mesh (or None) keeps the
-    single-device kernel paths byte-identical to before.
+    splits a contraction dim, and each kernel call is wrapped in
+    ``shard_map`` — ``pallas_call`` has no GSPMD partitioning rule, but
+    the output-axis-only layout makes every device's GEMM fully local, so
+    the *real* kernels run per shard (``griffin_matmul(mesh=...)``,
+    ``sparse_a_matmul(mesh=...)``, ``dense_matmul(mesh=...)``) with zero
+    in-kernel collectives.  ``spmd_kernels=False`` retires that path and
+    forces the decompaction/dense-product oracles
+    (``griffin_matmul(spmd=True)``, ``sparse_a_matmul(spmd=True)``) —
+    kept as the parity reference, no longer the hot loop.  A 1-device
+    mesh (or None) keeps the single-device kernel paths byte-identical to
+    before.
     """
 
     use_kernels: bool = False
@@ -51,6 +61,7 @@ class SparseExecution:
     a_sparsity: float = 0.0
     block_m: int = 128
     spmd_mesh: Optional[Any] = None
+    spmd_kernels: bool = True
 
 
 _EXEC_STACK = [SparseExecution()]
@@ -59,7 +70,8 @@ _EXEC_STACK = [SparseExecution()]
 @contextlib.contextmanager
 def sparse_execution(use_kernels: bool = True, interpret: bool = False,
                      a_sparsity: float = 0.0, block_m: int = 128,
-                     spmd_mesh: Optional[Any] = None):
+                     spmd_mesh: Optional[Any] = None,
+                     spmd_kernels: bool = True):
     """Scope under which ``griffin_linear`` dispatches to the Pallas
     kernels (mode per GEMM via ``core.hybrid.select_mode``).
 
@@ -73,11 +85,36 @@ def sparse_execution(use_kernels: bool = True, interpret: bool = False,
                                        interpret=interpret,
                                        a_sparsity=a_sparsity,
                                        block_m=block_m,
-                                       spmd_mesh=spmd_mesh))
+                                       spmd_mesh=spmd_mesh,
+                                       spmd_kernels=spmd_kernels))
     try:
         yield _EXEC_STACK[-1]
     finally:
         _EXEC_STACK.pop()
+
+
+# Trace-time dispatch telemetry: ``griffin_linear`` bumps one bucket per
+# GEMM it *traces* (jitted callers never re-enter at run time), so an
+# engine test can assert the real-kernel shard_map path — not the oracle —
+# was taken, turning a silent fallback regression into a test failure
+# (DESIGN.md Section 10).  Buckets:
+#   "kernel"      single-device Pallas kernel paths
+#   "shard_map"   shard_map'd Pallas kernels under an spmd_mesh scope
+#   "spmd_oracle" the decompaction / dense-product SPMD oracles
+#   "plain"       plain jnp dots (no kernel requested)
+KERNEL_DISPATCH: Dict[str, int] = {}
+
+
+def reset_kernel_dispatch() -> None:
+    KERNEL_DISPATCH.clear()
+
+
+def kernel_dispatch_counts() -> Dict[str, int]:
+    return dict(KERNEL_DISPATCH)
+
+
+def _dispatched(bucket: str) -> None:
+    KERNEL_DISPATCH[bucket] = KERNEL_DISPATCH.get(bucket, 0) + 1
 
 
 def execution_context() -> SparseExecution:
@@ -110,25 +147,45 @@ def griffin_linear(x: jax.Array, w) -> jax.Array:
       GriffinWeights    -> Sparse.B kernel; dual when a is also declared
                            sparse (on-the-fly A-block predication)
 
-    Under a multi-device ``spmd_mesh`` scope the same dispatch runs
-    through the mesh-partitionable fallbacks with replicated inputs and
-    outputs (``_replicated``; DESIGN.md Section 10) — Pallas kernels have
-    no SPMD partitioning rule, and the replication constraints keep every
-    reduction whole so sharding never changes a logit bit.
+    Under a multi-device ``spmd_mesh`` scope the same dispatch wraps each
+    kernel call in ``shard_map`` with replicated inputs and outputs
+    (``_replicated``; DESIGN.md Section 10): the output-axis-only layout
+    makes every device's GEMM fully local, so the real kernels run per
+    shard and the replication constraints keep every reduction whole —
+    sharding never changes a logit bit.  Weights whose output axis does
+    not split evenly over the model axis — or any GEMM when the scope
+    sets ``spmd_kernels=False`` — take the decompaction / dense-product
+    oracle instead (interpret mode is forced on platforms that need it,
+    ``configs.platform.kernel_interpret``, since mesh jit sets are traced
+    after placement).
 
     Leading batch/sequence axes are flattened into the GEMM M axis.
     """
     ctx = _EXEC_STACK[-1]
     mesh = ctx.spmd_mesh
     spmd = mesh is not None and mesh.size > 1
+    mp = (mesh.shape.get("model", 0)
+          if spmd and "model" in mesh.axis_names else 0)
     if spmd:
         x = _replicated(x, mesh)
     if isinstance(w, GriffinWeights):
         lead = x.shape[:-1]
         mode = select_mode(ctx.a_sparsity, 1.0)
-        out = griffin_matmul(x.reshape(-1, x.shape[-1]), w,
-                             block_m=ctx.block_m, dual=(mode == Mode.AB),
-                             interpret=ctx.interpret, spmd=spmd)
+        x2 = x.reshape(-1, x.shape[-1])
+        dual = mode == Mode.AB
+        if spmd and ctx.spmd_kernels and mp and _spmm_ops.shardable(w, mp):
+            _dispatched("shard_map")
+            out = griffin_matmul(x2, w, block_m=ctx.block_m, dual=dual,
+                                 interpret=ctx.interpret or kernel_interpret(),
+                                 mesh=mesh)
+        elif spmd:
+            _dispatched("spmd_oracle")
+            out = griffin_matmul(x2, w, block_m=ctx.block_m, dual=dual,
+                                 spmd=True)
+        else:
+            _dispatched("kernel")
+            out = griffin_matmul(x2, w, block_m=ctx.block_m, dual=dual,
+                                 interpret=ctx.interpret)
         out = out.reshape(*lead, w.n).astype(x.dtype)
         return _replicated(out, mesh) if spmd else out
     if not ctx.use_kernels and not spmd:
@@ -137,12 +194,28 @@ def griffin_linear(x: jax.Array, w) -> jax.Array:
     x2 = x.reshape(-1, x.shape[-1])
     sparse_a = select_mode(ctx.a_sparsity, 0.0) == Mode.A
     if spmd:
-        out = (sparse_a_matmul(x2, w, spmd=True)
-               if ctx.use_kernels and sparse_a else x2 @ w)
+        kern_ops = _sparse_a_ops if sparse_a else _dense_ops
+        if (ctx.use_kernels and ctx.spmd_kernels and mp
+                and kern_ops.shardable(w, mp)):
+            _dispatched("shard_map")
+            interp = ctx.interpret or kernel_interpret()
+            out = (sparse_a_matmul(x2, w, block_m=ctx.block_m,
+                                   interpret=interp, mesh=mesh)
+                   if sparse_a else
+                   dense_matmul(x2, w, block_m=ctx.block_m,
+                                interpret=interp, mesh=mesh))
+        elif ctx.use_kernels and sparse_a:
+            _dispatched("spmd_oracle")
+            out = sparse_a_matmul(x2, w, spmd=True)
+        else:
+            _dispatched("spmd_oracle" if ctx.use_kernels else "plain")
+            out = x2 @ w
     elif sparse_a:
+        _dispatched("kernel")
         out = sparse_a_matmul(x2, w, block_m=ctx.block_m,
                               interpret=ctx.interpret)
     else:
+        _dispatched("kernel")
         out = dense_matmul(x2, w, block_m=ctx.block_m,
                            interpret=ctx.interpret)
     out = out.reshape(*lead, w.shape[-1]).astype(x.dtype)

@@ -452,6 +452,7 @@ class ServeEngine:
                  cache_len: int, fns_factory: Optional[Callable] = None,
                  policy: str = "continuous", max_admissions_per_step: int = 1,
                  use_kernels: bool = False, interpret: bool = False,
+                 spmd_kernels: bool = True,
                  a_sparsity: Optional[float] = None, block_m: int = 128,
                  measure_every: int = 8, decode_chunk: int = 8,
                  bucket_prompts: bool = True, fused: bool = True,
@@ -475,6 +476,10 @@ class ServeEngine:
         self._mode_fns: Dict[Mode, Tuple[Callable, ...]] = {}
         self.use_kernels = use_kernels
         self.interpret = interpret
+        # spmd_kernels=False forces the SPMD decompaction/dense-product
+        # oracles on a multi-device mesh instead of the shard_map'd Pallas
+        # kernels — the fallback-forced parity smoke (DESIGN.md Section 10)
+        self.spmd_kernels = spmd_kernels
         self.block_m = block_m
         self.a_declared = a_sparsity
         self.measure_every = max(1, measure_every)
@@ -550,7 +555,8 @@ class ServeEngine:
         return sparse_execution(use_kernels=self.use_kernels,
                                 interpret=self.interpret,
                                 a_sparsity=a_scope, block_m=self.block_m,
-                                spmd_mesh=self._spmd_mesh)
+                                spmd_mesh=self._spmd_mesh,
+                                spmd_kernels=self.spmd_kernels)
 
     def _fns(self) -> Tuple[Callable, Callable, Callable]:
         fns = self._mode_fns.get(self.mode)

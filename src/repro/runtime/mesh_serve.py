@@ -20,11 +20,17 @@ across devices (contraction dims and softmax axes stay whole; sharded
 axes are output/batch/head axes, all reduction-free), which makes the
 sharded engine's logits — and therefore its greedy tokens — bit-identical
 to the single-device engine on the same trace, for all four execution
-Modes.  ``mesh=1x1`` degenerates to the single-device engine: the
-sharding specs are trivial and the Pallas kernel paths are kept;
-``mesh.size > 1`` swaps the kernels for their spec-respecting jnp
-fallbacks (``griffin_matmul(spmd=True)``, ``sparse_a_matmul(spmd=True)``)
-because ``pallas_call`` has no SPMD partitioning rule.
+Modes.  Because no GEMM's contraction dim is ever split, each device's
+share of every matmul is fully local, and ``models.common.griffin_linear``
+runs the *real* Pallas kernels on every mesh size by wrapping them in
+``jax.experimental.shard_map`` with zero in-kernel collectives — each
+device executes ``griffin_matmul_shard``/``sparse_a_matmul_shard``/
+``dense_matmul_shard`` on its N-slice (DESIGN.md Section 10).  The former
+jnp fallbacks (``griffin_matmul(spmd=True)`` decompaction, plain sharded
+dots) are retired from the hot loop and kept only as the parity oracle,
+reachable via ``spmd_kernels=False``.  ``mesh=1x1`` degenerates to the
+single-device engine: the sharding specs are trivial and the kernels run
+un-shard_map'd.
 
 Runs unmodified on an emulated CPU mesh
 (``XLA_FLAGS=--xla_force_host_platform_device_count=8``) — which is how
@@ -132,8 +138,10 @@ class MeshServeEngine(ServeEngine):
     cache layout; the admission insert is re-jitted with the arena
     shardings (donated, so sharded admissions still update in place); and
     every ``sparse_execution`` scope the engine enters carries
-    ``spmd_mesh`` so ``griffin_linear`` runs the mesh-partitionable GEMM
-    paths.  All host-side bookkeeping — scheduler, remaining mirror, ring
+    ``spmd_mesh`` so ``griffin_linear`` shard_maps the real Pallas kernels
+    over the model axis (``spmd_kernels=False`` retires them to the
+    decompaction oracle).  All host-side bookkeeping — scheduler,
+    remaining mirror, ring
     drain, measurement cadence, Mode-keyed jit sets — is inherited
     untouched, which is the point: sharding is a placement concern, not a
     scheduling one (DESIGN.md Section 10).

@@ -251,3 +251,49 @@ def shard_cache(cache: Any, mesh: Mesh, batch: int,
                                             mesh, batch, decode, heads))
              for p, leaf in flat]
     return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+# ---------------------------------------------------------------------------
+# per-shard kernel operand specs (shard_map, DESIGN.md Section 10)
+# ---------------------------------------------------------------------------
+# Under the serving layout every device's GEMM is fully local, so
+# ``griffin_linear`` wraps the real Pallas kernels in ``shard_map``.  The
+# (in_specs, out_spec) each kernel call uses are defined next to the
+# shard-local entry points in the kernel packages (one definition, used by
+# dispatch and tests alike); these re-exports are the layout-rule layer's
+# view of them, plus the shardability predicate that decides kernel vs
+# decompaction-oracle per weight leaf.
+
+def spmm_shard_specs(axis: str = "model"):
+    """shard_map specs for ``griffin_matmul_shard``: activations and the
+    global column perm replicated; b_comp split on padded-N; kidx/cnt
+    split on their N-tile axis; output split on N.  Matches
+    ``param_spec(serve=True)``: b_comp's stored sharding IS the kernel's
+    in_spec, so entering the shard_map moves no weight bytes."""
+    from ..kernels.griffin_spmm.ops import shard_specs
+    return shard_specs(axis)
+
+
+def gemm_shard_specs(axis: str = "model"):
+    """shard_map specs for the dense-weight kernels
+    (``sparse_a_matmul_shard`` / ``dense_matmul_shard``): only the weights
+    and output split, on N; activations and the per-M-tile runtime
+    metadata replicate."""
+    from ..kernels.sparse_a.ops import shard_specs
+    return shard_specs(axis)
+
+
+def kernel_shardable(leaf, mesh: Mesh, axis: str = "model") -> bool:
+    """Can this GEMM weight leaf (a ``GriffinWeights`` or a plain matrix)
+    run the real kernel under shard_map on ``mesh``?  The same predicate
+    ``models.common.griffin_linear`` applies at dispatch time: compacted
+    weights need their N tiles to split evenly over the model axis; dense
+    weights only need their output dim to (each shard re-pads locally)."""
+    from ..kernels.dense_gemm import ops as dense_ops
+    from ..kernels.griffin_spmm import ops as spmm_ops
+    if axis not in mesh.axis_names:
+        return False
+    mp = mesh.shape[axis]
+    if isinstance(leaf, spmm_ops.GriffinWeights):
+        return spmm_ops.shardable(leaf, mp)
+    return dense_ops.shardable(leaf, mp)

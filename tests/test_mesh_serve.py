@@ -17,6 +17,17 @@ Two tiers:
     host-sync budget surviving sharding.  Skipped (not failed) when the
     process has too few devices, so the default tier-2 job stays green on
     one device.
+
+Kernel cells serve through the *real* shard_map'd Pallas kernels (the
+``GriffinWeights`` are compacted and ``use_kernels=True`` goes to the
+mesh engine too): ``_mesh_parity`` resets the ``KERNEL_DISPATCH``
+trace-time counter before the sharded run and asserts the shard_map
+bucket fired and the decompaction-oracle bucket did not — so a silent
+fallback regression fails the matrix even though the oracle is also
+token-exact.  ``test_mesh_fallback_forced_parity`` pins the oracle's
+continued correctness via ``spmd_kernels=False``.  Per-op shard parity
+(bitwise, vs both the unsharded kernels and the oracle) lives in
+tests/test_shard_map_kernels.py.
 """
 import dataclasses
 
@@ -32,6 +43,8 @@ from repro.kernels.griffin_spmm.ops import (decompact_weights,
                                             preprocess_weights)
 from repro.launch.mesh import serve_mesh
 from repro.models import build_model
+from repro.models.common import (kernel_dispatch_counts,
+                                 reset_kernel_dispatch)
 from repro.runtime.engine import ServeEngine, synthetic_trace
 from repro.runtime.mesh_serve import MeshServeEngine, cache_heads
 from repro.runtime.sharding import cache_spec, param_spec
@@ -212,29 +225,51 @@ def _reference(api, params, key, n_req, chunk, **kw):
 
 
 def _mesh_parity(arch, mesh_spec, sparse, chunk, n_req=4, a_sparsity=None,
-                 expect_mode=None):
+                 expect_mode=None, kernels=None, spmd_kernels=True):
+    """Sharded-vs-unsharded token parity for one matrix cell.
+
+    ``kernels`` (default: follow ``sparse``) runs *both* engines on the
+    Pallas kernels — compacted ``GriffinWeights`` when ``sparse`` — and
+    asserts via the trace-time dispatch counter that the sharded engine
+    actually took the shard_map path (or, with ``spmd_kernels=False``,
+    the decompaction oracle)."""
     cfg = get_config(arch).reduced()
     api = build_model(cfg)
     params = api.init(jax.random.PRNGKey(0))
+    kernels = sparse if kernels is None else kernels
     refkw, kw = {}, {}
     if sparse:
-        params = sparsify_params(params, 0.6, **PRUNE)
-        refkw = dict(use_kernels=True, interpret=True)
+        params = sparsify_params(params, 0.6, compact=kernels, **PRUNE)
+    if kernels:
+        refkw.update(use_kernels=True, interpret=True)
+        kw.update(use_kernels=True, interpret=True,
+                  spmd_kernels=spmd_kernels)
     if a_sparsity is not None:
         refkw["a_sparsity"] = kw["a_sparsity"] = a_sparsity
     ref_tokens, ref_mode, ref_hist = _reference(
-        api, params, (arch, sparse, chunk, a_sparsity), n_req, chunk,
-        **refkw)
+        api, params, (arch, sparse, chunk, a_sparsity, kernels), n_req,
+        chunk, **refkw)
     assert len(ref_hist) == 1, "mid-run mode flip would break the replay"
     eng = MeshServeEngine(api, params, mesh=serve_mesh(mesh_spec),
                           num_slots=4, cache_len=16, decode_chunk=chunk,
                           **kw)
+    reset_kernel_dispatch()
     outs = eng.run(_trace(cfg, n_req))
     assert eng.mode == ref_mode
     if expect_mode is not None:
         assert eng.mode == expect_mode
     got = {r: o.tokens for r, o in outs.items()}
     assert got == ref_tokens, (arch, mesh_spec, sparse, chunk)
+    if eng.mesh.size > 1 and kernels:
+        # the real-kernel regression gate (acceptance criterion): the
+        # sharded run must have traced through shard_map'd Pallas kernels,
+        # never the decompaction oracle — or exactly the reverse when the
+        # fallback is forced
+        counts = kernel_dispatch_counts()
+        hot, cold = (("shard_map", "spmd_oracle") if spmd_kernels
+                     else ("spmd_oracle", "shard_map"))
+        assert counts.get(hot, 0) > 0 and counts.get(cold, 0) == 0, \
+            (mesh_spec, spmd_kernels, counts)
     if eng.mesh.size > 1:
         # the run must actually have been sharded: at least one param leaf
         # and one arena leaf carry a non-trivial spec
@@ -266,13 +301,27 @@ def test_mesh_parity_matrix(mesh_spec, sparse, chunk):
 @pytest.mark.parametrize("mode", list(Mode), ids=[m.value for m in Mode])
 def test_mesh_parity_all_four_modes_2x4(mode):
     """Each execution Mode's jit set serves token-identically under
-    sharding: declared activation sparsity drives DENSE->A and B->AB
-    exactly as in core.hybrid.select_mode."""
+    sharding — through the shard_map'd real kernels (``kernels=True``
+    makes ``_mesh_parity`` assert the dispatch counter per Mode):
+    declared activation sparsity drives DENSE->A and B->AB exactly as in
+    core.hybrid.select_mode."""
     sparse = mode in (Mode.B, Mode.AB)
     a = 0.9 if mode in (Mode.A, Mode.AB) else None
     eng = _mesh_parity("llama3.2-1b", "2x4", sparse, chunk=3, a_sparsity=a,
-                       expect_mode=mode)
+                       expect_mode=mode, kernels=True)
     assert [m for _, m in eng.mode_history] == [mode]
+
+
+@pytest.mark.tier2
+@pytest.mark.mesh
+@_needs_devices(8)
+def test_mesh_fallback_forced_parity():
+    """``spmd_kernels=False`` retires the shard_map path back to the
+    decompaction oracle, which must stay token-exact too — the CI smoke
+    that keeps the parity baseline alive (launch/serve.py
+    --spmd-fallback)."""
+    _mesh_parity("llama3.2-1b", "2x4", sparse=True, chunk=3,
+                 expect_mode=Mode.B, spmd_kernels=False)
 
 
 @pytest.mark.tier2

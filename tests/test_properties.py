@@ -79,6 +79,53 @@ def test_griffin_spmm_property(m, kb, nb, block_k, block_n, density, dual,
     np.testing.assert_allclose(np.asarray(out), a @ w, rtol=2e-4, atol=2e-4)
 
 
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.integers(1, 9), kb=st.integers(2, 5), nb=st.sampled_from([2, 4, 8]),
+    trim=st.integers(0, 10), density=st.floats(0.1, 0.9),
+    balance=st.booleans(), dual=st.booleans(), seed=st.integers(0, 10_000),
+)
+def test_griffin_shard_split_invariance_property(m, kb, nb, trim, density,
+                                                 balance, dual, seed):
+    """The output-axis partition law behind the shard_map serving path
+    (DESIGN.md Section 10): for *every* split degree dividing the N
+    tiles of random block-sparse weights, running the shard-local kernel
+    entry on each contiguous tile group and concatenating is bit-equal
+    to the unsharded kernel — so the model-axis size never changes the
+    served logits.  Single-device: the slices are cut by hand, exactly
+    as ``shard_specs`` would place them."""
+    from repro.kernels.griffin_spmm.ops import griffin_matmul_shard
+    bk = bn = 16
+    k, n = kb * bk, nb * bn - min(trim, bn - 1)
+    rng = np.random.default_rng(seed)
+    w = rng.standard_normal((k, n)).astype(np.float32)
+    # zero (block_k x unit) pruning blocks on the ceil grid
+    keep = rng.random((kb, -(-n // 8))) < density
+    w = w * np.repeat(np.repeat(keep, bk, 0), 8, 1)[:k, :n]
+    a = rng.standard_normal((m, k)).astype(np.float32)
+    if dual:
+        a[:, : (k // 2 // bk) * bk] = 0.0        # whole zero A blocks
+    gw = preprocess_weights(w, block_k=bk, block_n=bn, unit=8,
+                            balance=balance)
+    ref = griffin_matmul(jnp.asarray(a), gw, dual=dual, interpret=True)
+    nt = gw.kidx.shape[0]
+    bm = max(8, -(-m // 8) * 8)                  # griffin_matmul's grid
+    ap = jnp.pad(jnp.asarray(a), ((0, bm - m), (0, gw.k - k)))
+    for shards in [d for d in range(1, nt + 1) if nt % d == 0]:
+        tps = nt // shards
+        parts = [griffin_matmul_shard(
+                     ap, gw.b_comp[:, s * tps * bn:(s + 1) * tps * bn],
+                     gw.kidx[s * tps:(s + 1) * tps],
+                     gw.cnt[s * tps:(s + 1) * tps], block_m=bm, block_k=bk,
+                     block_n=bn, dual=dual, interpret=True)
+                 for s in range(shards)]
+        out = jnp.concatenate(parts, axis=1)
+        if gw.inv_perm is not None:
+            out = out[:, gw.inv_perm]
+        np.testing.assert_array_equal(np.asarray(out[:m, :gw.n]),
+                                      np.asarray(ref), err_msg=str(shards))
+
+
 # ---------------------------------------------------------------------------
 # serving-engine slot scheduler (runtime.engine)
 # ---------------------------------------------------------------------------
