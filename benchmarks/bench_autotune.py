@@ -1,0 +1,123 @@
+"""Autotuned-vs-default serving benchmark (DESIGN.md Section 12).
+
+Runs the full DSE-in-the-loop pipeline (``repro.launch.autotune``) per
+model family — candidate enumeration fitted to the family's GEMM shapes,
+cycle-model + roofline scoring through the shared results cache, then
+measured tok/s validation of the predicted shortlist — and records the
+winner against the frozen reduced-config defaults
+(``repro.tuning.measure.PRUNE``, 16x16/u8).
+
+Two things are *asserted*, not just recorded:
+
+  - tok/s: the tuned plan must beat the default on every benched family
+    (the PR acceptance criterion — on the CPU interpret lowering the win
+    comes from coarse compaction amortizing the per-grid-step dispatch
+    overhead, the platform-dependent term ``tuning.search`` models);
+  - tok/step ratio == 1.0 and token identity: a plan changes how GEMMs
+    execute, never what they compute or how the engine schedules
+    (``autotune_family`` asserts per-candidate token parity in-loop).
+
+Writes benchmarks/out/bench_autotune.csv and saves the winning plan to
+``--plan-out``; ``--json`` additionally emits
+benchmarks/out/BENCH_autotune.json — the committed perf record
+scripts/check_bench_regression.py replays (tok/step ratio gate; wall
+clock stays ungated on CI boxes).
+
+  PYTHONPATH=src python -m benchmarks.bench_autotune --json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+import jax
+
+from repro.launch.autotune import autotune_family
+from repro.tuning import PLAN_SCHEMA_VERSION, KernelPlan, load_plan
+from repro.tuning.measure import FAMILY_ARCHS, PRUNE
+
+from .common import CACHE_DIR, emit, write_csv
+
+FAMILIES = ("dense", "ssm")
+
+
+def run(families=FAMILIES, *, sparsity: float = 0.8, budget: int = 16,
+        shortlist: int = 3, requests: int = 6, repeats: int = 3,
+        seed: int = 0, cache_dir: str = CACHE_DIR,
+        plan_out: str = "benchmarks/out/kernel_plan.json",
+        json_out: bool = False) -> None:
+    fams, rows, fam_json = {}, [], {}
+    for family in families:
+        fp, s = autotune_family(
+            family, sparsity=sparsity, budget=budget, shortlist_k=shortlist,
+            requests=requests, repeats=repeats, cache_dir=cache_dir,
+            seed=seed)
+        fams[fp.family] = fp
+        md, mw = fp.measured["default"], fp.measured[s["winner"]]
+        ratio = round(s["tok_s_tuned"] / s["tok_s_default"], 3)
+        tps_ratio = round(mw["tok_per_step"] / md["tok_per_step"], 3)
+        row = {"family": fp.family, "arch": s["arch"],
+               "winner": s["winner"],
+               "tok_s_default": md["tok_s"], "tok_s_tuned": mw["tok_s"],
+               "tok_s_ratio": ratio,
+               "tok_per_step_default": md["tok_per_step"],
+               "tok_per_step_tuned": mw["tok_per_step"],
+               "tok_per_step_ratio": tps_ratio}
+        # the record only ships when the tuned plan actually wins, and
+        # wins without touching the decode schedule
+        assert ratio >= 1.0, (
+            f"{fp.family}: tuned plan lost to the frozen defaults "
+            f"({ratio}x) — refusing to record a regressing plan")
+        assert tps_ratio == 1.0, (
+            f"{fp.family}: tuned tok/step drifted ({tps_ratio}) — a plan "
+            "must never change the decode schedule")
+        rows.append(row)
+        fam_json[fp.family] = row
+        emit(f"autotune/{fp.family}/{s['winner']}", 1e6 / mw["tok_s"],
+             f"tok_s={mw['tok_s']};default={md['tok_s']};ratio={ratio}")
+
+    plan = KernelPlan(families=fams, meta={
+        "tool": "benchmarks.bench_autotune", "sparsity": sparsity,
+        "budget": budget, "shortlist": shortlist, "requests": requests,
+        "seed": seed, "prune": dict(PRUNE),
+        "archs": {f: FAMILY_ARCHS[f] for f in families}})
+    plan.save(plan_out)
+    assert set(load_plan(plan_out).families) == set(fams)
+    path = write_csv("bench_autotune", rows)
+    print(f"# bench_autotune -> {path}; plan -> {plan_out} "
+          f"(schema v{PLAN_SCHEMA_VERSION})")
+    if json_out:
+        out = {
+            "backend": jax.default_backend(),
+            "schema_version": PLAN_SCHEMA_VERSION,
+            "plan": plan_out,
+            "tune": {"sparsity": sparsity, "budget": budget,
+                     "shortlist": shortlist, "requests": requests,
+                     "repeats": repeats, "seed": seed,
+                     "prune": dict(PRUNE)},
+            "families": fam_json,
+        }
+        jpath = pathlib.Path(__file__).parent / "out" / "BENCH_autotune.json"
+        jpath.write_text(json.dumps(out, indent=2) + "\n")
+        print(f"# bench_autotune json -> {jpath}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--families", default=",".join(FAMILIES))
+    ap.add_argument("--sparsity", type=float, default=0.8)
+    ap.add_argument("--budget", type=int, default=16)
+    ap.add_argument("--shortlist", type=int, default=3)
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--plan-out", default="benchmarks/out/kernel_plan.json")
+    ap.add_argument("--json", action="store_true",
+                    help="emit benchmarks/out/BENCH_autotune.json")
+    args = ap.parse_args()
+    run(tuple(f for f in args.families.split(",") if f),
+        sparsity=args.sparsity, budget=args.budget,
+        shortlist=args.shortlist, requests=args.requests,
+        repeats=args.repeats, seed=args.seed, plan_out=args.plan_out,
+        json_out=args.json)

@@ -96,14 +96,14 @@ def _name(policy: str, fused: bool, mesh=None) -> str:
 
 
 def make_engine(api, params, factory_cache, policy, cache_len, chunk,
-                fused, mesh=None):
+                fused, mesh=None, plan=None):
     if mesh:
         from repro.launch.mesh import serve_mesh
         from repro.runtime.mesh_serve import MeshServeEngine
         return MeshServeEngine(api, params, mesh=serve_mesh(mesh),
                                num_slots=SLOTS, cache_len=cache_len,
                                policy=policy, decode_chunk=chunk,
-                               fused=fused)
+                               fused=fused, plan=plan)
 
     def factory():
         if chunk not in factory_cache:
@@ -113,13 +113,20 @@ def make_engine(api, params, factory_cache, policy, cache_len, chunk,
 
     return ServeEngine(api, params, num_slots=SLOTS, cache_len=cache_len,
                        policy=policy, fns_factory=factory,
-                       decode_chunk=chunk, fused=fused)
+                       decode_chunk=chunk, fused=fused, plan=plan)
 
 
 def run(fast: bool = True, json_out: bool = False,
-        mesh: str = None) -> None:
+        mesh: str = None, plan_path: str = None) -> None:
     n_req = 16 if fast else 48
     cfg, api, params, cache_len, trace = build_workload(n_req)
+    # a tuned kernel plan (repro.launch.autotune, DESIGN.md Section 12)
+    # only moves this dense workload's Mode thresholds — rows record which
+    # plan (if any) was active so the perf trajectory stays attributable
+    fam_plan = None
+    if plan_path:
+        from repro.tuning import load_plan
+        fam_plan = load_plan(plan_path).family(cfg.family)
     configs = list(CONFIGS)
     if mesh and mesh != "1x1":
         configs.append(("continuous", CHUNK, True, mesh))
@@ -138,7 +145,7 @@ def run(fast: bool = True, json_out: bool = False,
     for policy, chunk, fused, cmesh in configs:
         name = _name(policy, fused, cmesh)
         eng = make_engine(api, params, factory_cache, policy, cache_len,
-                          chunk, fused, cmesh)
+                          chunk, fused, cmesh, plan=fam_plan)
         eng.run(trace())
         engines[name] = eng
         warm_retraces[name] = eng.stats["retraces"]
@@ -162,7 +169,7 @@ def run(fast: bool = True, json_out: bool = False,
         syncs_tok = eng.stats["host_syncs"] / toks
         results[name] = dict(
             policy=policy, decode_chunk=chunk, requests=n_req, slots=SLOTS,
-            mesh=cmesh or "1x1",
+            mesh=cmesh or "1x1", plan=plan_path,
             emitted=toks, decode_steps=eng.stats["decode_steps"],
             chunk_calls=eng.stats["chunk_calls"],
             prefill_calls=eng.stats["prefill_calls"],
@@ -176,6 +183,7 @@ def run(fast: bool = True, json_out: bool = False,
              f"syncs_per_tok={syncs_tok:.3f};"
              f"decode_steps={eng.stats['decode_steps']}")
         rows.append({"config": name, "mesh": cmesh or "1x1",
+                     "plan": plan_path or "",
                      "requests": n_req, "slots": SLOTS,
                      "emitted": toks, "decode_chunk": chunk,
                      "decode_steps": eng.stats["decode_steps"],
@@ -187,7 +195,8 @@ def run(fast: bool = True, json_out: bool = False,
                      results["static"]["tok_s"])
     fused_speedup = (results["continuous-chunked"]["tok_s"] /
                      results["continuous"]["tok_s"])
-    blank = {"mesh": "", "requests": n_req, "slots": SLOTS, "emitted": "",
+    blank = {"mesh": "", "plan": "", "requests": n_req, "slots": SLOTS,
+             "emitted": "",
              "decode_chunk": "", "decode_steps": "", "prefill_calls": "",
              "host_syncs_per_token": "", "wall_s": "", "tok_per_step": ""}
     rows.append({"config": "continuous/static",
@@ -229,7 +238,7 @@ def run(fast: bool = True, json_out: bool = False,
     if json_out:
         out = {
             "arch": ARCH, "backend": jax.default_backend(),
-            "mesh": mesh or "1x1",
+            "mesh": mesh or "1x1", "plan": plan_path,
             "trace": {"requests": n_req, "slots": SLOTS,
                       "prompt_lens": list(PROMPT_LENS),
                       "gen_lens": list(GEN_LENS), "seed": 7},
@@ -253,5 +262,10 @@ if __name__ == "__main__":
                     help="append a mesh-parallel engine row (needs D*M "
                          "devices; on CPU export XLA_FLAGS=--xla_force_"
                          "host_platform_device_count=8)")
+    ap.add_argument("--plan", default=None, metavar="PATH",
+                    help="tuned kernel plan (repro.launch.autotune); rows "
+                         "record it and every engine serves under its "
+                         "thresholds")
     args = ap.parse_args()
-    run(fast=not args.full, json_out=args.json, mesh=args.mesh)
+    run(fast=not args.full, json_out=args.json, mesh=args.mesh,
+        plan_path=args.plan)

@@ -16,6 +16,7 @@
 #   serve-bench       static / per-step / fused-chunk benchmark smoke
 #   fig5              batched-sweep benchmark smoke (results cache)
 #   e2e               registry models through the substrate (smoke)
+#   autotune          tiny-budget kernel-plan pipeline smoke (2 families)
 #   docs              DESIGN.md citation check
 #   mesh              8-device emulated mesh: sharded parity tier + smoke
 #   chaos             8-device emulated mesh: fault-injection matrix + smoke
@@ -81,6 +82,30 @@ stage_e2e() {
     run python -m benchmarks.bench_e2e --smoke
 }
 
+stage_autotune() {
+    echo "== autotune smoke: tiny-budget DSE-in-the-loop tuning over 2"
+    echo "==   families (DESIGN.md Section 12) — a plan file must be"
+    echo "==   emitted, reload through the schema check, and candidate"
+    echo "==   token parity is asserted inside the pipeline; then the"
+    echo "==   committed plan serves a reduced model with oracle parity"
+    # the smoke plan lives under the gitignored benchmarks/out/ so the
+    # clean stage stays green; the committed kernel_plan.json is only
+    # written by `bench_autotune --json` and never touched here
+    run python -m repro.launch.autotune --families dense,ssm \
+        --budget 4 --shortlist 1 --requests 3 --repeats 1 \
+        --out benchmarks/out/plan_smoke.json
+    run python -c "
+from repro.tuning import load_plan
+p = load_plan('benchmarks/out/plan_smoke.json')
+assert {'dense', 'ssm'} <= set(p.families), sorted(p.families)
+print('plan_smoke.json loads: families', sorted(p.families),
+      'schema v%d' % p.schema_version)
+"
+    rm -f benchmarks/out/plan_smoke.json
+    run python -m repro.launch.serve --reduced --requests 4 --use-kernels \
+        --plan benchmarks/out/kernel_plan.json --parity
+}
+
 stage_docs() {
     echo "== docs: every DESIGN.md section cited from a docstring exists"
     python scripts/check_design_refs.py
@@ -96,7 +121,8 @@ stage_mesh() {
     (
         export XLA_FLAGS="--xla_force_host_platform_device_count=8 ${XLA_FLAGS:-}"
         run python -m pytest -x -q -m mesh \
-            tests/test_shard_map_kernels.py tests/test_mesh_serve.py
+            tests/test_shard_map_kernels.py tests/test_mesh_serve.py \
+            tests/test_autotune.py
         run python examples/sparse_serve.py --mesh 2x4 --use-kernels
         run python examples/sparse_serve.py --mesh 2x2 --use-kernels \
             --spmd-fallback
@@ -132,7 +158,7 @@ stage_clean() {
 }
 
 ALL_STAGES="tier1 kernel tier2 serve bench-regression serve-bench fig5 e2e \
-docs mesh chaos clean"
+autotune docs mesh chaos clean"
 STAGES="${*:-$ALL_STAGES}"
 for s in $STAGES; do
     case "$s" in
@@ -144,6 +170,7 @@ for s in $STAGES; do
         serve-bench) stage_serve_bench ;;
         fig5) stage_fig5 ;;
         e2e) stage_e2e ;;
+        autotune) stage_autotune ;;
         docs) stage_docs ;;
         mesh) stage_mesh ;;
         chaos) stage_chaos ;;

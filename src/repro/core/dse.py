@@ -37,6 +37,15 @@ from .workloads import category_workloads
 # model or workload tables cold-starts the cache automatically.
 CACHE_VERSION = 1
 
+# Version of the candidate-config / kernel-plan schema (repro.tuning,
+# DESIGN.md Section 12).  It is part of every sweep fingerprint: a schema
+# bump (candidate fields gaining new semantics) must cold-start the cache,
+# otherwise stale ``benchmarks/out/cache/`` rows written under the old
+# schema would be served verbatim to plan-era queries.  ``repro.tuning``
+# re-exports this as the plan's ``schema_version`` so the two can never
+# drift apart.
+CONFIG_SCHEMA_VERSION = 2
+
 _MODEL_DIGEST: Optional[str] = None
 
 
@@ -128,7 +137,8 @@ def design_fingerprint(design: Union[SparseSpec, HybridSpec], mode: Mode,
     else:
         dd = _spec_dict(design)
     payload = {
-        "v": CACHE_VERSION, "model": _model_digest(), "design": dd,
+        "v": CACHE_VERSION, "schema": CONFIG_SCHEMA_VERSION,
+        "model": _model_digest(), "design": dd,
         "mode": mode.value, "core": dataclasses.asdict(core), "seed": seed,
         "mask_model": dataclasses.asdict(mask_model), "extra": list(extra),
     }

@@ -33,6 +33,7 @@ from repro.runtime.mesh_serve import MeshServeEngine
 from repro.runtime.serve import greedy_generate, jit_serve_fns
 from repro.runtime.straggler import StragglerConfig, StragglerDetector
 from repro.sparsity import sparsify_params
+from repro.tuning import load_plan
 
 
 def _lens(spec: str):
@@ -54,7 +55,7 @@ def _fault_hooks(args, devices, num_hosts):
     return injector, detector
 
 
-def build_engine(api, params, args, mesh) -> ServeEngine:
+def build_engine(api, params, args, mesh, plan=None) -> ServeEngine:
     cache_len = max(_lens(args.prompt_lens)) + max(_lens(args.gen_lens)) + 1
     if args.mesh:
         # mesh-parallel path (DESIGN.md Section 10): params model-sharded,
@@ -76,7 +77,7 @@ def build_engine(api, params, args, mesh) -> ServeEngine:
             decode_chunk=args.decode_chunk,
             fault_injector=injector, straggler=detector,
             snapshot_dir=args.snapshot_dir,
-            recovery_model_parallel=args.remesh_model_parallel)
+            recovery_model_parallel=args.remesh_model_parallel, plan=plan)
     injector, detector = _fault_hooks(args, jax.devices(), 1)
     return ServeEngine(
         api, params, num_slots=args.slots, cache_len=cache_len,
@@ -87,7 +88,7 @@ def build_engine(api, params, args, mesh) -> ServeEngine:
         interpret=args.use_kernels and kernel_interpret(),
         measure_every=args.measure_every, decode_chunk=args.decode_chunk,
         fault_injector=injector, straggler=detector,
-        snapshot_dir=args.snapshot_dir)
+        snapshot_dir=args.snapshot_dir, plan=plan)
 
 
 def main(argv=None) -> None:
@@ -126,6 +127,12 @@ def main(argv=None) -> None:
                          "instead of the shard_map'd Pallas kernels (the "
                          "parity baseline; scripts/ci.sh smokes it to keep "
                          "the oracle alive)")
+    ap.add_argument("--plan", default=None, metavar="PATH",
+                    help="tuned kernel plan JSON (repro.launch.autotune, "
+                         "DESIGN.md Section 12): this model family's entry "
+                         "steers weight-compaction granularity and Mode-"
+                         "selection thresholds; token output is unchanged "
+                         "by construction")
     ap.add_argument("--parity", action="store_true",
                     help="assert engine tokens == greedy_generate per "
                          "request")
@@ -158,14 +165,22 @@ def main(argv=None) -> None:
     mesh = plan_mesh(len(jax.devices()), args.model_parallel)
     params = api.init(jax.random.PRNGKey(0))
 
+    fam_plan = None
+    if args.plan:
+        fam_plan = load_plan(args.plan).family(cfg.family)
+        if fam_plan is None:
+            print(f"plan {args.plan} has no entry for family "
+                  f"{cfg.family!r}; serving with defaults")
+
     if args.sparsity > 0:
         # Sparse.B preprocessing: offline block pruning of the GEMM weights
         prune = (dict(block_k=16, block_n=16, unit=8) if args.reduced
                  else dict())
         params = sparsify_params(params, args.sparsity,
-                                 compact=args.use_kernels, **prune)
+                                 compact=args.use_kernels, plan=fam_plan,
+                                 **prune)
 
-    engine = build_engine(api, params, args, mesh)
+    engine = build_engine(api, params, args, mesh, plan=fam_plan)
     print(f"engine: {args.slots} slots x cache_len {engine.cache_len}, "
           f"policy={args.policy}, mesh={args.mesh or 'unsharded'}, "
           f"weight sparsity "

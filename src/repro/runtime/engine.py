@@ -458,9 +458,26 @@ class ServeEngine:
                  bucket_prompts: bool = True, fused: bool = True,
                  fault_injector: Optional[FaultInjector] = None,
                  straggler: Optional[StragglerDetector] = None,
-                 snapshot_dir: Optional[str] = None):
+                 snapshot_dir: Optional[str] = None, plan: Any = None):
         self.api = api
         self.params = params
+        # tuned kernel plan (repro.tuning, DESIGN.md Section 12): a
+        # KernelPlan (resolved by this model's family) or a FamilyPlan.
+        # Only the Mode-selection thresholds act here — compaction
+        # granularity was already applied when the caller ran
+        # sparsify_params(plan=...) over these params.  Thresholds change
+        # which kernels trace, never what they compute, so a planned
+        # engine stays token-identical to the default one.
+        fam = plan
+        if plan is not None and hasattr(plan, "families"):
+            fam = plan.family(api.cfg.family)
+        self.plan = fam
+        self._a_threshold = (fam.a_threshold if fam is not None
+                             and fam.a_threshold is not None
+                             else SPARSE_THRESHOLD)
+        self._b_threshold = (fam.b_threshold if fam is not None
+                             and fam.b_threshold is not None
+                             else SPARSE_THRESHOLD)
         self.num_slots = num_slots
         self.cache_len = cache_len
         self.decode_chunk = max(1, decode_chunk)
@@ -485,7 +502,7 @@ class ServeEngine:
         self.measure_every = max(1, measure_every)
         self.b_sparsity = weight_sparsity(params)
         self.a_measured = 0.0
-        self.mode = select_mode(self._a_now(), self.b_sparsity)
+        self.mode = self._select_mode()
         self.mode_history: List[Tuple[int, Mode]] = [(0, self.mode)]
         self.clock = 0
         self._since_measure = 0
@@ -545,18 +562,24 @@ class ServeEngine:
         return (self.a_declared if self.a_declared is not None
                 else self.a_measured)
 
+    def _select_mode(self) -> Mode:
+        return select_mode(self._a_now(), self.b_sparsity,
+                           threshold=self._a_threshold,
+                           b_threshold=self._b_threshold)
+
     def _scope(self):
         a_scope = 0.0
         if self.mode in (Mode.A, Mode.AB):
             a_scope = (self.a_declared
                        if self.a_declared is not None
-                       and self.a_declared > SPARSE_THRESHOLD
+                       and self.a_declared > self._a_threshold
                        else DEFAULT_DECLARED_A)
         return sparse_execution(use_kernels=self.use_kernels,
                                 interpret=self.interpret,
                                 a_sparsity=a_scope, block_m=self.block_m,
                                 spmd_mesh=self._spmd_mesh,
-                                spmd_kernels=self.spmd_kernels)
+                                spmd_kernels=self.spmd_kernels,
+                                a_threshold=self._a_threshold)
 
     def _fns(self) -> Tuple[Callable, Callable, Callable]:
         fns = self._mode_fns.get(self.mode)
@@ -577,7 +600,7 @@ class ServeEngine:
         most ``decode_chunk`` steps (Section 9)."""
         self._since_measure = 0
         self.a_measured = float(zero_frac)
-        mode = select_mode(self._a_now(), self.b_sparsity)
+        mode = self._select_mode()
         if mode != self.mode:
             self.mode = mode
             self.mode_history.append((self.clock, mode))

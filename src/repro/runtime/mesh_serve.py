@@ -151,6 +151,16 @@ class MeshServeEngine(ServeEngine):
     engine behaves exactly like ``ServeEngine`` with sharding-annotated
     jits.
 
+    Tuned kernel plans (``plan=...``, forwarded to the base engine) need
+    no mesh-specific handling: the family thresholds and per-GEMM
+    ``GriffinWeights.a_thr`` overrides are trace-time constants, so the
+    shard_map'd kernels trace with them exactly like the unsharded ones —
+    the plan tier's mesh cell asserts a plan survives this path
+    (DESIGN.md Section 12).  Plan-steered compaction granularity must
+    still satisfy ``shardable`` (whole N tiles per model shard);
+    ``griffin_linear`` falls back to the decompaction oracle per GEMM
+    otherwise, exactly as for default granularity.
+
     Failure handling (DESIGN.md Section 11): on a detected ``DeviceLoss``
     (or a straggler eviction — hosts are the data-rows of the mesh), the
     inherited recovery rolls back to the tick-start snapshot and this class

@@ -1,0 +1,18 @@
+"""DSE-in-the-loop autotuning (DESIGN.md Section 12).
+
+``plan`` defines the versioned kernel-plan artifact (safe to import from
+anywhere — no runtime/benchmark dependencies); ``search`` enumerates and
+scores candidate configs through the cycle-model DSE + roofline
+predictions; ``measure`` validates shortlisted candidates against
+measured tok/s on warm serving runs.  ``launch/autotune.py`` is the CLI
+gluing the three into a pipeline.
+
+Only the plan layer is re-exported here: ``measure`` imports the serving
+runtime, and consumers of plans (``sparsity``, ``runtime.engine``) must
+be importable without it.
+"""
+from .plan import (FamilyPlan, GemmRule, KernelPlan, PlanSchemaError,
+                   PLAN_SCHEMA_VERSION, load_plan)
+
+__all__ = ["FamilyPlan", "GemmRule", "KernelPlan", "PlanSchemaError",
+           "PLAN_SCHEMA_VERSION", "load_plan"]

@@ -1,0 +1,87 @@
+"""Measured-tok/s validation of shortlisted candidates (DESIGN.md
+Section 12): warm ``bench_serve``-style runs of the real serving engine.
+
+The analytical scores (``tuning.search``) only *rank*; every plan that
+ships was validated here — engine built with the candidate's compacted
+weights + thresholds, jits traced on a throwaway pass, then best-of-N
+timed replays of a deterministic trace.  The same run yields the token
+streams, so candidate-vs-default token identity (the plan-parity
+contract) is asserted in the loop, not trusted.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+
+from ..configs import get_config
+from ..models import build_model
+from ..runtime.engine import ServeEngine, synthetic_trace
+
+# Representative (reduced) arch per model family — the same mapping the
+# engine test matrix uses.
+FAMILY_ARCHS: Dict[str, str] = {
+    "dense": "llama3.2-1b", "moe": "mixtral-8x7b", "audio":
+    "whisper-large-v3", "ssm": "xlstm-1.3b", "hybrid": "recurrentgemma-9b",
+    "vlm": "chameleon-34b",
+}
+
+# The frozen reduced-config pruning granularity (launch/serve.py, the
+# engine test matrix).  Pruning ALWAYS stays at this granularity — plans
+# steer compaction only, so the zero pattern (hence every token) is
+# identical across candidates.
+PRUNE = dict(block_k=16, block_n=16, unit=8)
+
+TUNE_SLOTS = 4
+TUNE_PROMPT_LENS = (6, 10)
+TUNE_GEN_LENS = (4, 8, 16)
+
+
+def tuning_workload(family: str, *, requests: int = 6, seed: int = 7
+                    ) -> Tuple[Any, Any, Any, int, Callable]:
+    """(cfg, api, params, cache_len, trace_fn) for one family's tuning
+    workload: the reduced registry config on a deterministic mixed
+    prompt/gen trace."""
+    cfg = get_config(FAMILY_ARCHS[family]).reduced()
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    cache_len = max(TUNE_PROMPT_LENS) + max(TUNE_GEN_LENS) + 1
+    trace = lambda: synthetic_trace(cfg, num_requests=requests, seed=seed,
+                                    prompt_lens=TUNE_PROMPT_LENS,
+                                    gen_lens=TUNE_GEN_LENS,
+                                    arrival_every=1)
+    return cfg, api, params, cache_len, trace
+
+
+def measure_plan(api, params, cache_len: int, trace_fn: Callable, *,
+                 plan=None, decode_chunk: int = 8, slots: int = TUNE_SLOTS,
+                 repeats: int = 3, use_kernels: bool = True,
+                 interpret: bool = True) -> Dict[str, Any]:
+    """Warm measured run of one engine configuration.
+
+    Builds the engine once (``plan`` steers its Mode thresholds; the
+    weight compaction was already applied by the caller through
+    ``sparsify_params(plan=...)``), traces every jit on a first
+    throwaway pass, then times ``repeats`` fresh replays and keeps the
+    best (least-contended) wall clock.  Returns tok/s, the deterministic
+    tok/step twin, and the full per-request token streams for parity
+    checks."""
+    eng = ServeEngine(api, params, num_slots=slots, cache_len=cache_len,
+                      use_kernels=use_kernels, interpret=interpret,
+                      decode_chunk=decode_chunk, plan=plan)
+    outs = eng.run(trace_fn())                      # trace/warm pass
+    tokens = tuple(tuple(int(t) for t in outs[r].tokens)
+                   for r in sorted(outs))
+    best = float("inf")
+    for _ in range(max(1, repeats)):
+        eng.stats = {k: 0 for k in eng.stats}
+        t0 = time.perf_counter()
+        outs = eng.run(trace_fn())
+        best = min(best, time.perf_counter() - t0)
+        assert all(o.finished >= 0 for o in outs.values())
+    toks = eng.stats["emitted"]
+    steps = max(eng.stats["decode_steps"], 1)
+    return {"tok_s": toks / best, "tok_per_step": toks / steps,
+            "emitted": int(toks), "decode_steps": int(steps),
+            "wall_s": best, "mode": eng.mode.value, "tokens": tokens}

@@ -1,0 +1,235 @@
+"""Candidate enumeration + analytical scoring for the autotuner
+(DESIGN.md Section 12).
+
+A :class:`Candidate` is one point in the per-family execution design
+space: compaction block granularity (``block_k`` x ``block_n``), balance
+``unit``, accelerator MUX ``fanin`` budget, and the Mode-selection
+``a_threshold``.  :func:`predict_scores` prices every candidate with the
+two analytical halves of the repo:
+
+  - the cycle-model DSE (``core.dse.sweep`` over the Sparse.B enumeration
+    at the candidate's fan-in budget, through the content-hashed
+    ``ResultsCache`` — re-scoring a budget the cache has seen is free);
+  - a roofline prediction (``roofline.analysis``) of the decode-step GEMM
+    cost from the *actual* pruned weights compacted at the candidate's
+    granularity (``compaction_stats``), plus a per-grid-step dispatch
+    overhead term — on the CPU interpret lowering that term dominates,
+    which is exactly why the predicted ranking differs per platform.
+
+The predicted score only ranks a shortlist (:func:`shortlist`); the
+winner is always picked from *measured* tok/s (``tuning.measure``,
+:func:`select_best`) — predictions steer, measurements decide.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..configs.platform import kernel_interpret
+from ..core.dse import ResultsCache, enumerate_sparse_b, sweep
+from ..core.spec import Mode
+from ..roofline.analysis import CostSample, roofline_terms
+from ..sparsity.pruning import _BLOCKDIAG_PARENTS, GEMM_WEIGHTS
+from .plan import FamilyPlan, GemmRule
+
+# Per-grid-step dispatch overhead (seconds) added to the roofline bound.
+# The interpret lowering executes each grid step in the Python/XLA
+# emulation loop, so its per-step cost is ~zeros of magnitude above a real
+# TPU grid step — coarse compaction (fewer, bigger blocks) wins there,
+# while fine granularity wins where the roofline terms dominate.
+STEP_OVERHEAD_INTERPRET = 2e-4
+STEP_OVERHEAD_HW = 1e-7
+
+DEFAULT_THRESHOLDS = (0.05, 0.9)
+DEFAULT_FANINS = (8, 4)
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    """One point of the per-family execution design space."""
+
+    block_k: int
+    block_n: int
+    unit: int
+    fanin: int
+    a_threshold: float
+
+    @property
+    def name(self) -> str:
+        thr = str(self.a_threshold).replace(".", "p")
+        return (f"bk{self.block_k}_bn{self.block_n}_u{self.unit}"
+                f"_f{self.fanin}_t{thr}")
+
+    def family_plan(self, family: str, *, b_threshold: Optional[float] = None,
+                    predicted: Optional[Dict[str, Any]] = None,
+                    measured: Optional[Dict[str, Any]] = None) -> FamilyPlan:
+        """The plan entry executing this candidate: one ``"*"`` rule
+        steering every GEMM's compaction + the family thresholds."""
+        rule = GemmRule(match="*", block_k=self.block_k,
+                        block_n=self.block_n, unit=self.unit,
+                        a_threshold=self.a_threshold)
+        return FamilyPlan(family=family, rules=(rule,),
+                          a_threshold=self.a_threshold,
+                          b_threshold=b_threshold,
+                          predicted=predicted or {}, measured=measured or {})
+
+
+def gemm_leaves(params: Any, names: Sequence[str] = GEMM_WEIGHTS,
+                min_dim: int = 32) -> Dict[str, np.ndarray]:
+    """Representative 2-D weight per GEMM name: the same trailing-name /
+    min-dim / block-diagonal selection ``sparsity.sparsify_params``
+    applies, with stacked leaves (layers, experts) represented by their
+    first slice (layers of a stack share shape and — post-pruning — the
+    same target sparsity, so one slice prices them all)."""
+    out: Dict[str, np.ndarray] = {}
+
+    def walk(tree, name="", path=()):
+        if isinstance(tree, dict):
+            for k, v in tree.items():
+                walk(v, k, path + (k,))
+            return
+        if isinstance(tree, (list, tuple)):
+            for v in tree:
+                walk(v, name, path)
+            return
+        blockdiag = name in ("wq", "wk", "wv") and \
+            any(p in _BLOCKDIAG_PARENTS for p in path)
+        if name in names and not blockdiag and hasattr(tree, "ndim") \
+                and tree.ndim >= 2 \
+                and tree.shape[-2] >= min_dim and tree.shape[-1] >= min_dim:
+            w = np.asarray(tree)
+            w2 = w.reshape((-1,) + w.shape[-2:])
+            if w2.shape[0] and name not in out:
+                out[name] = w2[0]
+
+    walk(params)
+    return out
+
+
+def enumerate_candidates(shapes: Mapping[str, Tuple[int, int]],
+                         budget: int = 16, *,
+                         thresholds: Sequence[float] = DEFAULT_THRESHOLDS,
+                         fanins: Sequence[int] = DEFAULT_FANINS
+                         ) -> List[Candidate]:
+    """Deterministic candidate grid fitted to the family's actual GEMM
+    dims, truncated to ``budget`` points.
+
+    Block sizes are powers of two up to the smallest GEMM dim plus the
+    "coarse" full-dim point (one K block — the degenerate compaction the
+    frozen large-model defaults produce on reduced dims).  Loop nesting
+    orders the axes by how much they change the *measured* outcome —
+    sizes innermost (fastest covered), then thresholds, then balance
+    unit, then fan-in (which only scales the DSE half of the score) — so
+    a small budget spans granularity and thresholds before doubling up
+    on fan-ins.
+    """
+    min_k = min(s[0] for s in shapes.values())
+    min_n = min(s[1] for s in shapes.values())
+    dim = min(min_k, min_n)
+    sizes = [s for s in (16, 32, 64, 128) if s <= dim]
+    if dim not in sizes:
+        sizes.append(dim)
+    out: List[Candidate] = []
+    seen = set()
+    for fanin in fanins:
+        for unit_kind in ("prune", "tile"):
+            for thr in thresholds:
+                for s in sizes:
+                    unit = 8 if unit_kind == "prune" else s
+                    c = Candidate(block_k=s, block_n=s, unit=min(unit, s),
+                                  fanin=fanin, a_threshold=thr)
+                    if c.name in seen:
+                        continue
+                    seen.add(c.name)
+                    out.append(c)
+                    if len(out) >= budget:
+                        return out
+    return out
+
+
+def compaction_stats(w: np.ndarray, block_k: int, block_n: int
+                     ) -> Dict[str, float]:
+    """Compaction of one pruned matrix at (block_k x block_n) granularity
+    — the quantities the kernel's cost depends on, computed without
+    building the compacted arrays.  Mirrors ``preprocess_weights`` minus
+    the balance shuffle (balancing can only tighten ``max_cnt``, so this
+    is a safe upper bound for prediction)."""
+    k, n = w.shape
+    bk, bn = min(block_k, k), min(block_n, n)
+    pk, pn = -(-k // bk) * bk, -(-n // bn) * bn
+    wp = np.zeros((pk, pn), dtype=w.dtype)
+    wp[:k, :n] = w
+    nb_k, nb_n = pk // bk, pn // bn
+    blk_nz = (wp.reshape(nb_k, bk, nb_n, bn) != 0).any(axis=(1, 3))
+    cnt = blk_nz.sum(axis=0)
+    max_cnt = max(int(cnt.max(initial=0)), 1)
+    return {"nb_k": nb_k, "n_tiles": nb_n, "max_cnt": max_cnt,
+            "pn": pn, "bk": bk, "bn": bn,
+            "density": float(blk_nz.mean())}
+
+
+def _predicted_step(weights: Mapping[str, np.ndarray], cand: Candidate,
+                    batch: int, step_overhead: float) -> Dict[str, float]:
+    """Roofline-bounded decode-step time (seconds) of the family's GEMMs
+    compacted at the candidate granularity, plus the grid dispatch term."""
+    flops = bytes_acc = 0.0
+    grid = 0
+    model_flops = 0.0
+    for w in weights.values():
+        st = compaction_stats(w, cand.block_k, cand.block_n)
+        depth = st["max_cnt"] * st["bk"]
+        flops += 2.0 * batch * depth * st["pn"]
+        bytes_acc += 4.0 * (depth * st["pn"] + batch * w.shape[0] +
+                            batch * st["pn"] +
+                            st["n_tiles"] * (st["max_cnt"] + 1))
+        grid += st["n_tiles"] * st["max_cnt"]
+        model_flops += 2.0 * batch * float(np.count_nonzero(w))
+    terms = roofline_terms(CostSample(flops=flops, bytes_accessed=bytes_acc,
+                                      coll={}), model_flops, chips=1)
+    return {"bound_s": terms.bound_s, "grid_steps": grid,
+            "predicted_s": terms.bound_s + grid * step_overhead}
+
+
+def predict_scores(candidates: Sequence[Candidate],
+                   weights: Mapping[str, np.ndarray], *, batch: int = 4,
+                   cache: Optional[ResultsCache] = None, seed: int = 0,
+                   step_overhead: Optional[float] = None
+                   ) -> List[Dict[str, Any]]:
+    """Score candidates: cycle-model speedup at the fan-in budget (cached
+    DSE sweep) divided by the roofline-predicted step time.  Returns one
+    row per candidate, input order preserved."""
+    if step_overhead is None:
+        step_overhead = (STEP_OVERHEAD_INTERPRET if kernel_interpret()
+                         else STEP_OVERHEAD_HW)
+    dse_best: Dict[int, float] = {}
+    for fanin in sorted({c.fanin for c in candidates}):
+        rows = sweep(enumerate_sparse_b(max_fanin=fanin), Mode.B,
+                     seed=seed, cache=cache)
+        dse_best[fanin] = max(r["speedup"] for r in rows)
+    out = []
+    for c in candidates:
+        pred = _predicted_step(weights, c, batch, step_overhead)
+        dse_sp = dse_best[c.fanin]
+        out.append({"name": c.name, "candidate": c,
+                    "dse_speedup": round(float(dse_sp), 4),
+                    "grid_steps": int(pred["grid_steps"]),
+                    "bound_s": pred["bound_s"],
+                    "predicted_s": pred["predicted_s"],
+                    "score": float(dse_sp) / pred["predicted_s"]})
+    return out
+
+
+def shortlist(scored: Sequence[Dict[str, Any]], k: int
+              ) -> List[Dict[str, Any]]:
+    """Top-k rows by predicted score; ties broken by name so the
+    selection is a pure function of the score table."""
+    return sorted(scored, key=lambda r: (-r["score"], r["name"]))[:k]
+
+
+def select_best(measured: Mapping[str, float]) -> str:
+    """Winner of the measured-tok/s validation round: highest tok/s, ties
+    broken by name — deterministic given a frozen measurement table."""
+    assert measured, "empty measurement table"
+    return sorted(measured.items(), key=lambda kv: (-kv[1], kv[0]))[0][0]

@@ -1,0 +1,377 @@
+"""Plan-parity tier for the DSE-in-the-loop autotuner (DESIGN.md
+Section 12).
+
+What ships from ``repro.launch.autotune`` is a versioned kernel plan that
+changes *how* GEMMs execute — compaction granularity at
+``sparsify_params`` time, Mode-selection thresholds at serve time — and
+must never change *what* they compute.  This tier pins both halves:
+
+  - plan artifact: JSON round-trip, schema-version rejection, first-match
+    rule resolution;
+  - plan application is not a no-op: a per-family plan visibly changes
+    the compacted ``GriffinWeights`` block shapes, stamps per-GEMM
+    ``a_thr``, and flips ``select_mode`` outcomes (observed through the
+    engine mode and the ``dual`` kernel-dispatch bucket);
+  - plan parity: tuned-vs-default token identity across families
+    {dense, ssm} x weight representations {pruned-dense, sparse-B
+    compacted} x decode_chunk {1, 3};
+  - tier2 + mesh: a plan survives ``MeshServeEngine`` + shard_map
+    dispatch token-exactly (thresholds are trace-time constants; planned
+    granularity keeps whole N tiles per model shard).
+
+The deterministic shortlist/idempotency properties live in
+tests/test_properties.py; the sweep-cache schema coupling in
+tests/test_dse_cache.py.
+"""
+import dataclasses
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.dse import CONFIG_SCHEMA_VERSION
+from repro.core.spec import Mode
+from repro.kernels.griffin_spmm.ops import GriffinWeights, decompact_weights
+from repro.launch.mesh import serve_mesh
+from repro.models import build_model
+from repro.models.common import (kernel_dispatch_counts,
+                                 reset_kernel_dispatch)
+from repro.runtime.engine import ServeEngine, synthetic_trace
+from repro.runtime.mesh_serve import MeshServeEngine
+from repro.sparsity import sparsify_params
+from repro.tuning import (PLAN_SCHEMA_VERSION, FamilyPlan, GemmRule,
+                          KernelPlan, PlanSchemaError, load_plan)
+from repro.tuning.measure import FAMILY_ARCHS, PRUNE
+from repro.tuning.search import Candidate, enumerate_candidates
+
+
+def _needs_devices(n: int):
+    return pytest.mark.skipif(
+        len(jax.devices()) < n,
+        reason=f"needs {n} devices (export XLA_FLAGS="
+               "--xla_force_host_platform_device_count=8)")
+
+
+def _workload(family, requests=3):
+    """Reduced model + deterministic mixed trace for one family."""
+    cfg = get_config(FAMILY_ARCHS[family]).reduced()
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    trace = lambda: synthetic_trace(cfg, num_requests=requests, seed=3,
+                                    prompt_lens=(4, 6), gen_lens=(3, 5),
+                                    arrival_every=1)
+    return cfg, api, params, trace
+
+
+def _griffin_leaves(params):
+    return [l for l in jax.tree.leaves(
+        params, is_leaf=lambda x: isinstance(x, GriffinWeights))
+        if isinstance(l, GriffinWeights)]
+
+
+def _decompact_any(gw):
+    """Dense reconstruction of a (possibly stacked) GriffinWeights."""
+    if gw.b_comp.ndim == 2:
+        return np.asarray(decompact_weights(gw))
+    return np.stack([np.asarray(decompact_weights(dataclasses.replace(
+        gw, b_comp=gw.b_comp[i], kidx=gw.kidx[i], cnt=gw.cnt[i],
+        inv_perm=None if gw.inv_perm is None else gw.inv_perm[i])))
+        for i in range(gw.b_comp.shape[0])])
+
+
+def _tokens(outs):
+    return {r: tuple(int(t) for t in o.tokens) for r, o in outs.items()}
+
+
+_PLAN = FamilyPlan(
+    family="dense", a_threshold=0.9,
+    rules=(GemmRule(match="*", block_k=64, block_n=64, unit=8,
+                    a_threshold=0.9),),
+    predicted={"bk64_bn64_u8_f8_t0p9": {"score": 1.0}},
+    measured={"winner": "bk64_bn64_u8_f8_t0p9"})
+
+
+# ---------------------------------------------------------------------------
+# plan artifact: JSON round-trip + schema rejection
+# ---------------------------------------------------------------------------
+
+def test_plan_json_round_trip(tmp_path):
+    plan = KernelPlan(
+        families={"dense": _PLAN,
+                  "ssm": FamilyPlan(family="ssm", b_threshold=0.2)},
+        meta={"tool": "repro.launch.autotune", "sparsity": 0.8})
+    path = str(tmp_path / "plan.json")
+    plan.save(path)
+    re = load_plan(path)
+    assert re.schema_version == PLAN_SCHEMA_VERSION
+    assert re.families == plan.families      # frozen dataclasses: deep ==
+    assert re.meta == plan.meta
+    assert re.family("dense").rule_for("wo").block_k == 64
+    assert re.family("moe") is None
+
+
+def test_plan_schema_version_rejected(tmp_path):
+    doc = KernelPlan(families={"dense": _PLAN}).to_json()
+    for bad in (PLAN_SCHEMA_VERSION + 1, PLAN_SCHEMA_VERSION - 1, None,
+                str(PLAN_SCHEMA_VERSION)):
+        doc["schema_version"] = bad
+        path = str(tmp_path / "bad.json")
+        with open(path, "w") as f:
+            json.dump({k: v for k, v in doc.items()
+                       if v is not None or k != "schema_version"}, f)
+        with pytest.raises(PlanSchemaError):
+            load_plan(path)
+
+
+def test_plan_and_sweep_cache_share_one_schema_constant():
+    # one bump must simultaneously reject stale plan files and cold-start
+    # DSE sweep rows cached under the old schema (DESIGN.md Section 12)
+    assert PLAN_SCHEMA_VERSION == CONFIG_SCHEMA_VERSION
+
+
+def test_rule_resolution_first_match_wins():
+    fp = FamilyPlan(family="dense", rules=(
+        GemmRule(match="wo", block_k=32),
+        GemmRule(match="*", block_k=64)))
+    assert fp.rule_for("wo").block_k == 32
+    assert fp.rule_for("w_up").block_k == 64      # falls to the "*" rule
+    assert FamilyPlan(family="dense").rule_for("wo") is None
+
+
+def test_enumerate_candidates_budget_and_determinism():
+    shapes = {"wo": (64, 64), "w_up": (64, 256)}
+    cands = enumerate_candidates(shapes, budget=8)
+    assert len(cands) == 8
+    assert cands == enumerate_candidates(shapes, budget=8)
+    assert len({c.name for c in cands}) == len(cands)
+    # fitted to the actual dims: nothing coarser than the smallest GEMM
+    assert all(c.block_k <= 64 and c.block_n <= 64 for c in cands)
+    # a small budget still spans granularity AND both thresholds
+    assert len({c.block_k for c in cands}) > 1
+    assert len({c.a_threshold for c in cands}) > 1
+
+
+def test_candidate_family_plan_shape():
+    c = Candidate(block_k=64, block_n=64, unit=8, fanin=8, a_threshold=0.9)
+    fp = c.family_plan("dense")
+    assert fp.a_threshold == 0.9
+    r = fp.rule_for("anything")
+    assert (r.block_k, r.block_n, r.unit, r.a_threshold) == (64, 64, 8, 0.9)
+
+
+# ---------------------------------------------------------------------------
+# plan application is not a no-op (engine-level asserts)
+# ---------------------------------------------------------------------------
+
+def test_plan_changes_sparsify_block_shapes():
+    _, _, params, _ = _workload("dense")
+    base = _griffin_leaves(sparsify_params(params, 0.8, compact=True,
+                                           **PRUNE))
+    tuned = _griffin_leaves(sparsify_params(params, 0.8, compact=True,
+                                            plan=_PLAN, **PRUNE))
+    assert base and len(base) == len(tuned)
+    assert all(g.block_k == 16 and g.block_n == 16 and g.a_thr is None
+               for g in base)
+    # the plan's "*" rule steered every leaf's compaction granularity
+    # (clamped to the leaf dims) and stamped the per-GEMM threshold
+    assert all(g.block_k == min(64, g.k) and g.block_n == min(64, g.n)
+               and g.a_thr == 0.9 for g in tuned)
+    assert any(g.block_k != b.block_k or g.block_n != b.block_n
+               for g, b in zip(tuned, base))
+    # compaction moved, values did not: both granularities reconstruct
+    # the same pruned matrices (the mechanism behind token parity)
+    for g, b in zip(tuned, base):
+        k = min(g.k, b.k)
+        np.testing.assert_array_equal(_decompact_any(g)[..., :k, :],
+                                      _decompact_any(b)[..., :k, :])
+
+
+def test_family_threshold_changes_engine_select_mode():
+    """The plan's a_threshold flips the engine's global Mode decision
+    (AB -> B under declared activation sparsity 0.5) and turns the dual
+    kernels off — with token-identical output."""
+    cfg, api, params, trace = _workload("dense")
+    sp = sparsify_params(params, 0.8, compact=True, **PRUNE)
+    kw = dict(num_slots=4, cache_len=16, use_kernels=True, interpret=True,
+              a_sparsity=0.5, decode_chunk=3)
+    base = ServeEngine(api, sp, **kw)
+    assert base.mode == Mode.AB
+    reset_kernel_dispatch()
+    ref = _tokens(base.run(trace()))
+    assert kernel_dispatch_counts().get("dual", 0) > 0
+
+    fp = FamilyPlan(family=cfg.family, a_threshold=0.9)
+    tuned = ServeEngine(api, sp, plan=fp, **kw)
+    assert tuned.mode == Mode.B              # 0.5 declared < 0.9 planned
+    reset_kernel_dispatch()
+    got = _tokens(tuned.run(trace()))
+    assert kernel_dispatch_counts().get("dual", 0) == 0
+    assert got == ref
+
+
+def test_per_gemm_a_thr_overrides_scope_threshold():
+    """A rule-level a_threshold rides on the compacted weights
+    (``GriffinWeights.a_thr``) and wins over the scope threshold inside
+    ``griffin_linear`` even when the engine's global mode stays AB."""
+    cfg, api, params, trace = _workload("dense")
+    fp = FamilyPlan(family=cfg.family,
+                    rules=(GemmRule(match="*", a_threshold=0.9),))
+    sp = sparsify_params(params, 0.8, compact=True, plan=fp, **PRUNE)
+    assert all(g.a_thr == 0.9 for g in _griffin_leaves(sp))
+    kw = dict(num_slots=4, cache_len=16, use_kernels=True, interpret=True,
+              a_sparsity=0.5, decode_chunk=3)
+    # engine given only the rules (no family-level threshold): global
+    # mode still AB, but every GEMM's own a_thr vetoes the dual kernels
+    eng = ServeEngine(api, sp, plan=fp, **kw)
+    assert eng.mode == Mode.AB
+    reset_kernel_dispatch()
+    got = _tokens(eng.run(trace()))
+    assert kernel_dispatch_counts().get("dual", 0) == 0
+
+    base = ServeEngine(api, sparsify_params(params, 0.8, compact=True,
+                                            **PRUNE), **kw)
+    reset_kernel_dispatch()
+    ref = _tokens(base.run(trace()))
+    assert kernel_dispatch_counts().get("dual", 0) > 0
+    assert got == ref
+
+
+def test_family_b_threshold_reaches_engine():
+    _, api, params, _ = _workload("dense")
+    sp = sparsify_params(params, 0.8, compact=True, **PRUNE)
+    base = ServeEngine(api, sp, num_slots=4, cache_len=16,
+                       use_kernels=True, interpret=True)
+    assert base.mode == Mode.B
+    tuned = ServeEngine(api, sp, num_slots=4, cache_len=16,
+                        use_kernels=True, interpret=True,
+                        plan=FamilyPlan(family="dense", b_threshold=0.999))
+    assert tuned.b_sparsity == base.b_sparsity
+    assert tuned.mode == Mode.DENSE          # planned b gate vetoes B
+
+
+# ---------------------------------------------------------------------------
+# plan parity: tuned-vs-default token identity matrix
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("chunk", [1, 3])
+@pytest.mark.parametrize("compacted", [False, True],
+                         ids=["dense", "sparseB"])
+@pytest.mark.parametrize("family", ["dense", "ssm"])
+def test_tuned_vs_default_token_identity(family, compacted, chunk):
+    """The plan-parity contract across the engine matrix: the winning
+    autotuner shape (coarse compaction + raised thresholds) serves the
+    exact default token streams on both weight representations."""
+    cfg, api, params, trace = _workload(family)
+    plan = dataclasses.replace(_PLAN, family=cfg.family)
+    if compacted:
+        base_p = sparsify_params(params, 0.8, compact=True, **PRUNE)
+        tuned_p = sparsify_params(params, 0.8, compact=True, plan=plan,
+                                  **PRUNE)
+        kw = dict(use_kernels=True, interpret=True)
+    else:
+        # pruned-dense twin: the plan only moves the engine thresholds
+        base_p = tuned_p = sparsify_params(params, 0.8, compact=False,
+                                           **PRUNE)
+        kw = {}
+    base = ServeEngine(api, base_p, num_slots=4, cache_len=16,
+                       decode_chunk=chunk, **kw)
+    ref = _tokens(base.run(trace()))
+    tuned = ServeEngine(api, tuned_p, num_slots=4, cache_len=16,
+                        decode_chunk=chunk, plan=plan, **kw)
+    got = _tokens(tuned.run(trace()))
+    assert got == ref, (family, compacted, chunk)
+    assert all(len(t) > 0 for t in got.values())
+
+
+# ---------------------------------------------------------------------------
+# tier2 + mesh: a plan survives shard_map dispatch (CI sharded job)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.tier2
+@pytest.mark.mesh
+@_needs_devices(8)
+def test_plan_survives_mesh_shard_map():
+    """Planned granularity + thresholds through ``MeshServeEngine`` on a
+    2x4 mesh: the sharded tuned engine serves the unsharded *default*
+    engine's tokens through the shard_map'd kernels (never the oracle).
+    block_n=16 keeps whole N tiles per model shard (d_model 64 / model
+    axis 4), the shardability contract from DESIGN.md Section 10."""
+    cfg, api, params, trace = _workload("dense")
+    plan = FamilyPlan(
+        family=cfg.family, a_threshold=0.9,
+        rules=(GemmRule(match="*", block_k=64, block_n=16, unit=8,
+                        a_threshold=0.9),))
+    default_p = sparsify_params(params, 0.8, compact=True, **PRUNE)
+    tuned_p = sparsify_params(params, 0.8, compact=True, plan=plan, **PRUNE)
+
+    ref_eng = ServeEngine(api, default_p, num_slots=4, cache_len=16,
+                          decode_chunk=3, use_kernels=True, interpret=True)
+    ref = _tokens(ref_eng.run(trace()))
+
+    eng = MeshServeEngine(api, tuned_p, mesh=serve_mesh("2x4"), num_slots=4,
+                          cache_len=16, decode_chunk=3, use_kernels=True,
+                          interpret=True, plan=plan)
+    # the plan rode through resharding: every GriffinWeights leaf placed
+    # on the mesh still carries the planned granularity + threshold
+    leaves = _griffin_leaves(eng.params)
+    assert leaves and all(g.block_n == 16 and g.a_thr == 0.9
+                          for g in leaves)
+    assert eng._a_threshold == 0.9
+    reset_kernel_dispatch()
+    got = _tokens(eng.run(trace()))
+    counts = kernel_dispatch_counts()
+    assert counts.get("shard_map", 0) > 0, counts
+    assert counts.get("spmd_oracle", 0) == 0, counts
+    assert got == ref
+
+
+# ---------------------------------------------------------------------------
+# deterministic twins of the tests/test_properties.py hypothesis sweeps
+# (those need the optional [test] dependency; these always run)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_shortlist_and_winner_deterministic(seed):
+    from repro.tuning.search import select_best, shortlist
+
+    rng = np.random.default_rng(seed)
+    names = [f"c{i}" for i in range(10)]
+    table = {n: float(rng.integers(0, 5)) for n in names}   # forced ties
+    rows = [{"name": n, "score": s} for n, s in table.items()]
+    perm = [rows[i] for i in rng.permutation(len(rows))]
+    assert [r["name"] for r in shortlist(perm, 4)] == \
+        [r["name"] for r in shortlist(rows, 4)]
+    winner = select_best(table)
+    shuffled = {n: table[n] for n in rng.permutation(names)}
+    assert select_best(shuffled) == winner
+    assert winner == sorted(n for n in names
+                            if table[n] == max(table.values()))[0]
+
+
+@pytest.mark.parametrize("bk,thr", [(16, None), (32, 0.05), (64, 0.9)])
+def test_plan_application_idempotent(bk, thr):
+    """sparsify_params(plan=...) twice from the same source: bit-identical
+    compacted GriffinWeights — no hidden rng/cache/mutation."""
+    rng = np.random.default_rng(7)
+    params = {"layers": [
+        {"wo": rng.standard_normal((64, 64)).astype(np.float32),
+         "w_up": rng.standard_normal((64, 96)).astype(np.float32)}]}
+    plan = FamilyPlan(family="x", rules=(
+        GemmRule(match="*", block_k=bk, block_n=bk, unit=8,
+                 a_threshold=thr),))
+    kw = dict(block_k=16, block_n=16, unit=8)
+    once = sparsify_params(params, 0.7, plan=plan, **kw)
+    twice = sparsify_params(params, 0.7, plan=plan, **kw)
+    for a, b in zip(_griffin_leaves(once), _griffin_leaves(twice)):
+        assert (a.k, a.n, a.block_k, a.block_n, a.a_thr) == \
+            (b.k, b.n, b.block_k, b.block_n, b.a_thr)
+        assert a.block_k == bk and a.a_thr == thr
+        for fa, fb in zip((a.b_comp, a.kidx, a.cnt, a.inv_perm),
+                          (b.b_comp, b.kidx, b.cnt, b.inv_perm)):
+            if fa is None or fb is None:
+                assert fa is None and fb is None
+            else:
+                np.testing.assert_array_equal(np.asarray(fa),
+                                              np.asarray(fb))

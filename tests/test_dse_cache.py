@@ -65,3 +65,43 @@ def test_cache_get_put_direct(tmp_path):
     row = {"design": "x", "speedup": 1.25}
     cache.put("deadbeef", row)
     assert cache.get("deadbeef") == row
+
+
+def test_fingerprint_includes_config_schema_version(monkeypatch):
+    """The candidate-config / kernel-plan schema version (repro.tuning,
+    DESIGN.md Section 12) is part of every sweep fingerprint: a schema
+    bump must cold-start rows cached under the old schema, because the
+    autotuner's scores are only comparable within one schema."""
+    import repro.core.dse as dse
+
+    base = design_fingerprint(SPARSE_B_STAR, Mode.B, CORE, 1,
+                              DEFAULT_MASK_MODEL)
+    monkeypatch.setattr(dse, "CONFIG_SCHEMA_VERSION",
+                        dse.CONFIG_SCHEMA_VERSION + 1)
+    bumped = design_fingerprint(SPARSE_B_STAR, Mode.B, CORE, 1,
+                                DEFAULT_MASK_MODEL)
+    assert bumped != base
+
+
+def test_schema_bump_cold_starts_sweep_cache(tmp_path, monkeypatch):
+    """Regression: rows cached under an older CONFIG_SCHEMA_VERSION are
+    misses for the current code (and vice versa), never silent hits."""
+    import repro.core.dse as dse
+
+    cache = ResultsCache(str(tmp_path / "cache"))
+    designs = DESIGNS[:2]
+    monkeypatch.setattr(dse, "CONFIG_SCHEMA_VERSION", 1)   # "old" schema
+    old = sweep(designs, Mode.B, CORE, seed=1, cache=cache)
+    assert (cache.hits, cache.misses) == (0, 2)
+
+    monkeypatch.setattr(dse, "CONFIG_SCHEMA_VERSION", 2)   # schema bump
+    new = sweep(designs, Mode.B, CORE, seed=1, cache=cache)
+    assert (cache.hits, cache.misses) == (0, 4)            # cold again
+    assert new == old                       # same physics, fresh rows
+
+    # each schema's rows now hit under their own version only
+    sweep(designs, Mode.B, CORE, seed=1, cache=cache)
+    assert (cache.hits, cache.misses) == (2, 4)
+    monkeypatch.setattr(dse, "CONFIG_SCHEMA_VERSION", 1)
+    sweep(designs, Mode.B, CORE, seed=1, cache=cache)
+    assert (cache.hits, cache.misses) == (4, 4)
