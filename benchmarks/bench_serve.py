@@ -48,7 +48,10 @@ import jax
 
 from repro.configs import get_config
 from repro.models import build_model
+from repro.runtime import slo
 from repro.runtime.engine import ServeEngine, synthetic_trace
+from repro.runtime.router import RouterEngine
+from repro.runtime.slo import DegradationConfig
 
 from .common import emit, write_csv
 
@@ -67,6 +70,30 @@ GEN_LENS = (12, 12, 16, 16, 24, 24, 32, 112)
 # against; mesh=None rows run the unsharded engine
 CONFIGS = (("static", 1, False, None), ("continuous", 1, False, None),
            ("continuous", CHUNK, True, None))
+
+# router overload row (DESIGN.md Section 13): a seeded 2x-overload bursty
+# heavy-tailed trace through 2 replicas, once behind the bounded EDF
+# queue + degradation ladder and once behind the unbounded no-SLO
+# baseline it replaces.  Every gated metric is in virtual router ticks —
+# deterministic, so scripts/check_bench_regression.py replays with ==.
+ROUTER_REPLICAS = 2
+ROUTER_BOUND = 6
+ROUTER_SLO = dict(deadline_slack=4.0, ttft_deadline=6)
+
+
+def overload_trace(cfg, n_req: int, with_slo: bool):
+    """Bursty Markov-modulated arrivals at ~2x the pool's service rate
+    with Pareto generation lengths; ``with_slo`` attaches the
+    deadline/priority fields the router's admission control consumes
+    (False = the FCFS-unbounded baseline's view of the same workload)."""
+    extra = dict(priorities=(0, 1), **ROUTER_SLO) if with_slo else {}
+    return synthetic_trace(cfg, num_requests=n_req, seed=11,
+                           prompt_lens=PROMPT_LENS,
+                           gen_lens=(4, 8, 12, 16),
+                           arrival_process="bursty", rate=1.0,
+                           burst_rate=8.0, burst_switch=0.2,
+                           length_dist="heavy", heavy_alpha=1.6,
+                           max_gen=24, **extra)
 
 
 def build_workload(n_req: int):
@@ -114,6 +141,56 @@ def make_engine(api, params, factory_cache, policy, cache_len, chunk,
     return ServeEngine(api, params, num_slots=SLOTS, cache_len=cache_len,
                        policy=policy, fns_factory=factory,
                        decode_chunk=chunk, fused=fused, plan=plan)
+
+
+def run_router_overload(api, params, cache_len, cfg, n_req,
+                        factory_cache) -> dict:
+    """The overload pair: the same seeded 2x-overload trace through (a)
+    the bounded-EDF + degradation router and (b) the unbounded FCFS
+    baseline.  Returns the two virtual-tick summaries; asserts the
+    bounded run stayed bounded and the baseline demonstrates the queue
+    growth it prevents."""
+    results = {}
+    for name, bounded in (("router-bounded", True),
+                          ("router-unbounded", False)):
+        router = RouterEngine(
+            lambda: make_engine(api, params, factory_cache, "continuous",
+                                cache_len, CHUNK, True),
+            ROUTER_REPLICAS,
+            queue_bound=ROUTER_BOUND if bounded else None,
+            degradation=DegradationConfig() if bounded else None)
+        reqs = overload_trace(cfg, n_req, with_slo=bounded)
+        t0 = time.perf_counter()
+        outs = router.run(reqs)
+        dt = time.perf_counter() - t0
+        summary = slo.latency_summary(slo.request_rows(outs, reqs))
+        results[name] = dict(
+            replicas=ROUTER_REPLICAS, slots=SLOTS,
+            queue_bound=ROUTER_BOUND if bounded else None,
+            max_queue_depth=router.max_queue_depth,
+            ticks=router.clock,
+            ladder_history=[list(t) for t in router.ladder.history]
+            if router.ladder else [],
+            wall_s=round(dt, 4), **summary)
+        emit(f"serve/{ARCH}/{name}", dt * 1e6 / max(1, n_req),
+             f"ttft_p99={summary['ttft_p99']};shed={summary['shed']};"
+             f"depth={router.max_queue_depth}")
+    b, u = results["router-bounded"], results["router-unbounded"]
+    assert b["shed"] > 0, "2x-overload trace shed nothing — not overloaded"
+    assert b["max_queue_depth"] <= ROUTER_BOUND, \
+        f"bounded router overflowed its queue: {b['max_queue_depth']}"
+    assert u["max_queue_depth"] > ROUTER_BOUND, \
+        "baseline queue never outgrew the bound — the overload row " \
+        "demonstrates nothing"
+    assert b["ttft_p99"] <= u["ttft_p99"], \
+        f"shedding+degradation worsened p99 TTFT ({b['ttft_p99']} vs " \
+        f"{u['ttft_p99']} ticks)"
+    print(f"# router overload ({ROUTER_REPLICAS} replicas): bounded "
+          f"ttft p50/p99 {b['ttft_p50']}/{b['ttft_p99']} ticks, "
+          f"shed {b['shed']}, depth {b['max_queue_depth']} <= "
+          f"{ROUTER_BOUND}; unbounded baseline ttft p99 {u['ttft_p99']} "
+          f"ticks at depth {u['max_queue_depth']}")
+    return results
 
 
 def run(fast: bool = True, json_out: bool = False,
@@ -235,6 +312,8 @@ def run(fast: bool = True, json_out: bool = False,
               f"unsharded (ratio 1.0), tok/s ratio {tok_s_ratio:.3f}x, "
               f"syncs/token {sh['host_syncs_per_token']} "
               f"(vs {un['host_syncs_per_token']})")
+    router_results = run_router_overload(api, params, cache_len, cfg,
+                                         n_req, factory_cache)
     if json_out:
         out = {
             "arch": ARCH, "backend": jax.default_backend(),
@@ -246,6 +325,11 @@ def run(fast: bool = True, json_out: bool = False,
             "speedups": {"continuous_vs_static": round(sched_speedup, 3),
                          "chunked_vs_continuous": round(fused_speedup, 3),
                          **mesh_speedups},
+            "router": {"trace": {"requests": n_req, "seed": 11,
+                                 "arrival_process": "bursty",
+                                 "length_dist": "heavy",
+                                 **{k: v for k, v in ROUTER_SLO.items()}},
+                       **router_results},
         }
         jpath = pathlib.Path(__file__).parent / "out" / "BENCH_serve.json"
         jpath.write_text(json.dumps(out, indent=2) + "\n")

@@ -11,6 +11,12 @@ emulated 8-device CPU mesh (the CI sharded stage runs exactly this):
 
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
       python examples/sparse_serve.py --mesh 2x4
+
+or multi-replica SLO-aware routing with overload shedding and graceful
+degradation (DESIGN.md Section 13):
+
+  python examples/sparse_serve.py --replicas 2 --queue-bound 6 \\
+      --arrival-process bursty --shed-policy degrade
 """
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
@@ -20,5 +26,8 @@ from repro.launch.serve import main
 main(["--arch", "llama3.2-1b", "--reduced", "--slots", "3",
       "--requests", "6", "--prompt-lens", "8,12,16", "--gen-lens", "6,10,14",
       "--arrival-every", "1", "--sparsity", "0.8", "--parity",
-      "--decode-chunk", "8", "--max-syncs-per-token", "0.25"]
+      "--decode-chunk", "8", "--max-syncs-per-token", "0.25",
+      # virtual-tick SLOs (runtime.slo): prints the per-request
+      # attainment table; deadlines only gate admission in --replicas mode
+      "--slo", "ttft=64,slack=8"]
      + sys.argv[1:])

@@ -22,6 +22,12 @@ skeleton of the serving engine, per recorded config:
     (bench_serve only asserts the tok/s direction when the host has a
     core per device).
 
+  - router overload rows (``router`` section, DESIGN.md Section 13):
+    shed count, max queue depth, p50/p99 TTFT, inter-token latency and
+    SLO attainment — exact, because they are counted in virtual router
+    ticks over the recorded seeded trace, never in wall clock; plus the
+    bounded-vs-unbounded ordering asserted inside the replay itself.
+
 Configs whose ``mesh`` needs more devices than this process has are
 skipped with a note (the CI sharded job runs with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
@@ -101,6 +107,45 @@ def check_autotune(failures: list) -> int:
         print(f"autotune/{family}: winner={row['winner']} tok/step ratio="
               f"{ratio:.3f} (recorded {row['tok_per_step_ratio']}), "
               f"tokens identical={tuned['tokens'] == base['tokens']}")
+    return checked
+
+
+def check_router(rec, api, params, cache_len, cfg, n_req, factory_cache,
+                 failures) -> int:
+    """Replay the committed router overload rows (DESIGN.md Section 13).
+    Every gated field is in virtual router ticks — deterministic given
+    the recorded trace seed — so shed counts, queue depth, p50/p99 TTFT,
+    inter-token latency and SLO attainment must match with ``==``
+    (wall_s/ticks stay ungated).  Returns rows checked (0 = no router
+    section committed)."""
+    from benchmarks.bench_serve import run_router_overload
+
+    committed = rec.get("router")
+    if not committed:
+        print("skip router gate: no router section in BENCH_serve.json")
+        return 0
+    replay = run_router_overload(api, params, cache_len, cfg, n_req,
+                                 factory_cache)
+    gated = ("requests", "completed", "shed", "max_queue_depth",
+             "ttft_p50", "ttft_p99", "itl_p50", "itl_p99",
+             "slo_attainment", "ladder_history")
+    checked = 0
+    for name, got in replay.items():
+        want = committed.get(name)
+        if want is None:
+            failures.append(f"router/{name}: row missing from the "
+                            "committed record — regenerate "
+                            "BENCH_serve.json")
+            continue
+        checked += 1
+        for field in gated:
+            if got[field] != want[field]:
+                failures.append(f"router/{name}: {field} drifted "
+                                f"{want[field]} -> {got[field]}")
+        print(f"router/{name}: shed={got['shed']} "
+              f"depth={got['max_queue_depth']} ttft p50/p99="
+              f"{got['ttft_p50']}/{got['ttft_p99']} attainment="
+              f"{got['slo_attainment']} (all vs committed, exact)")
     return checked
 
 
@@ -191,13 +236,16 @@ def main() -> int:
             print(f"{name}: tok-per-step ratio vs {base} = {got:.3f} "
                   f"(recorded {want:.3f})")
 
+    router_checked = check_router(rec, api, params, cache_len, cfg,
+                                  n_req, factory_cache, failures)
+
     tuned_checked = check_autotune(failures)
 
     for f in failures:
         print("FAIL:", f)
-    print(f"check_bench_regression: {checked} configs replayed against "
-          f"{jpath.name} + {tuned_checked} autotuned families, "
-          f"{len(failures)} drifts")
+    print(f"check_bench_regression: {checked} configs + {router_checked} "
+          f"router rows replayed against {jpath.name} + {tuned_checked} "
+          f"autotuned families, {len(failures)} drifts")
     if checked == 0:
         print("FAIL: no configs replayed")
         return 1

@@ -18,6 +18,8 @@
 #   e2e               registry models through the substrate (smoke)
 #   autotune          tiny-budget kernel-plan pipeline smoke (2 families)
 #   docs              DESIGN.md citation check
+#   router            SLO router: unit tier + replica-kill chaos cells +
+#                     seeded 2x-overload smoke (single device)
 #   mesh              8-device emulated mesh: sharded parity tier + smoke
 #   chaos             8-device emulated mesh: fault-injection matrix + smoke
 #   clean             worktree clean after the run (smoke CSV churn reset)
@@ -111,6 +113,21 @@ stage_docs() {
     python scripts/check_design_refs.py
 }
 
+stage_router() {
+    echo "== router: SLO admission/hedging/degradation unit tier, the"
+    echo "==   replica-kill chaos cells (single device — replicas are"
+    echo "==   in-process engines, no emulated mesh needed), and a seeded"
+    echo "==   2x-overload smoke that must shed under a bounded queue and"
+    echo "==   keep depth <= bound (DESIGN.md Section 13)"
+    run python -m pytest -x -q tests/test_router.py
+    run python -m pytest -x -q -m chaos tests/test_fault_tolerance.py \
+        -k router
+    run python examples/sparse_serve.py --replicas 2 --queue-bound 4 \
+        --arrival-process bursty --rate 1 --burst-rate 8 \
+        --length-dist heavy --priorities 0,1 --requests 24 \
+        --slo ttft=16,slack=2 --shed-policy degrade --overload-smoke
+}
+
 stage_mesh() {
     echo "== mesh: shard-parity tier (real Pallas kernels under shard_map)"
     echo "==   + serve smokes on an emulated 8-device CPU mesh (DESIGN.md"
@@ -158,7 +175,7 @@ stage_clean() {
 }
 
 ALL_STAGES="tier1 kernel tier2 serve bench-regression serve-bench fig5 e2e \
-autotune docs mesh chaos clean"
+autotune docs router mesh chaos clean"
 STAGES="${*:-$ALL_STAGES}"
 for s in $STAGES; do
     case "$s" in
@@ -172,6 +189,7 @@ for s in $STAGES; do
         e2e) stage_e2e ;;
         autotune) stage_autotune ;;
         docs) stage_docs ;;
+        router) stage_router ;;
         mesh) stage_mesh ;;
         chaos) stage_chaos ;;
         clean) stage_clean ;;

@@ -26,11 +26,14 @@ from repro.configs import get_config
 from repro.configs.platform import kernel_interpret
 from repro.models import build_model
 from repro.launch.mesh import mesh_spec, serve_mesh
+from repro.runtime import slo
 from repro.runtime.elastic import plan_mesh
 from repro.runtime.engine import ServeEngine, synthetic_trace
 from repro.runtime.fault import parse_fault_spec
 from repro.runtime.mesh_serve import MeshServeEngine
+from repro.runtime.router import RouterEngine
 from repro.runtime.serve import greedy_generate, jit_serve_fns
+from repro.runtime.slo import DegradationConfig
 from repro.runtime.straggler import StragglerConfig, StragglerDetector
 from repro.sparsity import sparsify_params
 from repro.tuning import load_plan
@@ -38,6 +41,26 @@ from repro.tuning import load_plan
 
 def _lens(spec: str):
     return tuple(int(x) for x in spec.split(",") if x)
+
+
+def _parse_slo(spec: str):
+    """``--slo`` spec: comma-separated ``ttft=<ticks>`` (first-token
+    deadline) and ``slack=<factor>`` (completion deadline = slack x the
+    request's own expected service).  Either half may be omitted."""
+    ttft, slack = None, None
+    for part in spec.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        k, _, v = part.partition("=")
+        if k == "ttft":
+            ttft = int(v)
+        elif k == "slack":
+            slack = float(v)
+        else:
+            raise ValueError(f"--slo {spec!r}: unknown key {k!r} "
+                             "(known: ttft, slack)")
+    return ttft, slack
 
 
 def _fault_hooks(args, devices, num_hosts):
@@ -56,7 +79,10 @@ def _fault_hooks(args, devices, num_hosts):
 
 
 def build_engine(api, params, args, mesh, plan=None) -> ServeEngine:
-    cache_len = max(_lens(args.prompt_lens)) + max(_lens(args.gen_lens)) + 1
+    gen_cap = max(_lens(args.gen_lens))
+    if getattr(args, "length_dist", "choice") == "heavy":
+        gen_cap *= 2    # the Pareto draw is capped at 2x (main())
+    cache_len = max(_lens(args.prompt_lens)) + gen_cap + 1
     if args.mesh:
         # mesh-parallel path (DESIGN.md Section 10): params model-sharded,
         # arena slot/head-sharded, per-Mode jits carry explicit shardings.
@@ -91,6 +117,112 @@ def build_engine(api, params, args, mesh, plan=None) -> ServeEngine:
         snapshot_dir=args.snapshot_dir, plan=plan)
 
 
+def _print_slo(rows, summary) -> None:
+    """Per-request SLO attainment table + the aggregate latency summary
+    (virtual ticks — runtime.slo's recorded deviation from wall clock)."""
+    print("per-request SLO attainment (virtual ticks):")
+    for r in rows:
+        mark = {True: "ok", False: "MISS", None: "-"}[r["attained"]]
+        print(f"  rid {r['rid']:>3} prio {r['priority']} "
+              f"ttft {r['ttft'] if r['ttft'] is not None else '-':>4} "
+              f"done {r['completion'] if r['completion'] is not None else '-':>4} "
+              f"tokens {r['tokens']:>3} {r['attribution']:<8} {mark}")
+    print(f"SLO summary: {summary['completed']}/{summary['requests']} "
+          f"completed, {summary['shed']} shed, "
+          f"ttft p50/p99 {summary['ttft_p50']}/{summary['ttft_p99']}, "
+          f"itl p50/p99 {summary['itl_p50']}/{summary['itl_p99']}, "
+          f"attainment {summary['slo_attainment']}")
+
+
+def _run_router(api, params, args, mesh, cfg, fam_plan, reqs) -> None:
+    """Multi-replica path (DESIGN.md Section 13): N engines behind the
+    SLO-aware router.  A 'replica:' --inject-fault spec is consumed at
+    the router level; kill/delay specs keep arming replica 0's internal
+    recovery path as usual."""
+    replica_faults = []
+    if args.inject_fault:
+        spec = parse_fault_spec(args.inject_fault)
+        if spec.kind == "replica":
+            replica_faults = [spec.build_replica()]
+            args.inject_fault = None
+
+    engines = []     # build eagerly so replica 0 reports its config once
+
+    def make_engine():
+        eng = build_engine(api, params, args, mesh, plan=fam_plan)
+        engines.append(eng)
+        return eng
+
+    bound = args.queue_bound or None
+    degradation = None
+    if args.shed_policy == "none":
+        bound = None
+    elif bound is None:
+        bound = 2 * args.slots * args.replicas
+    if args.shed_policy == "degrade":
+        degradation = DegradationConfig()
+    router = RouterEngine(make_engine, args.replicas,
+                          queue_bound=bound,
+                          hedge_after=args.hedge_ms or None,
+                          degradation=degradation,
+                          replica_faults=replica_faults)
+    e0 = router.replicas[0].engine
+    print(f"router: {args.replicas} replicas x {args.slots} slots, "
+          f"queue bound {bound or 'unbounded'}, "
+          f"shed policy {args.shed_policy}, "
+          f"hedge after {args.hedge_ms or 'off'}, "
+          f"weight sparsity {e0.b_sparsity:.2f} -> mode {e0.mode.value}")
+
+    t0 = time.time()
+    outs = router.run(reqs)
+    dt = time.time() - t0
+    toks = sum(len(o.tokens) for o in outs.values())
+    print(f"routed {len(reqs)} requests / {toks} tokens in {dt:.2f}s "
+          f"over {router.clock} virtual ticks; "
+          f"stats {router.stats}, max queue depth "
+          f"{router.max_queue_depth}"
+          + (f", ladder history {router.ladder.history}"
+             if router.ladder else ""))
+    if replica_faults:
+        print(f"replica fault log: {router.health_log}")
+        assert router.stats["completed"] + router.stats["shed"] >= len(reqs), \
+            "router fault run left requests unaccounted"
+
+    rows = slo.request_rows(outs, reqs)
+    _print_slo(rows, slo.latency_summary(rows))
+
+    if args.overload_smoke:
+        assert bound is not None, "--overload-smoke needs a bounded queue"
+        assert router.max_queue_depth <= bound, (
+            f"queue depth {router.max_queue_depth} exceeded bound {bound}")
+        assert router.stats["shed"] > 0, (
+            "overload trace shed nothing — not actually overloaded?")
+        print(f"overload smoke OK: depth {router.max_queue_depth} <= "
+              f"{bound}, shed {router.stats['shed']}")
+
+    if args.parity:
+        eng = router.up_replicas[0].engine
+        if any(len(e.mode_history) > 1 for e in engines if e is not None):
+            print("parity SKIPPED: execution mode changed mid-run")
+            return
+        checked = 0
+        for r in reqs:
+            o = outs[r.rid]
+            if o.finished < 0:
+                continue
+            with eng._scope():
+                ref = greedy_generate(
+                    api, params, r.as_batch(), steps=r.max_new_tokens,
+                    cache_len=eng.cache_len,
+                    prompt_bucket=eng.bucket_for(r.prompt_len))
+            assert np.array_equal(np.asarray(o.tokens),
+                                  np.asarray(ref[0])), (
+                f"request {r.rid} diverged from greedy oracle")
+            checked += 1
+        print(f"parity OK: {checked} completed requests token-identical "
+              "to greedy_generate")
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-1b")
@@ -100,6 +232,23 @@ def main(argv=None) -> None:
     ap.add_argument("--prompt-lens", default="8,16,32")
     ap.add_argument("--gen-lens", default="4,8,16")
     ap.add_argument("--arrival-every", type=int, default=0)
+    ap.add_argument("--arrival-process", choices=("fixed", "bursty"),
+                    default="fixed",
+                    help="'bursty' draws Markov-modulated arrival gaps "
+                         "(seeded, replayable) instead of the fixed "
+                         "--arrival-every stagger")
+    ap.add_argument("--rate", type=float, default=0.5,
+                    help="bursty calm-state arrival rate (requests/tick)")
+    ap.add_argument("--burst-rate", type=float, default=4.0,
+                    help="bursty burst-state arrival rate (requests/tick)")
+    ap.add_argument("--length-dist", choices=("choice", "heavy"),
+                    default="choice",
+                    help="'heavy' draws Pareto generation lengths (tail "
+                         "stragglers) instead of a uniform choice over "
+                         "--gen-lens")
+    ap.add_argument("--priorities", default="0",
+                    help="comma-separated priority classes drawn per "
+                         "request (0 = most important)")
     ap.add_argument("--sparsity", type=float, default=0.8)
     ap.add_argument("--use-kernels", action="store_true",
                     help="compact pruned weights into GriffinWeights and "
@@ -156,6 +305,37 @@ def main(argv=None) -> None:
                          "(default: keep the current model-axis size)")
     ap.add_argument("--evict-after", type=int, default=3,
                     help="straggler eviction streak for delay faults")
+    ap.add_argument("--replicas", type=int, default=0, metavar="N",
+                    help="serve through the SLO-aware multi-replica "
+                         "router (DESIGN.md Section 13): N engines behind "
+                         "one bounded-EDF admission queue; 0 keeps the "
+                         "single-engine path.  'replica:<i>@<tick>"
+                         "[:<during>[:<recover>]]' --inject-fault specs "
+                         "kill whole replicas at the router level")
+    ap.add_argument("--queue-bound", type=int, default=0,
+                    help="router admission-queue bound (0 = unbounded "
+                         "baseline: never sheds for capacity)")
+    ap.add_argument("--slo", default=None, metavar="SPEC",
+                    help="attach virtual-tick SLOs to the trace: "
+                         "'ttft=<ticks>,slack=<factor>' (either half "
+                         "optional); deadlines drive router EDF admission "
+                         "and the attainment summary")
+    ap.add_argument("--hedge-ms", type=int, default=0,
+                    help="router tail-latency hedge: a dispatched request "
+                         "with no first token after this many virtual "
+                         "ticks is re-dispatched to a second replica and "
+                         "the loser cancelled (0 = off)")
+    ap.add_argument("--shed-policy", choices=("none", "shed", "degrade"),
+                    default="shed",
+                    help="router overload response: 'none' = unbounded "
+                         "queue (the baseline failure mode), 'shed' = "
+                         "bounded queue only, 'degrade' = bounded queue + "
+                         "the pressure ladder (chunk cap -> cheaper Mode "
+                         "-> priority shed)")
+    ap.add_argument("--overload-smoke", action="store_true",
+                    help="assert the router stayed bounded: "
+                         "max_queue_depth <= --queue-bound and shed "
+                         "count > 0 (the CI overload stage)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -180,16 +360,31 @@ def main(argv=None) -> None:
                                  compact=args.use_kernels, plan=fam_plan,
                                  **prune)
 
+    ttft_slo, slack_slo = _parse_slo(args.slo) if args.slo else (None, None)
+    max_gen = None
+    if args.length_dist == "heavy":
+        # heavy tails must still fit the fixed cache arena
+        max_gen = 2 * max(_lens(args.gen_lens))
+    reqs = synthetic_trace(cfg, num_requests=args.requests, seed=1,
+                           prompt_lens=_lens(args.prompt_lens),
+                           gen_lens=_lens(args.gen_lens),
+                           arrival_every=args.arrival_every,
+                           arrival_process=args.arrival_process,
+                           rate=args.rate, burst_rate=args.burst_rate,
+                           length_dist=args.length_dist, max_gen=max_gen,
+                           priorities=_lens(args.priorities),
+                           deadline_slack=slack_slo, ttft_deadline=ttft_slo)
+
+    if args.replicas > 0:
+        _run_router(api, params, args, mesh, cfg, fam_plan, reqs)
+        return
+
     engine = build_engine(api, params, args, mesh, plan=fam_plan)
     print(f"engine: {args.slots} slots x cache_len {engine.cache_len}, "
           f"policy={args.policy}, mesh={args.mesh or 'unsharded'}, "
           f"weight sparsity "
           f"{engine.b_sparsity:.2f} -> mode {engine.mode.value}")
 
-    reqs = synthetic_trace(cfg, num_requests=args.requests, seed=1,
-                           prompt_lens=_lens(args.prompt_lens),
-                           gen_lens=_lens(args.gen_lens),
-                           arrival_every=args.arrival_every)
     t0 = time.time()
     outs = engine.run(reqs)
     dt = time.time() - t0
@@ -206,6 +401,10 @@ def main(argv=None) -> None:
           f"mode history {[(s, m.value) for s, m in engine.mode_history]}")
     first = outs[reqs[0].rid]
     print("request 0 token ids:", np.asarray(first.tokens[:12]))
+
+    if args.slo:
+        rows = slo.request_rows(outs, reqs)
+        _print_slo(rows, slo.latency_summary(rows))
 
     if args.inject_fault:
         assert len(outs) == len(reqs), (

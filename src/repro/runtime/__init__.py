@@ -1,3 +1,5 @@
 """Distributed runtime: sharding rules, train/serve step factories, the
 continuous-batching serving engine (engine.py), elastic remesh, straggler
-mitigation."""
+mitigation, and the SLO layer — admission control / graceful degradation
+policy (slo.py) under the multi-replica router with retry and hedging
+(router.py, DESIGN.md Section 13)."""

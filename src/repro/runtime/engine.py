@@ -37,6 +37,7 @@ from __future__ import annotations
 
 import copy
 import dataclasses
+import enum
 import functools
 import heapq
 import time
@@ -77,13 +78,23 @@ MIN_BUCKET = 8
 class Request:
     """One generation request.  ``arrival`` is the earliest engine step at
     which the scheduler may admit it; ``extras`` carries non-token model
-    inputs (whisper frames)."""
+    inputs (whisper frames).
+
+    ``priority``/``deadline_ms``/``ttft_deadline_ms`` are the SLO fields
+    the multi-replica router's admission control consumes (DESIGN.md
+    Section 13): priority 0 is the most important class, deadlines count
+    virtual ticks after ``arrival`` (None = best-effort).  The defaults
+    are FCFS-compatible — a plain ``ServeEngine`` ignores all three, so
+    pre-router traces behave exactly as before."""
 
     rid: int
     tokens: np.ndarray
     max_new_tokens: int
     arrival: int = 0
     extras: Optional[Dict[str, np.ndarray]] = None
+    priority: int = 0
+    deadline_ms: Optional[int] = None
+    ttft_deadline_ms: Optional[int] = None
 
     @property
     def prompt_len(self) -> int:
@@ -101,12 +112,30 @@ class Request:
         return pad_prompt_batch(batch, bucket)
 
 
+class Attribution(str, enum.Enum):
+    """How a request's output came to be (DESIGN.md Section 13): served
+    normally, shed by admission control, replayed on a surviving replica
+    after its first replica died, or won by a hedged duplicate.  Plain
+    engine runs only ever produce ``NORMAL``; the router stamps the
+    rest."""
+
+    NORMAL = "normal"
+    SHED = "shed"
+    RETRIED = "retried"
+    HEDGED = "hedged"
+
+
 @dataclasses.dataclass
 class RequestOutput:
     rid: int
     tokens: List[int] = dataclasses.field(default_factory=list)
     admitted: int = -1
     finished: int = -1
+    # engine clock at each token's emission — consecutive diffs are the
+    # virtual inter-token latency the serve bench reports (Section 13)
+    token_steps: List[int] = dataclasses.field(default_factory=list)
+    attribution: Attribution = Attribution.NORMAL
+    shed_reason: Optional[str] = None
 
 
 # ---------------------------------------------------------------------------
@@ -199,6 +228,39 @@ class Scheduler:
         self.finished.append(req.rid)
         return True
 
+    def would_admit(self, step: int) -> bool:
+        """Non-mutating peek: would ``admissions(step)`` pop at least one
+        request?  The router classifies a replica's tick phase with it
+        (prefill vs decode vs idle) without disturbing the queues."""
+        if not self._free:
+            return False
+        if self.policy == "static" and self.running:
+            return False
+        if self._ready:
+            return True
+        return bool(self._by_arrival and self._by_arrival[0][0] <= step)
+
+    def cancel_slot(self, slot: int) -> Request:
+        """Free ``slot`` without crediting a finished request — the
+        router's hedge-loser/cancel path.  The request is *not* appended
+        to ``finished``."""
+        req = self.running.pop(slot)
+        del self.remaining[slot]
+        self._free.append(slot)
+        return req
+
+    def remove_waiting(self, rid: int) -> bool:
+        """Drop a not-yet-admitted request from the queues (heaps are
+        rebuilt — cancellation is rare and off the hot path).  Returns
+        True when something was removed."""
+        n0 = self.waiting_count
+        self._by_arrival = [(a, s, r) for a, s, r in self._by_arrival
+                            if r.rid != rid]
+        heapq.heapify(self._by_arrival)
+        self._ready = [(s, r) for s, r in self._ready if r.rid != rid]
+        heapq.heapify(self._ready)
+        return self.waiting_count < n0
+
     @property
     def active(self) -> List[int]:
         return sorted(self.running)
@@ -230,7 +292,9 @@ class Scheduler:
         included (float32 -> Python float -> float32 is lossless)."""
         def req(r: Request) -> Dict:
             d = {"rid": r.rid, "tokens": np.asarray(r.tokens).tolist(),
-                 "max_new_tokens": r.max_new_tokens, "arrival": r.arrival}
+                 "max_new_tokens": r.max_new_tokens, "arrival": r.arrival,
+                 "priority": r.priority, "deadline_ms": r.deadline_ms,
+                 "ttft_deadline_ms": r.ttft_deadline_ms}
             if r.extras:
                 d["extras"] = {k: [str(np.asarray(v).dtype),
                                    np.asarray(v).tolist()]
@@ -259,7 +323,10 @@ class Scheduler:
             return Request(rid=rd["rid"],
                            tokens=np.asarray(rd["tokens"], np.int32),
                            max_new_tokens=rd["max_new_tokens"],
-                           arrival=rd["arrival"], extras=extras)
+                           arrival=rd["arrival"], extras=extras,
+                           priority=rd.get("priority", 0),
+                           deadline_ms=rd.get("deadline_ms"),
+                           ttft_deadline_ms=rd.get("ttft_deadline_ms"))
         sched = cls(d["num_slots"], d["policy"], d["max_admissions"])
         sched._seq = d["seq"]
         sched._by_arrival = [(a, s, req(r)) for a, s, r in d["by_arrival"]]
@@ -481,6 +548,12 @@ class ServeEngine:
         self.num_slots = num_slots
         self.cache_len = cache_len
         self.decode_chunk = max(1, decode_chunk)
+        # router/SLO hooks (DESIGN.md Section 13): ``chunk_cap`` caps the
+        # fused-chunk ladder (degradation level 1 — shorter ticks, faster
+        # admission turnaround); ``degraded`` forces the cheaper Mode by
+        # zeroing the B-side threshold (level 2).  Both default inert.
+        self.chunk_cap: Optional[int] = None
+        self.degraded = False
         self.bucket_prompts = bucket_prompts
         # fused=False keeps the PR 3 per-step hot path (one decode dispatch
         # + host argmax + sync per token, measurement gathering the full
@@ -565,7 +638,24 @@ class ServeEngine:
     def _select_mode(self) -> Mode:
         return select_mode(self._a_now(), self.b_sparsity,
                            threshold=self._a_threshold,
-                           b_threshold=self._b_threshold)
+                           b_threshold=(0.0 if self.degraded
+                                        else self._b_threshold))
+
+    def set_degraded(self, on: bool) -> None:
+        """Degradation-ladder level 2 (DESIGN.md Section 13): force the
+        cheaper execution Mode through the PR 8 threshold machinery —
+        ``on`` zeroes the B-side threshold so any pruned weight selects
+        the Sparse.B kernels even in the dense-preferred regime (dense
+        weights stay dense: 0 > 0 is false either way).  Re-selects
+        immediately; a flip swaps the Mode-keyed jit set like any
+        measured flip."""
+        if on == self.degraded:
+            return
+        self.degraded = on
+        mode = self._select_mode()
+        if mode != self.mode:
+            self.mode = mode
+            self.mode_history.append((self.clock, mode))
 
     def _scope(self):
         a_scope = 0.0
@@ -648,12 +738,15 @@ class ServeEngine:
         ``remaining`` still includes the prefill-boundary token (emitted
         from the chunk's sync, not by a decode step), so they owe the
         device one step fewer."""
+        cap = self.decode_chunk
+        if self.chunk_cap is not None:      # degradation level 1 (Sec. 13)
+            cap = max(1, min(cap, self.chunk_cap))
         bound = min(self.sched.remaining[s] - (s in admitted_slots)
                     for s in self.sched.active)
         bound = max(1, bound)      # a lone max_new_tokens=1 admission still
         #                            runs the 1-step chunk its sync rides on
         if self.sched._free and self.sched.policy == "continuous":
-            floor = max(1, self.decode_chunk // 4)
+            floor = max(1, cap // 4)
             if self.sched.deferred_ready():
                 bound = min(bound, floor)
             else:
@@ -661,7 +754,7 @@ class ServeEngine:
                 if na is not None:
                     bound = min(bound, max(floor, na - self.clock))
         c = 1
-        while c * 2 <= self.decode_chunk and c * 2 <= bound:
+        while c * 2 <= cap and c * 2 <= bound:
             c *= 2
         return c
 
@@ -679,10 +772,32 @@ class ServeEngine:
         req = self.sched.running[slot]
         out = self.outputs[req.rid]
         out.tokens.append(token)
+        out.token_steps.append(self.clock)
         self.events.append((self.clock, req.rid, token))
         self.stats["emitted"] += 1
         if self.sched.emit(slot):
             out.finished = self.clock
+
+    def cancel(self, rid: int) -> bool:
+        """Withdraw a request — the router's hedge-loser / drain hook.
+        A running request's slot is freed and its on-device ``remaining``
+        zeroed (the live mask drops it, the chunk ladder stops waiting on
+        it — the stale rows are the usual dead weight until the next
+        admission); a waiting request just leaves the queues.  Call at
+        tick boundaries only.  Returns False when ``rid`` is unknown or
+        already finished."""
+        for slot, req in sorted(self.sched.running.items()):
+            if req.rid == rid:
+                self._remaining = self._remaining.at[slot].set(0)
+                self.sched.cancel_slot(slot)
+                return True
+        return self.sched.remove_waiting(rid)
+
+    @property
+    def load(self) -> int:
+        """Requests this engine currently owns (running + queued) — the
+        router's deterministic least-loaded dispatch signal."""
+        return len(self.sched.running) + self.sched.waiting_count
 
     def step(self) -> List[Tuple[int, int, int]]:
         """One engine tick: admissions (each prefilled at its bucketed
@@ -973,20 +1088,76 @@ class ServeEngine:
 def synthetic_trace(cfg, *, num_requests: int, seed: int = 0,
                     prompt_lens: Sequence[int] = (8, 16, 24),
                     gen_lens: Sequence[int] = (4, 8, 16),
-                    arrival_every: int = 0) -> List[Request]:
+                    arrival_every: int = 0,
+                    arrival_process: str = "fixed",
+                    rate: float = 0.5, burst_rate: float = 4.0,
+                    burst_switch: float = 0.15,
+                    length_dist: str = "choice",
+                    heavy_alpha: float = 1.6,
+                    max_gen: Optional[int] = None,
+                    priorities: Sequence[int] = (0,),
+                    deadline_slack: Optional[float] = None,
+                    ttft_deadline: Optional[int] = None) -> List[Request]:
     """Deterministic mixed prompt/gen-length request trace — the
-    benchmarks/bench_serve.py workload.  ``arrival_every > 0`` staggers
-    arrivals (request i arrives at step i * arrival_every)."""
+    benchmarks/bench_serve.py workload.
+
+    Arrival processes (all seeded, so routing decisions replay exactly):
+    ``"fixed"`` staggers arrivals (request i at step i * arrival_every —
+    the pre-router behaviour, and the default); ``"bursty"`` is a
+    two-state Markov-modulated process — each request flips the
+    calm/burst state with probability ``burst_switch``, then advances
+    the arrival clock by an exponential gap at the state's rate
+    (``rate`` / ``burst_rate`` requests per step) — the heavy-tailed
+    overload workload of DESIGN.md Section 13.
+
+    ``length_dist="heavy"`` replaces the uniform gen-length choice with
+    a Pareto draw (shape ``heavy_alpha``) floored at ``min(gen_lens)``
+    and capped at ``max_gen`` (default ``8 * max(gen_lens)``) — most
+    requests stay short, stragglers dominate the tail.
+
+    SLO fields: ``priorities`` draws each request's priority class,
+    ``deadline_slack`` attaches a completion deadline proportional to
+    the request's own expected service (slack x (gen + prefill share)),
+    and ``ttft_deadline`` a flat first-token deadline.  The defaults
+    attach nothing, keeping the trace FCFS-compatible.
+    """
+    if arrival_process not in ("fixed", "bursty"):
+        raise ValueError(f"unknown arrival process {arrival_process!r}")
+    if length_dist not in ("choice", "heavy"):
+        raise ValueError(f"unknown length distribution {length_dist!r}")
     rng = np.random.default_rng(seed)
     reqs: List[Request] = []
+    t, burst = 0, False
     for i in range(num_requests):
         plen = int(rng.choice(np.asarray(prompt_lens)))
-        glen = int(rng.choice(np.asarray(gen_lens)))
+        if length_dist == "heavy":
+            gmin = int(min(gen_lens))
+            cap = int(max_gen) if max_gen else 8 * int(max(gen_lens))
+            glen = min(cap, max(1, int(gmin * (1.0
+                                               + rng.pareto(heavy_alpha)))))
+        else:
+            glen = int(rng.choice(np.asarray(gen_lens)))
         toks = rng.integers(1, cfg.vocab_size, (plen,), dtype=np.int32)
         extras = None
         if cfg.is_encdec:
             extras = {"frames": rng.standard_normal(
                 (cfg.enc_frames, cfg.d_model)).astype(np.float32)}
+        if arrival_process == "bursty":
+            if rng.random() < burst_switch:
+                burst = not burst
+            r = burst_rate if burst else rate
+            t += int(round(rng.exponential(1.0 / max(r, 1e-6))))
+            arrival = t
+        else:
+            arrival = i * arrival_every
+        priority = (int(rng.choice(np.asarray(priorities)))
+                    if len(priorities) > 1 else int(priorities[0]))
+        deadline = None
+        if deadline_slack is not None:
+            deadline = int(np.ceil(deadline_slack
+                                   * (glen + max(1, plen // 8))))
         reqs.append(Request(rid=i, tokens=toks, max_new_tokens=glen,
-                            arrival=i * arrival_every, extras=extras))
+                            arrival=arrival, extras=extras,
+                            priority=priority, deadline_ms=deadline,
+                            ttft_deadline_ms=ttft_deadline))
     return reqs

@@ -38,10 +38,13 @@ from repro.launch.mesh import mesh_spec, serve_mesh
 from repro.models import build_model
 from repro.runtime.elastic import (plan_mesh, plan_mesh_shape, reshard,
                                    surviving)
-from repro.runtime.engine import (Request, Scheduler, ServeEngine,
-                                  _promote_arena, synthetic_trace)
-from repro.runtime.fault import (DeviceLoss, FaultInjector, parse_fault_spec)
+from repro.runtime.engine import (Attribution, Request, Scheduler,
+                                  ServeEngine, _promote_arena,
+                                  synthetic_trace)
+from repro.runtime.fault import (DeviceLoss, FaultInjector, ReplicaFault,
+                                 parse_fault_spec)
 from repro.runtime.mesh_serve import MeshServeEngine, serve_shardings
+from repro.runtime.router import RouterEngine
 from repro.runtime.straggler import StragglerConfig, StragglerDetector
 from repro.sparsity import sparsify_params
 
@@ -428,6 +431,67 @@ def test_chaos_matrix(phase, spec, mp, expect, sparse):
     onto the survivors and finish with the uninterrupted unsharded run's
     tokens (acceptance criterion)."""
     _chaos_cell(spec, mp, expect, sparse, phase)
+
+
+# ---------------------------------------------------------------------------
+# chaos: router replica-kill matrix (DESIGN.md Section 13) — single-device
+# replicas, so these cells need no emulated mesh
+# ---------------------------------------------------------------------------
+
+_ROUTER_ORACLE: dict = {}
+
+
+def _router_oracle(api, params, reqs):
+    """Uninterrupted single-engine tokens per request — the oracle every
+    router chaos cell must match (greedy decode is request-independent,
+    so batch-1 replays are the strongest comparison)."""
+    if not _ROUTER_ORACLE:
+        for r in reqs:
+            eng = ServeEngine(api, params, num_slots=1, cache_len=24,
+                              decode_chunk=2)
+            out = eng.run([dataclasses.replace(r, arrival=0)])
+            _ROUTER_ORACLE[r.rid] = list(map(int, out[r.rid].tokens))
+    return _ROUTER_ORACLE
+
+
+@pytest.mark.chaos
+@pytest.mark.parametrize("hedge", [None, 1], ids=["retry", "hedge"])
+@pytest.mark.parametrize("during,at_step",
+                         [("idle", 0), ("prefill", 1), ("decode", 2)])
+def test_chaos_router_replica_kill(small, during, at_step, hedge):
+    """Kill replica 1 {while idle, about to prefill, mid-decode}, with and
+    without hedging armed: drained in-flight requests must replay on the
+    survivor (or promote to their live hedge copy), the replica must
+    rejoin after recovery, and every request must finish token-identical
+    to the uninterrupted single-engine oracle (acceptance criterion)."""
+    cfg, api, params = small
+    reqs = synthetic_trace(cfg, num_requests=6, seed=11,
+                           prompt_lens=(6, 10), gen_lens=(4, 6))
+    ref = _router_oracle(api, params, reqs)
+    fault = ReplicaFault(replica=1, at_step=at_step, during=during,
+                         recover_after=3)
+    router = RouterEngine(
+        lambda: ServeEngine(api, params, num_slots=2, cache_len=24,
+                            decode_chunk=2),
+        2, hedge_after=hedge, replica_faults=[fault])
+    outs = router.run([dataclasses.replace(r) for r in reqs])
+    assert fault.fired, f"{during} fault site never matched"
+    kill = router.health_log[0]
+    assert kill["event"] == "kill" and kill["state"] == during
+    assert any(h["event"] == "rejoin" for h in router.health_log)
+    assert all(h.up for h in router.replicas)
+    for r in reqs:
+        o = outs[r.rid]
+        assert o.finished >= 0, f"rid {r.rid} never finished"
+        assert list(map(int, o.tokens)) == ref[r.rid], \
+            f"rid {r.rid} diverged from the single-engine oracle"
+    for rid in kill["drained"]:
+        assert outs[rid].attribution in (Attribution.RETRIED,
+                                         Attribution.HEDGED)
+    if during == "idle":
+        assert kill["drained"] == [] and router.stats["retried"] == 0
+    elif hedge is None:
+        assert router.stats["retried"] > 0
 
 
 @pytest.mark.chaos

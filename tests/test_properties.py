@@ -7,7 +7,10 @@ clean skip instead of a collection error, so the tier-1 suite never
 hard-fails on a minimal environment.  The deterministic seed-parametrized
 variants of these sweeps live in the sibling test modules and always run.
 """
+import dataclasses
+
 import numpy as np
+import jax
 import jax.numpy as jnp
 import pytest
 
@@ -278,6 +281,140 @@ def test_engine_token_attribution_property(num_slots, trace, seed):
             expect.append(tok)
         assert outs[r.rid].tokens == expect, r.rid
     assert len(eng.events) == sum(r.max_new_tokens for r in reqs)
+
+
+# ---------------------------------------------------------------------------
+# SLO admission + multi-replica router (runtime.slo / runtime.router,
+# DESIGN.md Section 13)
+# ---------------------------------------------------------------------------
+
+_SLO_REQS = st.lists(
+    st.tuples(st.one_of(st.none(), st.integers(1, 40)),   # deadline_ms
+              st.integers(0, 2),                          # priority
+              st.integers(1, 12),                         # prompt len
+              st.integers(1, 8)),                         # gen len
+    min_size=1, max_size=25)
+
+
+def _slo_reqs(spec):
+    return [Request(rid=i, tokens=np.zeros((p,), np.int32),
+                    max_new_tokens=g, priority=pr, deadline_ms=d)
+            for i, (d, pr, p, g) in enumerate(spec)]
+
+
+@settings(max_examples=50, deadline=None)
+@given(spec=_SLO_REQS, b1=st.integers(1, 12), extra=st.integers(0, 12))
+def test_admission_shed_deterministic_and_monotone_property(spec, b1, extra):
+    """For a fixed push sequence the bounded EDF queue's shed decisions
+    are a pure function of the bound: two identical queues shed the same
+    rids for the same reasons in the same order, capacity sheds equal
+    ``max(0, feasible - bound)`` exactly, and raising the bound never
+    sheds more (the AdmissionQueue docstring contract)."""
+    from repro.runtime.slo import AdmissionQueue, ShedReason
+
+    def drive(bound):
+        q = AdmissionQueue(bound)
+        for r in _slo_reqs(spec):
+            q.push(r, now=0)
+        return q
+
+    a, b = drive(b1), drive(b1)
+    assert [(e.rid, e.reason) for e in a.shed_log] == \
+        [(e.rid, e.reason) for e in b.shed_log]
+    infeasible = sum(1 for e in a.shed_log
+                     if e.reason is ShedReason.INFEASIBLE)
+    full = sum(1 for e in a.shed_log if e.reason is ShedReason.QUEUE_FULL)
+    feasible = len(spec) - infeasible
+    assert full == max(0, feasible - b1)
+    assert a.max_depth <= b1
+    wider = drive(b1 + extra)
+    assert len(wider.shed_log) <= len(a.shed_log)
+    assert sum(1 for e in wider.shed_log
+               if e.reason is ShedReason.INFEASIBLE) == infeasible
+
+
+@settings(max_examples=50, deadline=None)
+@given(spec=_SLO_REQS, bound=st.one_of(st.none(), st.integers(1, 10)),
+       gaps=st.lists(st.integers(0, 6), min_size=1, max_size=30))
+def test_admitted_slack_never_negative_property(spec, bound, gaps):
+    """Whatever the push sequence and however long entries sit queued,
+    ``pop`` never hands the dispatcher infeasible work: every admitted
+    entry satisfies ``now + cost <= deadline`` (slack >= 0, stale entries
+    shed as EXPIRED instead), and every pushed rid is accounted exactly
+    once as admitted or shed."""
+    from repro.runtime.slo import AdmissionQueue
+
+    q = AdmissionQueue(bound)
+    for r in _slo_reqs(spec):
+        q.push(r, now=0)
+    admitted, now = [], 0
+    for gap in gaps:
+        now += gap
+        e, _expired = q.pop(now)
+        if e is None:
+            break
+        slack = q.slack(e, now)
+        assert slack is None or slack >= 0
+        admitted.append(e.rid)
+    while True:
+        e, _expired = q.pop(now)
+        if e is None:
+            break
+        assert (q.slack(e, now) or 0) >= 0
+        admitted.append(e.rid)
+    shed = [ev.rid for ev in q.shed_log]
+    assert sorted(admitted + shed) == list(range(len(spec)))
+    assert len(set(admitted) & set(shed)) == 0
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    trace=st.lists(st.tuples(st.integers(0, 3),       # arrival tick
+                             st.integers(1, 5),       # prompt len
+                             st.integers(1, 5)),      # gen len
+                   min_size=2, max_size=8),
+    replicas=st.integers(2, 3), hedge_after=st.integers(1, 3),
+    seed=st.integers(0, 99),
+)
+def test_router_hedging_token_exact_property(trace, replicas, hedge_after,
+                                             seed):
+    """Hedged re-dispatch never duplicates, drops or reorders tokens:
+    whatever copy wins the race, every request's stream equals the
+    deterministic batch-1 replay of the fake model, and a second run of
+    the same trace routes identically (DESIGN.md Section 13)."""
+    from test_engine import fake_api
+
+    from repro.runtime.router import RouterEngine
+
+    api = fake_api()
+    params = api.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(seed)
+    reqs = [Request(rid=i, tokens=rng.integers(1, 17, (p,), dtype=np.int32),
+                    max_new_tokens=g, arrival=a)
+            for i, (a, p, g) in enumerate(trace)]
+
+    def run():
+        router = RouterEngine(
+            lambda: ServeEngine(api, params, num_slots=2, cache_len=12),
+            replicas, hedge_after=hedge_after)
+        outs = router.run([dataclasses.replace(r) for r in reqs])
+        return router, outs
+
+    r1, outs = run()
+    for r in reqs:
+        state = int(np.sum(r.tokens)) % 17
+        tok = (state + 1) % 17
+        expect = [tok]
+        for _ in range(r.max_new_tokens - 1):
+            state = (state + tok) % 17
+            tok = (state + 1) % 17
+            expect.append(tok)
+        assert list(map(int, outs[r.rid].tokens)) == expect, r.rid
+        assert len(outs[r.rid].token_steps) == len(expect)
+    r2, outs2 = run()
+    assert {k: list(map(int, o.tokens)) for k, o in outs2.items()} == \
+        {k: list(map(int, o.tokens)) for k, o in outs.items()}
+    assert r1.stats == r2.stats
 
 
 # ---------------------------------------------------------------------------

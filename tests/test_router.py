@@ -1,0 +1,334 @@
+"""SLO-aware multi-replica router tests (DESIGN.md Section 13).
+
+Everything runs tier-1 on the deterministic fake ``ModelApi`` from
+test_engine (next token is a pure function of the running token sum, so
+any routing bug — wrong replica, lost prefix on retry, duplicated hedge
+tokens — changes the stream).  The single-engine oracle for every parity
+assertion is an uninterrupted ``ServeEngine`` run of the same request;
+the chaos-marked replica-kill matrix lives in test_fault_tolerance.py.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.spec import Mode
+from repro.runtime.engine import Attribution, Request, ServeEngine
+from repro.runtime.fault import ReplicaFault, parse_fault_spec
+from repro.runtime.router import RouterEngine
+from repro.runtime.slo import (AdmissionQueue, CostModel, DegradationConfig,
+                               DegradationLadder, ShedReason, latency_summary,
+                               request_rows)
+
+from tests.test_engine import fake_api
+
+
+def _mk(api, params, slots=2, cache_len=32, **kw):
+    return lambda: ServeEngine(api, params, num_slots=slots,
+                               cache_len=cache_len, **kw)
+
+
+def _trace(n, *, arrival_every=0, gen=4, prompt=4, **slo):
+    return [Request(rid=i, tokens=np.full((prompt,), (i % 7) + 1, np.int32),
+                    max_new_tokens=gen, arrival=i * arrival_every, **slo)
+            for i in range(n)]
+
+
+def _oracle(api, params, reqs, cache_len=32):
+    """rid -> tokens from an uninterrupted single-engine run (slots
+    generous so scheduling cannot interleave differently per request)."""
+    ref = {}
+    for r in reqs:
+        eng = ServeEngine(api, params, num_slots=1, cache_len=cache_len)
+        out = eng.run([dataclasses.replace(r, arrival=0)])
+        ref[r.rid] = out[r.rid].tokens
+    return ref
+
+
+# ---------------------------------------------------------------------------
+# admission queue / cost model / ladder units
+# ---------------------------------------------------------------------------
+
+def test_cost_model_buckets_prefill():
+    cm = CostModel(prefill_tokens_per_step=8)
+    assert cm.estimate(3, 4) == 1 + 4
+    assert cm.estimate(3, 4, bucket=16) == 2 + 4
+    assert cm.estimate(100, 1) == 13 + 1
+
+
+def test_admission_queue_sheds_exactly_overflow():
+    q = AdmissionQueue(bound=3)
+    reqs = _trace(8)
+    events = [q.push(r, now=0) for r in reqs]
+    sheds = [e for e in events if e is not None]
+    assert len(sheds) == 5 and q.depth == 3
+    assert all(e.reason == ShedReason.QUEUE_FULL for e in sheds)
+    assert q.max_depth == 3
+    # no deadlines: EDF order degrades to (priority, submission) — the
+    # queue keeps the first three, sheds every later arrival
+    assert sorted(e.rid for e in sheds) == [3, 4, 5, 6, 7]
+
+
+def test_admission_queue_prefers_earliest_deadline_and_priority():
+    q = AdmissionQueue(bound=2)
+    late = Request(rid=0, tokens=np.ones(2, np.int32), max_new_tokens=2,
+                   deadline_ms=50)
+    soon = Request(rid=1, tokens=np.ones(2, np.int32), max_new_tokens=2,
+                   deadline_ms=10)
+    best_effort = Request(rid=2, tokens=np.ones(2, np.int32),
+                          max_new_tokens=2)
+    assert q.push(late, 0) is None and q.push(best_effort, 0) is None
+    ev = q.push(soon, 0)         # displaces the best-effort entry
+    assert ev is not None and ev.rid == 2
+    e1, _ = q.pop(0)
+    e2, _ = q.pop(0)
+    assert (e1.rid, e2.rid) == (1, 0)
+
+
+def test_admission_queue_infeasible_and_expired():
+    q = AdmissionQueue(bound=4, cost_model=CostModel(per_token_steps=1.0))
+    hopeless = Request(rid=0, tokens=np.ones(2, np.int32),
+                       max_new_tokens=10, deadline_ms=3)
+    ev = q.push(hopeless, now=0)
+    assert ev.reason == ShedReason.INFEASIBLE
+    ok = Request(rid=1, tokens=np.ones(2, np.int32), max_new_tokens=2,
+                 deadline_ms=6)
+    assert q.push(ok, now=0) is None
+    # admitted => slack never negative at pop time
+    entry, expired = q.pop(now=2)
+    assert entry is not None and not expired
+    assert q.slack(entry, now=2) >= 0
+    q.push(ok, now=0)
+    entry, expired = q.pop(now=5)      # 5 + cost(3) > deadline(6)
+    assert entry is None
+    assert [e.reason for e in expired] == [ShedReason.EXPIRED]
+
+
+def test_degradation_ladder_hysteresis():
+    lad = DegradationLadder(DegradationConfig(patience=2))
+    levels = [lad.update(p, t) for t, p in enumerate(
+        [0.9, 0.9,          # 2 ticks above high water -> level 1
+         0.5,               # between the water marks: streaks reset
+         0.9, 0.9,          # -> level 2
+         0.1, 0.1,          # 2 ticks below low water -> back to 1
+         0.1, 0.1])]        # -> 0
+    assert levels == [0, 1, 1, 1, 2, 2, 1, 1, 0]
+    assert [lvl for _, lvl in lad.history] == [1, 2, 1, 0]
+
+
+def test_parse_replica_fault_spec():
+    spec = parse_fault_spec("replica:1@3:decode:5")
+    f = spec.build_replica()
+    assert (f.replica, f.at_step, f.during, f.recover_after) == (1, 3,
+                                                                 "decode", 5)
+    f2 = parse_fault_spec("replica:0@2").build_replica()
+    assert f2.during == "any" and f2.recover_after is None
+    with pytest.raises(ValueError):
+        parse_fault_spec("replica:0@2:nonsense")
+    with pytest.raises(ValueError):
+        parse_fault_spec("replica:0@2:idle:0")
+
+
+# ---------------------------------------------------------------------------
+# routing
+# ---------------------------------------------------------------------------
+
+def test_router_tokens_match_single_engine_oracle():
+    api = fake_api()
+    params = api.init(jax.random.PRNGKey(0))
+    reqs = _trace(9, arrival_every=1)
+    router = RouterEngine(_mk(api, params), 3)
+    outs = router.run(reqs)
+    ref = _oracle(api, params, reqs)
+    assert sorted(outs) == list(range(9))
+    for r in reqs:
+        assert outs[r.rid].tokens == ref[r.rid], f"rid {r.rid} diverged"
+        assert outs[r.rid].attribution == Attribution.NORMAL
+    assert router.stats["completed"] == 9 and router.stats["shed"] == 0
+
+
+def test_router_is_deterministic():
+    api = fake_api()
+    params = api.init(jax.random.PRNGKey(0))
+
+    def once():
+        router = RouterEngine(_mk(api, params), 2, queue_bound=3,
+                              hedge_after=2,
+                              degradation=DegradationConfig())
+        outs = router.run(_trace(12, gen=3, deadline_ms=20))
+        return ([(o.rid, tuple(o.tokens), o.attribution, o.finished,
+                  o.replica) for o in outs.values()],
+                [(e.rid, e.step, e.reason) for e in router.shed_log],
+                router.clock, dict(router.stats))
+
+    assert once() == once()
+
+
+def test_router_bounded_queue_sheds_and_stays_bounded():
+    api = fake_api()
+    params = api.init(jax.random.PRNGKey(0))
+    router = RouterEngine(_mk(api, params, slots=1), 2, queue_bound=2)
+    reqs = _trace(10, gen=6)              # all arrive at tick 0
+    outs = router.run(reqs)
+    assert router.stats["shed"] > 0
+    assert router.max_queue_depth <= 2
+    shed = [o for o in outs.values() if o.attribution == Attribution.SHED]
+    done = [o for o in outs.values() if o.finished >= 0]
+    assert len(shed) == router.stats["shed"]
+    assert len(shed) + len(done) == len(reqs)
+    for o in shed:
+        assert o.shed_reason == "queue_full" and o.tokens == []
+
+
+def test_router_priority_shed_at_level3():
+    api = fake_api()
+    params = api.init(jax.random.PRNGKey(0))
+    router = RouterEngine(_mk(api, params, slots=1), 1, queue_bound=8,
+                          degradation=DegradationConfig(
+                              patience=1, shed_min_priority=1))
+    # a tick-0 flood drives the ladder to level 3, then late low-priority
+    # arrivals hit the priority shed (level 3 acts at admission time)
+    reqs = [dataclasses.replace(r, priority=i % 2)
+            for i, r in enumerate(_trace(10, gen=6))]
+    late = [Request(rid=10 + i, tokens=np.full((4,), 2, np.int32),
+                    max_new_tokens=6, arrival=6 + i, priority=1)
+            for i in range(4)]
+    outs = router.run(reqs + late)
+    degraded = [o for o in outs.values() if o.shed_reason == "degraded"]
+    assert degraded, "ladder never reached the priority-shed level"
+    by_rid = {r.rid: r for r in reqs + late}
+    for o in degraded:
+        assert by_rid[o.rid].priority >= 1
+    assert router.ladder.level >= 0 and router.ladder.history
+
+
+def test_router_hedges_stalled_requests_token_exact():
+    api = fake_api()
+    params = api.init(jax.random.PRNGKey(0))
+    # 2-slot replicas admit one request per engine tick, so the second
+    # request dispatched to a replica has no first token after a tick —
+    # stalled past the hedge threshold, it re-dispatches to the replica
+    # with the spare slot and both copies race token-identically
+    router = RouterEngine(_mk(api, params, slots=2), 3, hedge_after=1)
+    reqs = _trace(5, gen=5)
+    outs = router.run(reqs)
+    ref = _oracle(api, params, reqs)
+    assert router.stats["hedged"] > 0
+    for r in reqs:
+        o = outs[r.rid]
+        assert o.finished >= 0
+        assert o.tokens == ref[r.rid], f"rid {r.rid} diverged"
+        # no duplicate / reordered tokens regardless of which copy won
+        assert len(o.tokens) == r.max_new_tokens
+    hedged = [o for o in outs.values() if o.hedged]
+    assert hedged and all(o.attribution == Attribution.HEDGED
+                          for o in hedged)
+    # the loser was cancelled: no engine still owns a hedged rid
+    for h in router.replicas:
+        for o in hedged:
+            eng_out = h.engine.outputs.get(o.rid)
+            assert eng_out is None or o.replica == h.index
+
+
+def test_router_replica_kill_retries_and_rejoins():
+    api = fake_api()
+    params = api.init(jax.random.PRNGKey(0))
+    fault = ReplicaFault(replica=1, at_step=1, during="decode",
+                         recover_after=2)
+    # decode_chunk=2 spans each request over several ticks, so the fault
+    # site actually observes replica 1 mid-decode
+    router = RouterEngine(_mk(api, params, decode_chunk=2), 2,
+                          replica_faults=[fault])
+    reqs = _trace(8, arrival_every=1, gen=5)
+    outs = router.run(reqs)
+    ref = _oracle(api, params, reqs)
+    assert fault.fired
+    events = [h["event"] for h in router.health_log]
+    assert events == ["kill", "rejoin"]
+    assert router.stats["retried"] > 0
+    for r in reqs:
+        assert outs[r.rid].finished >= 0
+        assert outs[r.rid].tokens == ref[r.rid], f"rid {r.rid} diverged"
+    retried = [o for o in outs.values()
+               if o.attribution == Attribution.RETRIED]
+    assert retried and all(o.retries >= 1 for o in retried)
+    assert all(h.up for h in router.replicas)
+
+
+def test_router_no_survivors_raises():
+    api = fake_api()
+    params = api.init(jax.random.PRNGKey(0))
+    router = RouterEngine(_mk(api, params), 1, replica_faults=[
+        ReplicaFault(replica=0, at_step=0, during="any")])
+    with pytest.raises(RuntimeError, match="no live replicas"):
+        router.run(_trace(2))
+
+
+# ---------------------------------------------------------------------------
+# engine hooks the router depends on
+# ---------------------------------------------------------------------------
+
+def test_engine_cancel_frees_slot_and_queue():
+    api = fake_api()
+    params = api.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(api, params, num_slots=1, cache_len=32)
+    a, b = _trace(2, gen=6)
+    eng.add(a)
+    eng.add(b)
+    eng.step()                       # admits a; b queued
+    assert eng.load == 2
+    assert eng.cancel(b.rid) and eng.load == 1       # waiting removal
+    assert eng.cancel(a.rid) and eng.load == 0       # running removal
+    assert not eng.cancel(a.rid)                     # unknown now
+    eng.step()
+    assert eng.outputs[a.rid].finished < 0           # never force-finished
+
+
+def test_engine_chunk_cap_preserves_tokens():
+    api = fake_api()
+    params = api.init(jax.random.PRNGKey(0))
+    reqs = _trace(4, gen=8)
+    free = ServeEngine(api, params, num_slots=2, cache_len=32)
+    outs_free = free.run([dataclasses.replace(r) for r in reqs])
+    capped = ServeEngine(api, params, num_slots=2, cache_len=32)
+    capped.chunk_cap = 2
+    outs_cap = capped.run([dataclasses.replace(r) for r in reqs])
+    for r in reqs:
+        assert outs_cap[r.rid].tokens == outs_free[r.rid].tokens
+    # the cap bit: more, shorter chunks for the same decode work
+    assert capped.stats["chunk_calls"] > free.stats["chunk_calls"]
+
+
+def test_engine_set_degraded_forces_cheaper_mode():
+    api = fake_api()
+    params = api.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(api, params, num_slots=1, cache_len=32)
+    eng.b_sparsity = 0.03            # pruned, but under the B threshold
+    eng.mode = eng._select_mode()
+    assert eng.mode == Mode.DENSE
+    eng.set_degraded(True)
+    assert eng.mode == Mode.B and eng.degraded
+    eng.set_degraded(True)           # idempotent
+    eng.set_degraded(False)
+    assert eng.mode == Mode.DENSE
+    assert [m for _, m in eng.mode_history][-2:] == [Mode.B, Mode.DENSE]
+
+
+def test_request_output_timestamps_and_slo_rows():
+    api = fake_api()
+    params = api.init(jax.random.PRNGKey(0))
+    reqs = _trace(3, arrival_every=2, gen=4, ttft_deadline_ms=8,
+                  deadline_ms=40)
+    eng = ServeEngine(api, params, num_slots=2, cache_len=32)
+    outs = eng.run([dataclasses.replace(r) for r in reqs])
+    for o in outs.values():
+        assert len(o.token_steps) == len(o.tokens)
+        assert o.token_steps == sorted(o.token_steps)
+        assert o.attribution == Attribution.NORMAL
+    rows = request_rows(outs, reqs)
+    assert [r["rid"] for r in rows] == [0, 1, 2]
+    assert all(r["ttft"] is not None and r["ttft"] >= 0 for r in rows)
+    summary = latency_summary(rows)
+    assert summary["completed"] == 3 and summary["shed"] == 0
+    assert summary["slo_attainment"] is not None
