@@ -80,6 +80,22 @@ ROUTER_REPLICAS = 2
 ROUTER_BOUND = 6
 ROUTER_SLO = dict(deadline_slack=4.0, ttft_deadline=6)
 
+# paged-arena row (DESIGN.md Section 14): fixed vs paged at the SAME
+# device-memory budget.  The fixed arena must provision every slot for the
+# worst case (prompt 24 + heavy-tail gen cap 224 -> cache_len 256), so 4
+# slots cost 1024 KV token rows.  The paged pool spends those same 1024
+# rows (64 pages x 16 tokens, DUMP page included — strictly no more
+# memory) but reserves per request only the pages its actual prompt+gen
+# needs, so the heavy-tailed trace (most requests short, ~1 in 8 a
+# straggler) admits 10 slots concurrently.  Gated: peak-concurrency
+# ratio >= 2x, fp32 token-exact vs fixed, int8 teacher-forced logit gap
+# <= PAGED_INT8_TOL (measured ~0.003 on this workload; the tolerance is
+# the one DESIGN.md Section 14 documents).
+PAGED = dict(page_size=16, num_pages=64, cache_len=256,
+             fixed_slots=SLOTS, paged_slots=10)
+PAGED_MAX_GEN = 224                 # EngineConfig.heavy_gen_cap(GEN_LENS)
+PAGED_INT8_TOL = 0.02
+
 
 def overload_trace(cfg, n_req: int, with_slo: bool):
     """Bursty Markov-modulated arrivals at ~2x the pool's service rate
@@ -191,6 +207,138 @@ def run_router_overload(api, params, cache_len, cfg, n_req,
           f"{ROUTER_BOUND}; unbounded baseline ttft p99 {u['ttft_p99']} "
           f"ticks at depth {u['max_queue_depth']}")
     return results
+
+
+def paged_trace(cfg, n_req: int):
+    """The heavy-tailed all-at-once workload of the paged row: every
+    request arrives at t=0 (pure concurrency pressure), Pareto generation
+    lengths capped at the fixed arena's provisioning bound."""
+    return synthetic_trace(cfg, num_requests=n_req, seed=7,
+                           prompt_lens=PROMPT_LENS, gen_lens=GEN_LENS,
+                           arrival_every=0, length_dist="heavy",
+                           heavy_alpha=1.6, max_gen=PAGED_MAX_GEN)
+
+
+def _drain_peak(eng, reqs):
+    """Drain the trace one tick at a time, tracking the peak number of
+    concurrently active slots (the quantity the paged arena buys)."""
+    for r in reqs:
+        eng.add(r)
+    peak = 0
+    while eng.sched.has_work():
+        eng.step()
+        peak = max(peak, len(eng.sched.active))
+    return peak, {r: list(map(int, o.tokens)) for r, o in eng.outputs.items()}
+
+
+def int8_logit_gap(api, params, cache_len: int, page_size: int,
+                   steps: int = 48, plen: int = 24) -> float:
+    """Teacher-forced int8-vs-fp32 paged decode gap: run one straggler-
+    length request through both pools feeding the int8 run the fp32 run's
+    tokens, and return max |logit diff| / max |fp32 logit| — the metric
+    PAGED_INT8_TOL bounds (DESIGN.md Section 14)."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.runtime.engine import (_batch_axes, _make_paged_insert,
+                                      _promote_arena)
+    from repro.runtime.paging import PageAllocator, build_spec, paged_tree
+
+    prompt = jnp.asarray(np.random.default_rng(7).integers(
+        1, api.cfg.vocab_size, (1, plen)), jnp.int32)
+
+    def decode(kv_dtype, forced=None):
+        spec, clen = build_spec(api, 1, cache_len, page_size,
+                                kv_dtype=kv_dtype)
+        arena = paged_tree(_promote_arena(api.init_cache(1, clen), 1),
+                           1, spec)
+        sub, logits0 = api.prefill(params, {"tokens": prompt},
+                                   cache_len=clen)
+        ids = PageAllocator(spec.num_pages).reserve(
+            spec.pages_needed(plen + steps))
+        insert = _make_paged_insert(_batch_axes(api, clen), spec)
+        cache, _, _, tok = insert(
+            arena, jnp.zeros((1, 1), jnp.int32), jnp.zeros((1,), jnp.int32),
+            sub, logits0, jnp.asarray(0), jnp.asarray(steps),
+            jnp.asarray(spec.page_row(ids)))
+        outs, nxt = [logits0[0]], tok[:, None]
+        for t in range(steps):
+            if forced is not None:
+                nxt = forced[t][None, None]
+            logits, cache = api.decode_step(params, cache, nxt)
+            outs.append(logits[0])
+            nxt = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+        return jnp.stack(outs)
+
+    l32 = decode("fp32")
+    l8 = decode("int8", forced=jnp.argmax(l32, -1).astype(jnp.int32))
+    return float(jnp.max(jnp.abs(l8 - l32)) / jnp.max(jnp.abs(l32)))
+
+
+def run_paged(api, params, cfg, n_req: int) -> dict:
+    """The paged-arena row: fixed 4x256 vs a 10-slot paged pool of the
+    same 1024 KV rows over the heavy-tailed all-at-once trace.  Gated
+    here and by scripts/check_bench_regression.py: peak-concurrency
+    ratio >= 2x at equal memory, paged fp32 token-exact vs fixed, int8
+    within PAGED_INT8_TOL."""
+    from repro.runtime.config import ArenaConfig, EngineConfig
+
+    ps, npages, clen = PAGED["page_size"], PAGED["num_pages"], \
+        PAGED["cache_len"]
+    assert npages * ps <= PAGED["fixed_slots"] * clen, \
+        "paged pool outspends the fixed arena — not an equal-budget row"
+    results, tokens = {}, {}
+    for name, slots, page_size, kv_dtype in (
+            ("fixed", PAGED["fixed_slots"], None, "fp32"),
+            ("paged-fp32", PAGED["paged_slots"], ps, "fp32"),
+            ("paged-int8", PAGED["paged_slots"], ps, "int8")):
+        econf = EngineConfig(arena=ArenaConfig(
+            num_slots=slots, cache_len=clen, page_size=page_size,
+            num_pages=npages if page_size else None, kv_dtype=kv_dtype)
+        ).with_fields(decode_chunk=CHUNK,
+                      max_admissions_per_step=PAGED["paged_slots"])
+        eng = ServeEngine(api, params, config=econf)
+        eng.run(paged_trace(cfg, n_req))            # warm every jit
+        eng.stats = {k: 0 for k in eng.stats}
+        t0 = time.perf_counter()
+        peak, toks = _drain_peak(eng, paged_trace(cfg, n_req))
+        dt = time.perf_counter() - t0
+        if page_size:
+            assert eng._paged is not None
+        tokens[name] = toks
+        results[name] = dict(slots=slots, peak_concurrent=peak,
+                             kv_rows=(npages * ps if page_size
+                                      else slots * clen),
+                             emitted=eng.stats["emitted"],
+                             wall_s=round(dt, 4))
+        emit(f"serve/{ARCH}/paged/{name}", dt * 1e6 / max(1, n_req),
+             f"peak={peak};emitted={eng.stats['emitted']}")
+    ratio = (results["paged-fp32"]["peak_concurrent"] /
+             results["fixed"]["peak_concurrent"])
+    fp32_exact = tokens["paged-fp32"] == tokens["fixed"]
+    int8_match = sum(tokens["paged-int8"][r] == tokens["fixed"][r]
+                     for r in tokens["fixed"]) / len(tokens["fixed"])
+    gap = int8_logit_gap(api, params, clen, ps)
+    assert ratio >= 2.0, \
+        f"paged arena peaked at {ratio:.2f}x fixed concurrency (< 2x)"
+    assert fp32_exact, "paged fp32 tokens diverged from the fixed arena"
+    assert gap <= PAGED_INT8_TOL, \
+        f"int8 logit gap {gap:.4f} exceeds tolerance {PAGED_INT8_TOL}"
+    print(f"# paged arena (equal {npages * ps}-row KV budget): peak "
+          f"concurrency {results['paged-fp32']['peak_concurrent']} vs "
+          f"{results['fixed']['peak_concurrent']} fixed ({ratio:.2f}x), "
+          f"fp32 token-exact={fp32_exact}, int8 token match "
+          f"{int8_match:.2f}, int8 rel logit gap {gap:.4f} <= "
+          f"{PAGED_INT8_TOL}")
+    return {**PAGED, "max_gen": PAGED_MAX_GEN,
+            "trace": {"requests": n_req, "seed": 7,
+                      "length_dist": "heavy", "arrival_every": 0},
+            "configs": results,
+            "concurrency_ratio": round(ratio, 3),
+            "fp32_token_exact": fp32_exact,
+            "int8_token_match": round(int8_match, 4),
+            "int8_rel_logit_gap": round(gap, 6),
+            "int8_tol": PAGED_INT8_TOL}
 
 
 def run(fast: bool = True, json_out: bool = False,
@@ -314,6 +462,7 @@ def run(fast: bool = True, json_out: bool = False,
               f"(vs {un['host_syncs_per_token']})")
     router_results = run_router_overload(api, params, cache_len, cfg,
                                          n_req, factory_cache)
+    paged_results = run_paged(api, params, cfg, n_req)
     if json_out:
         out = {
             "arch": ARCH, "backend": jax.default_backend(),
@@ -330,6 +479,7 @@ def run(fast: bool = True, json_out: bool = False,
                                  "length_dist": "heavy",
                                  **{k: v for k, v in ROUTER_SLO.items()}},
                        **router_results},
+            "paged": paged_results,
         }
         jpath = pathlib.Path(__file__).parent / "out" / "BENCH_serve.json"
         jpath.write_text(json.dumps(out, indent=2) + "\n")

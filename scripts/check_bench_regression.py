@@ -28,6 +28,14 @@ skeleton of the serving engine, per recorded config:
     ticks over the recorded seeded trace, never in wall clock; plus the
     bounded-vs-unbounded ordering asserted inside the replay itself.
 
+  - paged-arena row (``paged`` section, DESIGN.md Section 14): peak
+    concurrent slots at the equal-KV-budget comparison (fixed 4x256 vs
+    the 64x16 paged pool), the >= 2x concurrency ratio, paged-fp32
+    token identity with the fixed arena, and the int8 token-match
+    fraction — exact over the recorded seed; the int8 teacher-forced
+    logit gap must stay within the committed tolerance (a float, so it
+    is bounded rather than compared with ==).
+
 Configs whose ``mesh`` needs more devices than this process has are
 skipped with a note (the CI sharded job runs with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
@@ -149,6 +157,51 @@ def check_router(rec, api, params, cache_len, cfg, n_req, factory_cache,
     return checked
 
 
+def check_paged(rec, api, params, cfg, failures) -> int:
+    """Replay the committed paged-arena row (DESIGN.md Section 14).
+    ``run_paged`` self-gates the acceptance criteria (>= 2x peak
+    concurrency at equal KV budget, fp32 token-exact, int8 logit gap
+    within tolerance); here the replay is additionally compared field by
+    field against the record — peak concurrency, emitted tokens and the
+    token-identity flags are deterministic over the recorded seed, so
+    they must match with ``==`` (wall_s and the float logit gap stay
+    ungated beyond the recorded tolerance).  Returns rows checked (0 =
+    no paged section committed)."""
+    from benchmarks.bench_serve import run_paged
+
+    committed = rec.get("paged")
+    if not committed:
+        print("skip paged gate: no paged section in BENCH_serve.json")
+        return 0
+    replay = run_paged(api, params, cfg, committed["trace"]["requests"])
+    for field in ("page_size", "num_pages", "cache_len", "fixed_slots",
+                  "paged_slots", "concurrency_ratio", "fp32_token_exact",
+                  "int8_token_match"):
+        if replay[field] != committed[field]:
+            failures.append(f"paged: {field} drifted "
+                            f"{committed[field]} -> {replay[field]}")
+    checked = 0
+    for name, got in replay["configs"].items():
+        want = committed["configs"].get(name)
+        if want is None:
+            failures.append(f"paged/{name}: row missing from the "
+                            "committed record — regenerate "
+                            "BENCH_serve.json")
+            continue
+        checked += 1
+        for field in ("slots", "peak_concurrent", "kv_rows", "emitted"):
+            if got[field] != want[field]:
+                failures.append(f"paged/{name}: {field} drifted "
+                                f"{want[field]} -> {got[field]}")
+        print(f"paged/{name}: peak={got['peak_concurrent']} "
+              f"emitted={got['emitted']} (vs committed, exact)")
+    if replay["int8_rel_logit_gap"] > committed["int8_tol"]:
+        failures.append(
+            f"paged: int8 logit gap {replay['int8_rel_logit_gap']} "
+            f"exceeds the committed tolerance {committed['int8_tol']}")
+    return checked
+
+
 def main() -> int:
     import jax
     from benchmarks.bench_serve import build_workload, make_engine
@@ -239,13 +292,16 @@ def main() -> int:
     router_checked = check_router(rec, api, params, cache_len, cfg,
                                   n_req, factory_cache, failures)
 
+    paged_checked = check_paged(rec, api, params, cfg, failures)
+
     tuned_checked = check_autotune(failures)
 
     for f in failures:
         print("FAIL:", f)
     print(f"check_bench_regression: {checked} configs + {router_checked} "
-          f"router rows replayed against {jpath.name} + {tuned_checked} "
-          f"autotuned families, {len(failures)} drifts")
+          f"router rows + {paged_checked} paged rows replayed against "
+          f"{jpath.name} + {tuned_checked} autotuned families, "
+          f"{len(failures)} drifts")
     if checked == 0:
         print("FAIL: no configs replayed")
         return 1

@@ -11,6 +11,8 @@
 #   tier1             fast default-on pytest suite (kernels split out)
 #   kernel            kernel parity (interpret mode, CPU)
 #   tier2             serving-engine e2e sweep (all families)
+#   paged             paged KV arena: allocator/discovery units, fixed-vs-
+#                     paged parity matrix, int8 tolerance gate, CLI smokes
 #   serve             fused-chunk serve smoke + parity + sync budget
 #   bench-regression  fresh run vs committed BENCH_serve.json invariants
 #   serve-bench       static / per-step / fused-chunk benchmark smoke
@@ -52,6 +54,20 @@ stage_kernel() {
 stage_tier2() {
     echo "== tier-2: serving-engine e2e (all families, dense + sparse)"
     run python -m pytest -x -q -m tier2
+}
+
+stage_paged() {
+    echo "== paged: paged KV arena (DESIGN.md Section 14) — allocator and"
+    echo "==   discovery units, fixed-vs-paged token parity (tier-1 cells"
+    echo "==   plus the five-family x chunk tier-2 matrix), the int8"
+    echo "==   logit-tolerance gate, and serve-CLI smokes through the"
+    echo "==   EngineConfig path (fp32 --parity is oracle-exact, int8 e2e)"
+    run python -m pytest -x -q tests/test_paged_arena.py
+    run python -m pytest -x -q -m tier2 tests/test_paged_arena.py
+    run python -m repro.launch.serve --reduced --requests 6 \
+        --page-size 16 --parity
+    run python -m repro.launch.serve --reduced --requests 6 \
+        --page-size 16 --kv-dtype int8
 }
 
 stage_serve() {
@@ -174,14 +190,15 @@ stage_clean() {
     echo "worktree clean"
 }
 
-ALL_STAGES="tier1 kernel tier2 serve bench-regression serve-bench fig5 e2e \
-autotune docs router mesh chaos clean"
+ALL_STAGES="tier1 kernel tier2 paged serve bench-regression serve-bench \
+fig5 e2e autotune docs router mesh chaos clean"
 STAGES="${*:-$ALL_STAGES}"
 for s in $STAGES; do
     case "$s" in
         tier1) stage_tier1 ;;
         kernel) stage_kernel ;;
         tier2) stage_tier2 ;;
+        paged) stage_paged ;;
         serve) stage_serve ;;
         bench-regression) stage_bench_regression ;;
         serve-bench) stage_serve_bench ;;

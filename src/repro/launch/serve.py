@@ -17,6 +17,7 @@ configs.  ``--parity`` replays every request through the batch-1
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -27,6 +28,7 @@ from repro.configs.platform import kernel_interpret
 from repro.models import build_model
 from repro.launch.mesh import mesh_spec, serve_mesh
 from repro.runtime import slo
+from repro.runtime.config import EngineConfig
 from repro.runtime.elastic import plan_mesh
 from repro.runtime.engine import ServeEngine, synthetic_trace
 from repro.runtime.fault import parse_fault_spec
@@ -78,43 +80,43 @@ def _fault_hooks(args, devices, num_hosts):
     return injector, detector
 
 
-def build_engine(api, params, args, mesh, plan=None) -> ServeEngine:
-    gen_cap = max(_lens(args.gen_lens))
-    if getattr(args, "length_dist", "choice") == "heavy":
-        gen_cap *= 2    # the Pareto draw is capped at 2x (main())
-    cache_len = max(_lens(args.prompt_lens)) + gen_cap + 1
-    if args.mesh:
+def build_engine(api, params, args, mesh, plan=None, econf=None) -> ServeEngine:
+    """Engine from an ``EngineConfig`` (runtime.config) — the one
+    construction path for both the unsharded and mesh-parallel engines.
+    ``econf=None`` derives it from the CLI namespace (every flag explicit);
+    a still-unset ``arena.cache_len`` falls back to the trace-driven bound
+    (``EngineConfig.derive_cache_len``, the single source of truth the old
+    duplicated derivations collapsed onto)."""
+    if econf is None:
+        econf = EngineConfig.from_args(args)
+    if econf.arena.cache_len is None:
+        econf = econf.with_fields(cache_len=EngineConfig.derive_cache_len(
+            _lens(args.prompt_lens), _lens(args.gen_lens),
+            getattr(args, "length_dist", "choice")))
+    econf = econf.replace(kernels=dataclasses.replace(
+        econf.kernels,
+        # kernels imply interpret lowering on CPU (configs.platform)
+        interpret=econf.kernels.use_kernels and kernel_interpret()))
+    if econf.mesh:
         # mesh-parallel path (DESIGN.md Section 10): params model-sharded,
         # arena slot/head-sharded, per-Mode jits carry explicit shardings.
-        # The real Pallas kernels run on every mesh size — griffin_linear
-        # shard_maps them over the model axis — so --use-kernels implies
-        # interpret on any CPU mesh (configs.platform picks the lowering);
-        # --spmd-fallback retires them to the decompaction oracle.
-        smesh = serve_mesh(args.mesh)
+        smesh = serve_mesh(econf.mesh)
         injector, detector = _fault_hooks(
             args, list(smesh.devices.flat), smesh.devices.shape[0])
-        return MeshServeEngine(
-            api, params, mesh=smesh, num_slots=args.slots,
-            cache_len=cache_len, policy=args.policy,
-            use_kernels=args.use_kernels,
-            interpret=args.use_kernels and kernel_interpret(),
-            spmd_kernels=not args.spmd_fallback,
-            measure_every=args.measure_every,
-            decode_chunk=args.decode_chunk,
-            fault_injector=injector, straggler=detector,
-            snapshot_dir=args.snapshot_dir,
-            recovery_model_parallel=args.remesh_model_parallel, plan=plan)
+        return MeshServeEngine(api, params, mesh=smesh, config=econf,
+                               fault_injector=injector, straggler=detector,
+                               plan=plan)
     injector, detector = _fault_hooks(args, jax.devices(), 1)
-    return ServeEngine(
-        api, params, num_slots=args.slots, cache_len=cache_len,
-        fns_factory=lambda: jit_serve_fns(api, mesh, args.slots, cache_len,
-                                          params=params,
-                                          decode_chunk=args.decode_chunk),
-        policy=args.policy, use_kernels=args.use_kernels,
-        interpret=args.use_kernels and kernel_interpret(),
-        measure_every=args.measure_every, decode_chunk=args.decode_chunk,
-        fault_injector=injector, straggler=detector,
-        snapshot_dir=args.snapshot_dir, plan=plan)
+    fns = None
+    if econf.arena.page_size is None:
+        # the sharding-annotated serve fns assume the fixed-arena cache
+        # tree; paged engines trace through the default opaque-cache fns
+        ns, cl = econf.arena.num_slots, econf.arena.cache_len
+        dc = econf.sched.decode_chunk
+        fns = lambda: jit_serve_fns(api, mesh, ns, cl, params=params,
+                                    decode_chunk=dc)
+    return ServeEngine(api, params, config=econf, fns_factory=fns,
+                       fault_injector=injector, straggler=detector, plan=plan)
 
 
 def _print_slo(rows, summary) -> None:
@@ -134,7 +136,8 @@ def _print_slo(rows, summary) -> None:
           f"attainment {summary['slo_attainment']}")
 
 
-def _run_router(api, params, args, mesh, cfg, fam_plan, reqs) -> None:
+def _run_router(api, params, args, mesh, cfg, fam_plan, reqs,
+                econf=None) -> None:
     """Multi-replica path (DESIGN.md Section 13): N engines behind the
     SLO-aware router.  A 'replica:' --inject-fault spec is consumed at
     the router level; kill/delay specs keep arming replica 0's internal
@@ -149,7 +152,8 @@ def _run_router(api, params, args, mesh, cfg, fam_plan, reqs) -> None:
     engines = []     # build eagerly so replica 0 reports its config once
 
     def make_engine():
-        eng = build_engine(api, params, args, mesh, plan=fam_plan)
+        eng = build_engine(api, params, args, mesh, plan=fam_plan,
+                           econf=econf)
         engines.append(eng)
         return eng
 
@@ -227,7 +231,22 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-1b")
     ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--config", default=None, metavar="PATH",
+                    help="EngineConfig JSON (runtime.config.EngineConfig"
+                         ".to_json): the file sets the baseline; CLI flags "
+                         "set to non-default values override it")
     ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--page-size", type=int, default=None,
+                    help="activate the paged KV arena (DESIGN.md Section "
+                         "14): power-of-two tokens per page; default keeps "
+                         "the fixed num_slots x cache_len arena")
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="physical page-pool size (default: fixed-arena "
+                         "capacity + the DUMP page)")
+    ap.add_argument("--kv-dtype", choices=("fp32", "int8"), default="fp32",
+                    help="paged KV page dtype: int8 stores quantized pages "
+                         "with per-token-row scales (gated logit tolerance; "
+                         "fp32 pages stay token-exact)")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-lens", default="8,16,32")
     ap.add_argument("--gen-lens", default="4,8,16")
@@ -337,6 +356,25 @@ def main(argv=None) -> None:
                          "max_queue_depth <= --queue-bound and shed "
                          "count > 0 (the CI overload stage)")
     args = ap.parse_args(argv)
+    econf = EngineConfig.from_args(
+        args, defaults={d: ap.get_default(d) for d in vars(args)})
+    if econf.arena.cache_len is None:
+        econf = econf.with_fields(cache_len=EngineConfig.derive_cache_len(
+            _lens(args.prompt_lens), _lens(args.gen_lens), args.length_dist))
+    # a --config file may have set fields the helpers below still read off
+    # the namespace; the resolved config is authoritative either way
+    args.slots = econf.arena.num_slots
+    args.decode_chunk = econf.sched.decode_chunk
+    args.use_kernels = econf.kernels.use_kernels
+    args.mesh = econf.mesh
+    args.replicas = econf.router.replicas
+    args.queue_bound = econf.router.queue_bound or 0
+    args.hedge_ms = econf.router.hedge_after or 0
+    args.shed_policy = econf.router.shed_policy
+    if args.inject_fault is None:
+        args.inject_fault = econf.fault.inject
+    if args.plan is None:
+        args.plan = econf.kernels.plan
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -364,7 +402,7 @@ def main(argv=None) -> None:
     max_gen = None
     if args.length_dist == "heavy":
         # heavy tails must still fit the fixed cache arena
-        max_gen = 2 * max(_lens(args.gen_lens))
+        max_gen = EngineConfig.heavy_gen_cap(_lens(args.gen_lens))
     reqs = synthetic_trace(cfg, num_requests=args.requests, seed=1,
                            prompt_lens=_lens(args.prompt_lens),
                            gen_lens=_lens(args.gen_lens),
@@ -376,13 +414,20 @@ def main(argv=None) -> None:
                            deadline_slack=slack_slo, ttft_deadline=ttft_slo)
 
     if args.replicas > 0:
-        _run_router(api, params, args, mesh, cfg, fam_plan, reqs)
+        _run_router(api, params, args, mesh, cfg, fam_plan, reqs,
+                    econf=econf)
         return
 
-    engine = build_engine(api, params, args, mesh, plan=fam_plan)
-    print(f"engine: {args.slots} slots x cache_len {engine.cache_len}, "
-          f"policy={args.policy}, mesh={args.mesh or 'unsharded'}, "
-          f"weight sparsity "
+    engine = build_engine(api, params, args, mesh, plan=fam_plan,
+                          econf=econf)
+    arena = "fixed"
+    if engine._paged is not None:
+        arena = (f"paged ps={engine._paged.page_size} "
+                 f"x {engine._paged.num_pages} pages "
+                 f"({engine._paged.kv_dtype})")
+    print(f"engine: {args.slots} slots x cache_len {engine.cache_len} "
+          f"({arena}), policy={econf.sched.policy}, "
+          f"mesh={args.mesh or 'unsharded'}, weight sparsity "
           f"{engine.b_sparsity:.2f} -> mode {engine.mode.value}")
 
     t0 = time.time()
@@ -426,6 +471,10 @@ def main(argv=None) -> None:
               f"{args.max_syncs_per_token}")
 
     if args.parity:
+        if engine._paged is not None and engine._paged.kv_dtype != "fp32":
+            print("parity SKIPPED: int8 KV pages are gated by logit "
+                  "tolerance (benchmarks), not token equality")
+            return
         if len(engine.mode_history) > 1:
             # tokens emitted before a mid-run category flip came from the
             # previous mode's kernels; a single final-mode oracle replay

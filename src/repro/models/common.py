@@ -255,6 +255,55 @@ def write_kv_slot(cache: jax.Array, update: jax.Array, slot: jax.Array
     return jax.lax.dynamic_update_slice(cache, update, (0, slot, 0, 0))
 
 
+def paged_write(pool: jax.Array, scale: Optional[jax.Array],
+                pages: jax.Array, update: jax.Array, pos: jax.Array,
+                page_size: int) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """Write a one-token K/V update into a paged pool (DESIGN.md Sec. 14).
+
+    ``pool``: (num_pages, page_size, ...) shared physical pages;
+    ``pages``: (B, max_pages) int32 page table (logical page j of row b ->
+    physical page id); ``update``: (B, 1, ...); ``pos``: scalar or (B,)
+    per-row position, exactly as ``write_kv_slot`` takes it.  Positions
+    wrap at ``max_pages * page_size`` so dead slots (whose positions keep
+    advancing after release) stay in range — their table rows point at the
+    DUMP page (id 0), which is never read, so their garbage writes are
+    discarded by construction.  When ``scale`` is given the pool is int8:
+    the row is quantized on the way in (optim.compression.quantize_rows)
+    and its per-token scale stored alongside.
+    """
+    from ..optim.compression import quantize_rows
+    B, maxp = pages.shape
+    posv = jnp.broadcast_to(jnp.asarray(pos), (B,)).astype(jnp.int32)
+    slot = posv % (maxp * page_size)
+    pid = jnp.take_along_axis(pages, (slot // page_size)[:, None],
+                              axis=1)[:, 0]
+    off = slot % page_size
+    row = update[:, 0]
+    if scale is not None:
+        q, s = quantize_rows(row, 1)
+        return pool.at[pid, off].set(q), scale.at[pid, off].set(s)
+    return pool.at[pid, off].set(row.astype(pool.dtype)), None
+
+
+def paged_view(pool: jax.Array, scale: Optional[jax.Array],
+               pages: jax.Array, dtype: Any) -> jax.Array:
+    """Gather each row's pages into a (B, max_pages * page_size, ...) view.
+
+    The engine rounds ``cache_len`` up to ``max_pages * page_size``, so
+    this view has exactly the fixed arena's (B, cache_len, ...) shape —
+    ``decode_attention``'s position mask then sees identical shapes and
+    fp32 paged decode is bit-identical to the fixed arena (masked entries
+    contribute an exact 0.0 either way).  int8 pools dequantize through
+    the per-token scales on the way out.
+    """
+    v = pool[pages]                      # (B, max_pages, page_size, ...)
+    if scale is not None:
+        s = scale[pages]
+        v = v.astype(jnp.float32) * s[(...,) + (None,) * (v.ndim - 3)]
+    B, maxp, ps = v.shape[:3]
+    return v.reshape(B, maxp * ps, *v.shape[3:]).astype(dtype)
+
+
 def length_mask(lengths: jax.Array, seq_len: int) -> jax.Array:
     """(B,) true prompt lengths -> (B, S) bool validity mask for a
     right-padded token batch (position i valid iff i < length).  The

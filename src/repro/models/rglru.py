@@ -27,8 +27,8 @@ import jax.numpy as jnp
 from ..configs.base import ModelConfig
 from .attention import decode_attention, local_attention
 from .common import (act_fn, dense_init, griffin_linear, layer_scan,
-                     length_mask, rms_norm, rope, stack_layers, take_last,
-                     write_kv_slot)
+                     length_mask, paged_view, paged_write, rms_norm, rope,
+                     stack_layers, take_last, write_kv_slot)
 
 Params = Dict[str, Any]
 LRU_C = 8.0
@@ -204,6 +204,33 @@ def attn_decode(cfg: ModelConfig, p: Params, x: jax.Array, kc, vc, pos):
             ).astype(x.dtype), kc, vc
 
 
+def attn_decode_paged(cfg: ModelConfig, p: Params, x: jax.Array, kc, vc,
+                      kscale, vscale, pages, pos):
+    """Paged twin of :func:`attn_decode` (runtime/paging.py).  Paging only
+    activates when ``window >= cache_len`` (discovery rule), where the
+    rolling slot/eff-pos algebra of the fixed path reduces for live rows to
+    write-at-``pos`` / attend-to-``pos`` — bit-identical on the gathered
+    view.  ``kscale``/``vscale`` are None for fp32 pools."""
+    B = x.shape[0]
+    H, KVH, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    per_slot = pos.ndim > 0
+    posv = pos[:, None] if per_slot else pos[None]
+    q = rope(griffin_linear(h, p["wq"]).reshape(B, 1, H, hd), posv,
+             cfg.rope_theta)
+    k = rope(griffin_linear(h, p["wk"]).reshape(B, 1, KVH, hd), posv,
+             cfg.rope_theta)
+    v = griffin_linear(h, p["wv"]).reshape(B, 1, KVH, hd)
+    page_size = kc.shape[1]
+    kc, kscale = paged_write(kc, kscale, pages, k, pos, page_size)
+    vc, vscale = paged_write(vc, vscale, pages, v, pos, page_size)
+    o = decode_attention(q, paged_view(kc, kscale, pages, x.dtype),
+                         paged_view(vc, vscale, pages, x.dtype), pos,
+                         window=None)
+    return (x + griffin_linear(o.reshape(B, 1, -1), p["wo"])
+            ).astype(x.dtype), kc, vc, kscale, vscale
+
+
 # ---------------------------------------------------------------------------
 # model assembly: scan over (rec, rec, attn) groups + rec tail
 # ---------------------------------------------------------------------------
@@ -349,17 +376,32 @@ def decode_step(cfg: ModelConfig, params: Params, cache: Params,
                 token: jax.Array):
     x = params["embed"][token]
     pos = cache["pos"] + 1
+    # "pages" marks a paged attention cache (runtime/paging.py): k/v become
+    # (groups, num_pages, page_size, KVH, hd) pools indexed through the slot
+    # page table; the recurrent/conv state leaves are untouched.
+    paged = "pages" in cache
+    pages = cache.get("pages")
+    int8 = "k_scale" in cache
 
     def group(x, xs):
-        gp, rh, rconv, kc, vc = xs
+        if paged and int8:
+            gp, rh, rconv, kc, vc, ksc, vsc = xs
+        else:
+            gp, rh, rconv, kc, vc = xs
+            ksc = vsc = None
         x, st1 = rec_mix(cfg, gp["rec1"], x, state=(rh[0], rconv[0]))
         x = mlp(cfg, gp["mlp1"], x)
         x, st2 = rec_mix(cfg, gp["rec2"], x, state=(rh[1], rconv[1]))
         x = mlp(cfg, gp["mlp2"], x)
-        x, kc, vc = attn_decode(cfg, gp["attn"], x, kc, vc, pos)
+        if paged:
+            x, kc, vc, ksc, vsc = attn_decode_paged(
+                cfg, gp["attn"], x, kc, vc, ksc, vsc, pages, pos)
+        else:
+            x, kc, vc = attn_decode(cfg, gp["attn"], x, kc, vc, pos)
         x = mlp(cfg, gp["mlp3"], x)
-        return x, (jnp.stack([st1[0], st2[0]]),
-                   jnp.stack([st1[1], st2[1]]), kc, vc)
+        st = (jnp.stack([st1[0], st2[0]]), jnp.stack([st1[1], st2[1]]))
+        return x, (st + (kc, vc, ksc, vsc) if paged and int8
+                   else st + (kc, vc))
 
     def tail(x, xs):
         tp, rh, rconv = xs
@@ -367,14 +409,23 @@ def decode_step(cfg: ModelConfig, params: Params, cache: Params,
         x = mlp(cfg, tp["mlp"], x)
         return x, st
 
-    x, (rec_h, rec_conv, ks, vs) = layer_scan(
-        cfg.scan_layers, group,
-        x, (params["groups"], cache["rec_h"], cache["rec_conv"],
-            cache["k"], cache["v"]))
+    xs = ((params["groups"], cache["rec_h"], cache["rec_conv"],
+           cache["k"], cache["v"], cache["k_scale"], cache["v_scale"])
+          if paged and int8
+          else (params["groups"], cache["rec_h"], cache["rec_conv"],
+                cache["k"], cache["v"]))
+    x, ys = layer_scan(cfg.scan_layers, group, x, xs)
     x, (tail_h, tail_conv) = layer_scan(
         cfg.scan_layers, tail, x,
         (params["tail"], cache["tail_h"], cache["tail_conv"]))
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     logits = griffin_linear(x[:, 0], params["head"])
-    return logits, {"rec_h": rec_h, "rec_conv": rec_conv, "tail_h": tail_h,
-                    "tail_conv": tail_conv, "k": ks, "v": vs, "pos": pos}
+    out = {"tail_h": tail_h, "tail_conv": tail_conv, "pos": pos}
+    if paged and int8:
+        (out["rec_h"], out["rec_conv"], out["k"], out["v"],
+         out["k_scale"], out["v_scale"]) = ys
+    else:
+        out["rec_h"], out["rec_conv"], out["k"], out["v"] = ys
+    if paged:
+        out["pages"] = pages
+    return logits, out

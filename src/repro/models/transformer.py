@@ -25,8 +25,8 @@ import jax.numpy as jnp
 from ..configs.base import ModelConfig
 from .attention import attention, decode_attention
 from .common import (act_fn, dense_init, griffin_linear, layer_scan,
-                     length_mask, remat_fn, rms_norm, rope, stack_layers,
-                     take_last, write_kv_slot)
+                     length_mask, paged_view, paged_write, remat_fn,
+                     rms_norm, rope, stack_layers, take_last, write_kv_slot)
 from .moe import init_moe, moe_ffn
 
 Params = Dict[str, Any]
@@ -158,6 +158,32 @@ def block_decode(cfg: ModelConfig, p: Params, x: jax.Array, k_cache, v_cache,
     return (x + f).astype(x.dtype), k_cache, v_cache
 
 
+def block_decode_paged(cfg: ModelConfig, p: Params, x: jax.Array, k_pool,
+                       v_pool, k_scale, v_scale, pages, pos, page_size: int):
+    """One-token block against paged KV pools (runtime/paging.py).
+
+    Paging only activates when the arch has no effective sliding window at
+    this cache length (discovery rule in runtime/paging.py), so the fixed
+    path's rolling/eff-pos algebra collapses for every live row
+    (``pos < max_pages * page_size``) to: write at ``pos``, attend with
+    ``window=None`` — bit-identical to :func:`block_decode` on the gathered
+    view.  ``k_scale``/``v_scale`` are None for fp32 pools."""
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    per_slot = pos.ndim > 0
+    q, k, v = _qkv(cfg, p, h,
+                   positions=pos[:, None] if per_slot else pos[None])
+    k_pool, k_scale = paged_write(k_pool, k_scale, pages, k, pos, page_size)
+    v_pool, v_scale = paged_write(v_pool, v_scale, pages, v, pos, page_size)
+    kc = paged_view(k_pool, k_scale, pages, x.dtype)
+    vc = paged_view(v_pool, v_scale, pages, x.dtype)
+    o = decode_attention(q, kc, vc, pos, window=None)
+    B = x.shape[0]
+    x = x + griffin_linear(o.reshape(B, 1, -1), p["wo"]).astype(x.dtype)
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    f, _ = _ffn(cfg, p, h2, decode=True)
+    return (x + f).astype(x.dtype), k_pool, v_pool, k_scale, v_scale
+
+
 # ---------------------------------------------------------------------------
 # model-level functions
 # ---------------------------------------------------------------------------
@@ -234,9 +260,16 @@ def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array,
 
 def decode_step(cfg: ModelConfig, params: Params, cache: Params,
                 token: jax.Array) -> Tuple[jax.Array, Params]:
-    """One decode step for the whole batch.  token: (B, 1) int32."""
+    """One decode step for the whole batch.  token: (B, 1) int32.
+
+    A ``"pages"`` key marks a paged cache (runtime/paging.py): ``k``/``v``
+    are then (L, num_pages, page_size, KVH, hd) pools indexed through the
+    per-slot page table, with optional ``k_scale``/``v_scale`` leaves for
+    int8 pools."""
     x = params["embed"][token]
     pos = cache["pos"] + 1
+    if "pages" in cache:
+        return _decode_step_paged(cfg, params, cache, x, pos)
     clen = cache["k"].shape[2]
 
     def body(x, xs):
@@ -249,3 +282,33 @@ def decode_step(cfg: ModelConfig, params: Params, cache: Params,
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     logits = griffin_linear(x[:, 0], unembed(cfg, params))
     return logits, {"k": ks, "v": vs, "pos": pos}
+
+
+def _decode_step_paged(cfg: ModelConfig, params: Params, cache: Params,
+                       x: jax.Array, pos: jax.Array) -> Tuple[jax.Array, Params]:
+    pages = cache["pages"]
+    page_size = cache["k"].shape[2]
+    int8 = "k_scale" in cache
+
+    def body(x, xs):
+        if int8:
+            lp, kp, vp, ks_, vs_ = xs
+        else:
+            lp, kp, vp = xs
+            ks_ = vs_ = None
+        x, kp, vp, ks_, vs_ = block_decode_paged(
+            cfg, lp, x, kp, vp, ks_, vs_, pages, pos, page_size)
+        return x, ((kp, vp, ks_, vs_) if int8 else (kp, vp))
+
+    xs = ((params["layers"], cache["k"], cache["v"],
+           cache["k_scale"], cache["v_scale"]) if int8
+          else (params["layers"], cache["k"], cache["v"]))
+    x, ys = layer_scan(cfg.scan_layers, body, x, xs)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = griffin_linear(x[:, 0], unembed(cfg, params))
+    out = {"pos": pos, "pages": pages}
+    if int8:
+        out["k"], out["v"], out["k_scale"], out["v_scale"] = ys
+    else:
+        out["k"], out["v"] = ys
+    return logits, out

@@ -23,7 +23,8 @@ import numpy as np
 from ..configs.base import ModelConfig
 from .attention import attention, decode_attention
 from .common import (act_fn, dense_init, griffin_linear, layer_scan,
-                     rms_norm, rope, stack_layers, take_last, write_kv_slot)
+                     paged_view, paged_write, rms_norm, rope, stack_layers,
+                     take_last, write_kv_slot)
 
 Params = Dict[str, Any]
 
@@ -194,9 +195,21 @@ def decode_step(cfg: ModelConfig, params: Params, cache: Params,
     per_slot = pos.ndim > 0
     B = x.shape[0]
     H, hd = cfg.num_heads, cfg.hd
+    # "pages" marks a paged self-attention cache (runtime/paging.py): k/v
+    # become (L, num_pages, page_size, H, hd) pools indexed through the slot
+    # page table; the cross-attention xk/xv leaves stay fixed (encoder K/V
+    # is written once at admission, never grows).
+    paged = "pages" in cache
+    pages = cache.get("pages")
+    page_size = cache["k"].shape[2]
+    int8 = "k_scale" in cache
 
     def body(x, xs):
-        lp, kc, vc, xk, xv = xs
+        if paged and int8:
+            lp, kc, vc, kscale, vscale, xk, xv = xs
+        else:
+            lp, kc, vc, xk, xv = xs
+            kscale = vscale = None
         h = rms_norm(x, lp["ln1"], cfg.norm_eps)
         posv = pos[:, None] if per_slot else pos[None]
         q = rope(griffin_linear(h, lp["self"]["wq"]).reshape(B, 1, H, hd),
@@ -204,9 +217,15 @@ def decode_step(cfg: ModelConfig, params: Params, cache: Params,
         k = rope(griffin_linear(h, lp["self"]["wk"]).reshape(B, 1, H, hd),
                  posv, cfg.rope_theta)
         v = griffin_linear(h, lp["self"]["wv"]).reshape(B, 1, H, hd)
-        kc = write_kv_slot(kc, k, pos)
-        vc = write_kv_slot(vc, v, pos)
-        o = decode_attention(q, kc, vc, pos)
+        if paged:
+            kc, kscale = paged_write(kc, kscale, pages, k, pos, page_size)
+            vc, vscale = paged_write(vc, vscale, pages, v, pos, page_size)
+            o = decode_attention(q, paged_view(kc, kscale, pages, x.dtype),
+                                 paged_view(vc, vscale, pages, x.dtype), pos)
+        else:
+            kc = write_kv_slot(kc, k, pos)
+            vc = write_kv_slot(vc, v, pos)
+            o = decode_attention(q, kc, vc, pos)
         x = (x + griffin_linear(o.reshape(B, 1, -1),
                                 lp["self"]["wo"])).astype(x.dtype)
         # cross attention against the static encoder K/V
@@ -218,13 +237,22 @@ def decode_step(cfg: ModelConfig, params: Params, cache: Params,
         h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
         f = griffin_linear(act_fn(cfg.act)(
             griffin_linear(h2, lp["mlp"]["w_up"])), lp["mlp"]["w_down"])
+        if paged and int8:
+            return (x + f).astype(x.dtype), (kc, vc, kscale, vscale)
         return (x + f).astype(x.dtype), (kc, vc)
 
-    x, (ks, vs) = layer_scan(
-        cfg.scan_layers, body,
-        x, (params["dec_layers"], cache["k"], cache["v"],
-            cache["xk"], cache["xv"]))
+    xs = ((params["dec_layers"], cache["k"], cache["v"], cache["k_scale"],
+           cache["v_scale"], cache["xk"], cache["xv"]) if paged and int8
+          else (params["dec_layers"], cache["k"], cache["v"],
+                cache["xk"], cache["xv"]))
+    x, ys = layer_scan(cfg.scan_layers, body, x, xs)
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     logits = griffin_linear(x[:, 0], params["head"])
-    return logits, {"k": ks, "v": vs, "xk": cache["xk"], "xv": cache["xv"],
-                    "pos": pos}
+    out = {"xk": cache["xk"], "xv": cache["xv"], "pos": pos}
+    if paged and int8:
+        out["k"], out["v"], out["k_scale"], out["v_scale"] = ys
+    else:
+        out["k"], out["v"] = ys
+    if paged:
+        out["pages"] = pages
+    return logits, out

@@ -26,6 +26,29 @@ def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
     return q.astype(jnp.float32) * scale
 
 
+def quantize_rows(x: jax.Array, ndim_keep: int) -> Tuple[jax.Array, jax.Array]:
+    """Row-wise int8 quantization: one scale per leading-``ndim_keep`` index.
+
+    Same round/clip/scale as :func:`quantize`, vectorized so the paged KV
+    arena (runtime/paging.py, DESIGN.md Section 14) gets one scale per
+    written token row: ``x`` with shape ``(*lead, *rest)`` where ``lead`` is
+    the first ``ndim_keep`` axes returns ``q`` of x.shape (int8) and
+    ``scale`` of shape ``lead`` (float32).
+    """
+    red = tuple(range(ndim_keep, x.ndim))
+    x32 = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(x32), axis=red), 1e-12) / 127.0
+    s = scale[(...,) + (None,) * len(red)]
+    q = jnp.clip(jnp.round(x32 / s), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_rows(q: jax.Array, scale: jax.Array) -> jax.Array:
+    """Inverse of :func:`quantize_rows` (float32 output)."""
+    s = scale[(...,) + (None,) * (q.ndim - scale.ndim)]
+    return q.astype(jnp.float32) * s
+
+
 def compressed_psum_tree(grads: Any, error: Any, mesh: Mesh,
                          axes: Tuple[str, ...]) -> Tuple[Any, Any]:
     """All-reduce mean of ``grads`` over ``axes`` with int8 error feedback.

@@ -53,8 +53,11 @@ from ..core.spec import Mode
 from ..kernels.griffin_spmm.ops import GriffinWeights
 from ..models.common import sparse_execution
 from ..models.registry import ModelApi
+from ..optim.compression import quantize_rows
 from ..sparsity.pruning import GEMM_WEIGHTS, sparsity_of
+from .config import EngineConfig, resolve_engine_config
 from .fault import DeviceLoss, FaultInjector
+from .paging import PageAllocator, PagedSpec, build_spec, paged_tree
 from .serve import make_chunk_ladder, pad_prompt_batch
 from .straggler import StragglerDetector
 
@@ -196,10 +199,18 @@ class Scheduler:
     def waiting_count(self) -> int:
         return len(self._by_arrival) + len(self._ready)
 
-    def admissions(self, step: int) -> List[Tuple[int, Request]]:
+    def admissions(self, step: int,
+                   gate: Optional[Callable[[Request], bool]] = None
+                   ) -> List[Tuple[int, Request]]:
         """Pop the (slot, request) pairs to admit at ``step`` — FCFS over
         the arrived portion of the queue, bounded by free slots and the
-        per-step admission budget."""
+        per-step admission budget.  ``gate`` (the paged arena's page
+        reservation, DESIGN.md Section 14) may veto the head request: it is
+        pushed back to the front of the ready queue and admission stops —
+        head-of-line blocking, so FCFS order is preserved while the pool
+        drains.  The gate is only invoked when a slot and budget are
+        available, so a True verdict (and any reservation it made) always
+        commits."""
         while self._by_arrival and self._by_arrival[0][0] <= step:
             _, seq, req = heapq.heappop(self._by_arrival)
             heapq.heappush(self._ready, (seq, req))
@@ -209,7 +220,10 @@ class Scheduler:
                   else self.max_admissions)
         out: List[Tuple[int, Request]] = []
         while self._free and self._ready and len(out) < budget:
-            _, req = heapq.heappop(self._ready)
+            seq, req = heapq.heappop(self._ready)
+            if gate is not None and not gate(req):
+                heapq.heappush(self._ready, (seq, req))
+                break
             slot = self._free.pop()
             self.running[slot] = req
             self.remaining[slot] = req.max_new_tokens
@@ -228,17 +242,24 @@ class Scheduler:
         self.finished.append(req.rid)
         return True
 
-    def would_admit(self, step: int) -> bool:
+    def would_admit(self, step: int,
+                    gate: Optional[Callable[[Request], bool]] = None) -> bool:
         """Non-mutating peek: would ``admissions(step)`` pop at least one
         request?  The router classifies a replica's tick phase with it
-        (prefill vs decode vs idle) without disturbing the queues."""
+        (prefill vs decode vs idle) without disturbing the queues.  Pass a
+        *non-mutating* ``gate`` (``ServeEngine._admission_fit`` for paged
+        arenas) to also account for page availability."""
         if not self._free:
             return False
         if self.policy == "static" and self.running:
             return False
-        if self._ready:
-            return True
-        return bool(self._by_arrival and self._by_arrival[0][0] <= step)
+        head = self._ready[0][1] if self._ready else None
+        if head is None and self._by_arrival \
+                and self._by_arrival[0][0] <= step:
+            head = self._by_arrival[0][2]
+        if head is None:
+            return False
+        return gate(head) if gate is not None else True
 
     def cancel_slot(self, slot: int) -> Request:
         """Free ``slot`` without crediting a finished request — the
@@ -413,6 +434,60 @@ def _make_insert(axes: Any, jit_wrap: Optional[Callable] = None) -> Callable:
     return insert
 
 
+def _make_paged_insert(axes: Any, spec: PagedSpec,
+                       jit_wrap: Optional[Callable] = None) -> Callable:
+    """Paged-arena admission (DESIGN.md Section 14): the prefilled
+    single-request cache's pageable leaves are reshaped into (stack,
+    max_pages, page_size, ...) token pages and scattered onto the slot's
+    reserved physical pages (``page_row``); unreserved logical pages map to
+    the DUMP page, so bucket padding beyond the reservation is discarded by
+    construction.  The slot's page-table row is installed in the same
+    dispatch, every non-pageable leaf takes the fixed-arena
+    dynamic_update_slice path, and int8 pools quantize per token row on the
+    way in (optim.compression.quantize_rows), storing the scales alongside.
+    No resident page is ever copied — admission is one scatter per pageable
+    leaf regardless of pool occupancy."""
+    wrap = jit_wrap or functools.partial(jax.jit, donate_argnums=(0, 1, 2))
+
+    @wrap
+    def insert(pool, tokens, remaining, sub, logits, slot, rem, page_row):
+        def one(pl, sl, ax):
+            if ax < 0:
+                return jax.lax.dynamic_update_slice(
+                    pl, sl.astype(pl.dtype).reshape(1), (slot,))
+            starts = [0] * pl.ndim
+            starts[ax] = slot
+            return jax.lax.dynamic_update_slice(pl, sl.astype(pl.dtype),
+                                                tuple(starts))
+        out = {}
+        for key, pl in pool.items():
+            if key == "pages":
+                out[key] = pl.at[slot].set(page_row)
+            elif key in spec.paged_keys or key.endswith("_scale"):
+                pass                       # rewritten with their pool below
+            else:
+                out[key] = jax.tree.map(one, pl, sub[key], axes[key])
+        for key in spec.paged_keys:
+            x = sub[key][:, 0]                   # (stack, cache_len, *rest)
+            x = x.reshape(x.shape[0], spec.max_pages, spec.page_size,
+                          *x.shape[2:])
+            if spec.kv_dtype == "int8":
+                q, s = quantize_rows(x, 3)
+                out[key] = pool[key].at[:, page_row].set(q)
+                out[key + "_scale"] = \
+                    pool[key + "_scale"].at[:, page_row].set(s)
+            else:
+                out[key] = pool[key].at[:, page_row].set(
+                    x.astype(pool[key].dtype))
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)          # (1,)
+        tokens = jax.lax.dynamic_update_slice(tokens, tok[:, None], (slot, 0))
+        remaining = jax.lax.dynamic_update_slice(
+            remaining, rem.reshape(1), (slot,))
+        return out, tokens, remaining, tok
+
+    return insert
+
+
 def _default_serve_fns(api: ModelApi, cache_len: int, decode_chunk: int = 8):
     """Unsharded single-host jits; the mesh-aware factory is
     ``runtime.serve.jit_serve_fns`` (launch/serve.py passes it in).  The
@@ -484,6 +559,11 @@ class EngineSnapshot:
     stats: Dict[str, int]
     prefill_buckets: set
     ckpt_step: Optional[int] = None
+    # paged-arena host state (allocator free list, slot->pages map, dirty
+    # slots pending reclamation) — the device-side pool/page-table/scale
+    # arrays already ride ``device["cache"]``, so replay after a restore
+    # reproduces the exact same page assignments (DESIGN.md Section 14)
+    paging: Optional[Dict] = None
 
 
 # ---------------------------------------------------------------------------
@@ -515,19 +595,47 @@ class ServeEngine:
     ``recoveries``/``recovery_log`` record what happened.
     """
 
-    def __init__(self, api: ModelApi, params: Any, *, num_slots: int,
-                 cache_len: int, fns_factory: Optional[Callable] = None,
-                 policy: str = "continuous", max_admissions_per_step: int = 1,
-                 use_kernels: bool = False, interpret: bool = False,
-                 spmd_kernels: bool = True,
-                 a_sparsity: Optional[float] = None, block_m: int = 128,
-                 measure_every: int = 8, decode_chunk: int = 8,
-                 bucket_prompts: bool = True, fused: bool = True,
+    def __init__(self, api: ModelApi, params: Any, *,
+                 config: Optional[EngineConfig] = None,
+                 fns_factory: Optional[Callable] = None,
                  fault_injector: Optional[FaultInjector] = None,
                  straggler: Optional[StragglerDetector] = None,
-                 snapshot_dir: Optional[str] = None, plan: Any = None):
+                 plan: Any = None, **legacy: Any):
+        # ``config=EngineConfig(...)`` is the construction path (DESIGN.md
+        # Section 14); the old flat keywords (num_slots=, cache_len=, ...)
+        # still work for one release via the deprecation shim.  Runtime
+        # objects (fns_factory, fault_injector, straggler, the resolved
+        # kernel plan) stay direct arguments — they are not serializable
+        # configuration.
+        config = resolve_engine_config(config, legacy, type(self).__name__)
+        self.config = config
         self.api = api
         self.params = params
+        if config.arena.cache_len is None:
+            raise ValueError("cache_len is required: set "
+                             "ArenaConfig.cache_len (or legacy cache_len=)")
+        # paged arena resolution: a page_size activates the paged pool when
+        # the family exposes pageable leaves (runtime/paging.py discovery;
+        # xlstm's recurrent state degrades to the fixed arena), and
+        # cache_len rounds up to a page multiple so pooled views keep the
+        # fixed arena's shapes (fp32 paging stays bit-exact)
+        self._paged, cache_len = build_spec(
+            api, config.arena.num_slots, config.arena.cache_len,
+            config.arena.page_size, config.arena.num_pages,
+            config.arena.kv_dtype)
+        num_slots = config.arena.num_slots
+        policy = config.sched.policy
+        max_admissions_per_step = config.sched.max_admissions_per_step
+        use_kernels = config.kernels.use_kernels
+        interpret = config.kernels.interpret
+        spmd_kernels = config.kernels.spmd_kernels
+        a_sparsity = config.kernels.a_sparsity
+        block_m = config.kernels.block_m
+        measure_every = config.sched.measure_every
+        decode_chunk = config.sched.decode_chunk
+        bucket_prompts = config.sched.bucket_prompts
+        fused = config.sched.fused
+        snapshot_dir = config.fault.snapshot_dir
         # tuned kernel plan (repro.tuning, DESIGN.md Section 12): a
         # KernelPlan (resolved by this model's family) or a FamilyPlan.
         # Only the Mode-selection thresholds act here — compaction
@@ -604,6 +712,18 @@ class ServeEngine:
         self._evicted: set = set()
         self._params_host = (jax.tree.map(np.asarray, params)
                              if self._recovery_armed() else None)
+        # paged-arena host bookkeeping (DESIGN.md Section 14): the physical
+        # page allocator, the slot -> reserved-pages map, reservations made
+        # by the admission gate this tick, and dead slots whose page-table
+        # rows await the tick-start DUMP redirect + page reclamation
+        self._page_alloc = (PageAllocator(self._paged.num_pages)
+                            if self._paged is not None else None)
+        self._slot_pages: Dict[int, List[int]] = {}
+        self._reserved_pages: Dict[int, List[int]] = {}
+        self._dirty_slots: set = set()
+        self._clear_pages = (jax.jit(
+            lambda pages, mask: jnp.where(mask[:, None], 0, pages),
+            donate_argnums=(0,)) if self._paged is not None else None)
         self._init_device_state()
 
     # device placement hooks: the mesh-parallel engine
@@ -613,13 +733,21 @@ class ServeEngine:
     # identical either way
     _spmd_mesh = None          # consumed by _scope(); None = single-device
 
-    def _init_device_state(self) -> None:
-        """Allocate the arena (``_promote_arena`` over init_cache's tree),
-        the donated slot-insert jit, and the token/remaining device
-        buffers."""
-        self.cache = _promote_arena(
+    def _arena(self) -> Any:
+        """The engine's device arena tree: ``_promote_arena`` over
+        init_cache's tree, rewritten into pool + page-table form when the
+        arena is paged (runtime.paging.paged_tree)."""
+        base = _promote_arena(
             self.api.init_cache(self.num_slots, self.cache_len),
             self.num_slots)
+        if self._paged is not None:
+            return paged_tree(base, self.num_slots, self._paged)
+        return base
+
+    def _init_device_state(self) -> None:
+        """Allocate the arena (``_arena``), the donated slot-insert jit,
+        and the token/remaining device buffers."""
+        self.cache = self._arena()
         self._build_insert()
         self._tokens = jnp.zeros((self.num_slots, 1), jnp.int32)
         self._remaining = jnp.zeros((self.num_slots,), jnp.int32)
@@ -627,7 +755,69 @@ class ServeEngine:
     def _build_insert(self) -> None:
         """(Re)jit the donated slot-insert — recovery rebuilds it when the
         arena shardings changed with the mesh (runtime.mesh_serve)."""
-        self._insert = _make_insert(_batch_axes(self.api, self.cache_len))
+        axes = _batch_axes(self.api, self.cache_len)
+        self._insert = (_make_paged_insert(axes, self._paged)
+                        if self._paged is not None else _make_insert(axes))
+
+    # -- paged-arena bookkeeping (DESIGN.md Section 14) ---------------------
+
+    def _page_gate(self, req: Request) -> bool:
+        """Admission gate: reserve the physical pages covering prompt +
+        generation before the scheduler commits the slot.  On pool
+        exhaustion the request stays at the head of the ready queue
+        (head-of-line blocking keeps FCFS order); pages free up as running
+        requests finish."""
+        need = self._paged.pages_needed(req.prompt_len + req.max_new_tokens)
+        ids = self._page_alloc.reserve(need)
+        if ids is None:
+            return False
+        self._reserved_pages[req.rid] = ids
+        return True
+
+    def _admission_gate(self) -> Optional[Callable[[Request], bool]]:
+        return self._page_gate if self._paged is not None else None
+
+    def _admission_fit(self, req: Request) -> bool:
+        """Non-mutating twin of ``_page_gate`` for ``would_admit`` peeks
+        (the router's phase classification)."""
+        if self._paged is None:
+            return True
+        need = self._paged.pages_needed(req.prompt_len + req.max_new_tokens)
+        return need <= self._page_alloc.free_pages
+
+    def _flush_dirty(self) -> None:
+        """Tick-start reclamation: dead slots' page-table rows are
+        redirected to the DUMP page on device (so their garbage decode
+        writes stop landing on reclaimable pages) and their physical pages
+        return to the allocator, becoming reservable by this tick's
+        admissions.  Release is O(max_pages) metadata — no page is
+        copied."""
+        if self._paged is None or not self._dirty_slots:
+            return
+        mask = np.zeros((self.num_slots,), bool)
+        mask[sorted(self._dirty_slots)] = True
+        self.cache = dict(self.cache, pages=self._clear_pages(
+            self.cache["pages"], jnp.asarray(mask)))
+        for slot in sorted(self._dirty_slots):
+            self._page_alloc.free(self._slot_pages.pop(slot, ()))
+        self._dirty_slots.clear()
+
+    def _paging_state(self) -> Dict:
+        """JSON-serializable snapshot of the paged host state — rides
+        ``EngineSnapshot.paging`` and the checkpoint manifest so recovery
+        (and fresh-process restarts) reproduce the exact page
+        assignments."""
+        return {"allocator": self._page_alloc.state_dict(),
+                "slot_pages": {str(s): [int(i) for i in ids]
+                               for s, ids in self._slot_pages.items()},
+                "dirty": sorted(int(s) for s in self._dirty_slots)}
+
+    def _restore_paging(self, state: Dict) -> None:
+        self._page_alloc = PageAllocator.from_state_dict(state["allocator"])
+        self._slot_pages = {int(s): [int(i) for i in ids]
+                            for s, ids in state["slot_pages"].items()}
+        self._dirty_slots = set(int(s) for s in state["dirty"])
+        self._reserved_pages = {}
 
     # -- mode plumbing ------------------------------------------------------
 
@@ -777,6 +967,11 @@ class ServeEngine:
         self.stats["emitted"] += 1
         if self.sched.emit(slot):
             out.finished = self.clock
+            if self._paged is not None:
+                # pages stay owned (the slot may still see garbage decode
+                # writes until the chunk ends) — reclaimed at the next
+                # tick's _flush_dirty, before any admission can reuse them
+                self._dirty_slots.add(slot)
 
     def cancel(self, rid: int) -> bool:
         """Withdraw a request — the router's hedge-loser / drain hook.
@@ -790,6 +985,8 @@ class ServeEngine:
             if req.rid == rid:
                 self._remaining = self._remaining.at[slot].set(0)
                 self.sched.cancel_slot(slot)
+                if self._paged is not None:
+                    self._dirty_slots.add(slot)
                 return True
         return self.sched.remove_waiting(rid)
 
@@ -838,13 +1035,20 @@ class ServeEngine:
         ev_start = len(self.events)
         pending: List[Tuple[int, int, jax.Array]] = []  # slot, rid, dev tok
         self._poll_fault("admission")
-        for slot, req in self.sched.admissions(self.clock):
+        self._flush_dirty()
+        for slot, req in self.sched.admissions(self.clock,
+                                               gate=self._admission_gate()):
             cache1, logits = self._prefill(req)
             self._poll_fault("prefill")
             rem = jnp.asarray(req.max_new_tokens - 1, jnp.int32)
-            self.cache, self._tokens, self._remaining, tok = self._insert(
-                self.cache, self._tokens, self._remaining, cache1, logits,
-                jnp.asarray(slot, jnp.int32), rem)
+            args = (self.cache, self._tokens, self._remaining, cache1,
+                    logits, jnp.asarray(slot, jnp.int32), rem)
+            if self._paged is not None:
+                ids = self._reserved_pages.pop(req.rid)
+                self._slot_pages[slot] = ids
+                args += (jnp.asarray(self._paged.page_row(ids)),)
+            self.cache, self._tokens, self._remaining, tok = \
+                self._insert(*args)
             self.outputs[req.rid] = RequestOutput(req.rid,
                                                   admitted=self.clock)
             pending.append((slot, req.rid, tok))
@@ -902,13 +1106,20 @@ class ServeEngine:
         fused path by construction."""
         ev_start = len(self.events)
         self._poll_fault("admission")
-        for slot, req in self.sched.admissions(self.clock):
+        self._flush_dirty()
+        for slot, req in self.sched.admissions(self.clock,
+                                               gate=self._admission_gate()):
             cache1, logits = self._prefill(req)
             self._poll_fault("prefill")
             rem = jnp.asarray(req.max_new_tokens - 1, jnp.int32)
-            self.cache, self._tokens, self._remaining, tok = self._insert(
-                self.cache, self._tokens, self._remaining, cache1, logits,
-                jnp.asarray(slot, jnp.int32), rem)
+            args = (self.cache, self._tokens, self._remaining, cache1,
+                    logits, jnp.asarray(slot, jnp.int32), rem)
+            if self._paged is not None:
+                ids = self._reserved_pages.pop(req.rid)
+                self._slot_pages[slot] = ids
+                args += (jnp.asarray(self._paged.page_row(ids)),)
+            self.cache, self._tokens, self._remaining, tok = \
+                self._insert(*args)
             self.outputs[req.rid] = RequestOutput(req.rid,
                                                   admitted=self.clock)
             self.stats["host_syncs"] += 1
@@ -964,12 +1175,17 @@ class ServeEngine:
             events_len=len(self.events), clock=self.clock, mode=self.mode,
             a_measured=self.a_measured, since_measure=self._since_measure,
             mode_history=list(self.mode_history), stats=dict(self.stats),
-            prefill_buckets=set(self.prefill_buckets))
+            prefill_buckets=set(self.prefill_buckets),
+            paging=(self._paging_state() if self._paged is not None
+                    else None))
         if self.snapshot_dir is not None:
+            extra = {"scheduler": self.sched.state_dict(),
+                     "clock": self.clock, "mode": self.mode.value}
+            if snap.paging is not None:
+                extra["paging"] = snap.paging
             ckpt_save(self.snapshot_dir, self.clock,
                       dict(device, params=self._params_host), keep=2,
-                      extra={"scheduler": self.sched.state_dict(),
-                             "clock": self.clock, "mode": self.mode.value})
+                      extra=extra)
             snap.ckpt_step = self.clock
         return snap
 
@@ -994,6 +1210,10 @@ class ServeEngine:
         self.mode_history = list(snap.mode_history)
         self.stats = dict(snap.stats)
         self.prefill_buckets = set(snap.prefill_buckets)
+        if self._paged is not None:
+            if snap.paging is None:
+                raise RuntimeError("paged engine snapshot lacks paging state")
+            self._restore_paging(snap.paging)
         self._restore_device(snap)
         self.recoveries += 1
         self.recovery_log.append({"step": snap.clock, "lost": sorted(lost),

@@ -48,9 +48,11 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..models.registry import ModelApi
+from .config import resolve_engine_config
 from .elastic import plan_mesh, reshard, surviving
 from .engine import (EngineSnapshot, ServeEngine, _batch_axes, _make_insert,
-                     _promote_arena)
+                     _make_paged_insert, _promote_arena)
+from .paging import PagedSpec, build_spec, paged_tree
 from .serve import make_chunk_ladder
 from .sharding import shard_cache, shard_params
 
@@ -77,20 +79,30 @@ def _promoted_arena_shapes(api: ModelApi, num_slots: int,
 
 
 def serve_shardings(api: ModelApi, mesh: Mesh, params: Any, num_slots: int,
-                    cache_len: int) -> Tuple[Any, Any, NamedSharding]:
+                    cache_len: int, *, paged: Optional[PagedSpec] = None
+                    ) -> Tuple[Any, Any, NamedSharding]:
     """(param, arena, replicated) NamedSharding trees for the mesh-serving
     layout (DESIGN.md Section 10).  ``params`` is the tree actually being
     served, so block-compacted ``GriffinWeights`` leaves get their own
-    b_comp/metadata specs."""
+    b_comp/metadata specs.  ``paged``: the arena's ``PagedSpec`` when the
+    engine pages its KV cache (runtime/paging.py) — the arena template is
+    then the pool + page-table tree and the paged leaf names route through
+    ``cache_spec``'s paged rules (pages replicated, pools dp-sharded on
+    their page axis)."""
     p_sh = shard_params(params, mesh, fsdp=False, serve=True)
     arena = _promoted_arena_shapes(api, num_slots, cache_len)
+    pset = frozenset()
+    if paged is not None:
+        arena = paged_tree(arena, num_slots, paged)
+        pset = frozenset(paged.paged_keys)
     c_sh = shard_cache(arena, mesh, num_slots, decode=True,
-                       heads=cache_heads(api))
+                       heads=cache_heads(api), paged=pset)
     return p_sh, c_sh, NamedSharding(mesh, P())
 
 
 def mesh_serve_fns(api: ModelApi, mesh: Mesh, params: Any, num_slots: int,
-                   cache_len: int, decode_chunk: int = 8, shardings=None):
+                   cache_len: int, decode_chunk: int = 8, shardings=None,
+                   paged: Optional[PagedSpec] = None):
     """Returns (prefill_fn, decode_fn, chunk_for, (p_sh, c_sh, rep)) — the
     sharded twin of ``runtime.serve.jit_serve_fns``, shaped for
     ``ServeEngine``'s fns factory (one invocation per selected Mode, each
@@ -109,7 +121,8 @@ def mesh_serve_fns(api: ModelApi, mesh: Mesh, params: Any, num_slots: int,
     skip four redundant full-tree spec walks.
     """
     p_sh, c_sh, rep = shardings or serve_shardings(api, mesh, params,
-                                                   num_slots, cache_len)
+                                                   num_slots, cache_len,
+                                                   paged=paged)
 
     def prefill_fn(params, inp):
         return api.prefill(params, inp, cache_len=cache_len)
@@ -175,19 +188,30 @@ class MeshServeEngine(ServeEngine):
     """
 
     def __init__(self, api: ModelApi, params: Any, *, mesh: Mesh,
-                 num_slots: int, cache_len: int,
-                 fns_factory: Optional[Callable] = None,
-                 recovery_model_parallel: Optional[int] = None, **kw):
+                 config=None, fns_factory: Optional[Callable] = None,
+                 fault_injector=None, straggler=None, plan=None, **legacy):
         missing = {"data", "model"} - set(mesh.axis_names)
         if missing:
             raise ValueError(f"serving mesh needs axes ('data', 'model'), "
                              f"got {mesh.axis_names}")
+        # resolve the config here (legacy kwargs fold in and warn once) so
+        # the sharding layout can be derived before the base constructor
+        # allocates anything; the base re-resolution is then a no-op.
+        config = resolve_engine_config(config, legacy, type(self).__name__)
+        if config.arena.cache_len is None:
+            raise ValueError("MeshServeEngine needs arena.cache_len")
+        num_slots = config.arena.num_slots
+        paged, cache_len = build_spec(
+            api, num_slots, config.arena.cache_len, config.arena.page_size,
+            config.arena.num_pages, config.arena.kv_dtype)
+        if cache_len != config.arena.cache_len:
+            config = config.with_fields(cache_len=cache_len)
         self.mesh = mesh
-        self._recovery_mp = recovery_model_parallel
+        self._recovery_mp = config.fault.recovery_model_parallel
         if mesh.size > 1:
             self._spmd_mesh = mesh          # class default is None
         self._shardings = serve_shardings(api, mesh, params, num_slots,
-                                          cache_len)
+                                          cache_len, paged=paged)
         params = jax.tree.map(jax.device_put, params, self._shardings[0])
         if fns_factory is None:
             # late-bound self.mesh/self._shardings: after a recovery remesh
@@ -195,17 +219,16 @@ class MeshServeEngine(ServeEngine):
             fns_factory = lambda: mesh_serve_fns(
                 api, self.mesh, self.params, num_slots, cache_len,
                 decode_chunk=self.decode_chunk, shardings=self._shardings)
-        super().__init__(api, params, num_slots=num_slots,
-                         cache_len=cache_len, fns_factory=fns_factory, **kw)
+        super().__init__(api, params, config=config, fns_factory=fns_factory,
+                         fault_injector=fault_injector, straggler=straggler,
+                         plan=plan)
 
     def _init_device_state(self) -> None:
         """Sharded twin of the base allocation: arena placed on the decode
         cache layout, ``_insert`` jitted with the arena in/out shardings
         (pool donated), token/remaining buffers replicated — they return
         to the host every chunk anyway."""
-        cache = _promote_arena(
-            self.api.init_cache(self.num_slots, self.cache_len),
-            self.num_slots)
+        cache = self._arena()
         _, c_sh, rep = self._shardings
         self.cache = jax.tree.map(jax.device_put, cache, c_sh)
         self._build_insert()
@@ -216,13 +239,23 @@ class MeshServeEngine(ServeEngine):
 
     def _build_insert(self) -> None:
         """Admission insert carrying the *current* arena shardings —
-        rebuilt by recovery after every remesh."""
+        rebuilt by recovery after every remesh.  The paged variant takes
+        the extra replicated page-row operand (runtime/paging.py)."""
         _, c_sh, rep = self._shardings
-        wrap = lambda f: jax.jit(
-            f, in_shardings=(c_sh, rep, rep, rep, rep, rep, rep),
-            out_shardings=(c_sh, rep, rep, rep), donate_argnums=(0, 1, 2))
-        self._insert = _make_insert(_batch_axes(self.api, self.cache_len),
-                                    jit_wrap=wrap)
+        axes = _batch_axes(self.api, self.cache_len)
+        if self._paged is not None:
+            wrap = lambda f: jax.jit(
+                f, in_shardings=(c_sh, rep, rep, rep, rep, rep, rep, rep),
+                out_shardings=(c_sh, rep, rep, rep),
+                donate_argnums=(0, 1, 2))
+            self._insert = _make_paged_insert(axes, self._paged,
+                                              jit_wrap=wrap)
+        else:
+            wrap = lambda f: jax.jit(
+                f, in_shardings=(c_sh, rep, rep, rep, rep, rep, rep),
+                out_shardings=(c_sh, rep, rep, rep),
+                donate_argnums=(0, 1, 2))
+            self._insert = _make_insert(axes, jit_wrap=wrap)
 
     # -- failure handling (DESIGN.md Section 11) ----------------------------
 
@@ -254,7 +287,7 @@ class MeshServeEngine(ServeEngine):
         self._spmd_mesh = self.mesh if self.mesh.size > 1 else None
         self._shardings = serve_shardings(self.api, self.mesh,
                                           self._params_host, self.num_slots,
-                                          self.cache_len)
+                                          self.cache_len, paged=self._paged)
         self.params = reshard(self._params_host, self._shardings[0])
         self._mode_fns.clear()      # jits bake in/out-shardings: retrace
         self._build_insert()

@@ -1,0 +1,217 @@
+"""Paged KV arena: fixed-size pages from a shared pool + on-device page table.
+
+The fixed ``num_slots x cache_len`` arena (PR 3) provisions every slot for the
+worst-case generation length, so heavy-tailed traces waste most of the KV
+memory and concurrency is capped long before compute.  Here the per-slot rows
+become fixed-size pages (power of two tokens each) drawn from one shared
+device-resident pool, indexed through an on-device ``(num_slots, max_pages)``
+int32 page table — the same scalar-prefetch metadata pattern the ``sparse_a``
+kernels use for their kidx/cnt index maps, applied to memory instead of MACs
+(DESIGN.md Section 14).
+
+Layout invariants:
+
+* A cache leaf is *pageable* iff its sequence extent tracks ``cache_len``
+  exactly (probed via ``jax.eval_shape`` at two lengths) with layout
+  ``(stack, batch, seq, ...)``.  Rolling sliding-window caches (seq extent
+  pinned at ``window < cache_len``) stay in the fixed arena; families with no
+  pageable leaf (xlstm's recurrent state) degrade to the fixed arena whole.
+* Pool leaf: ``(stack, num_pages, page_size, *rest)``; page table entry
+  ``pages[slot, j]`` maps logical page ``j`` of a slot to a physical page.
+* Page id 0 is the DUMP page: writes from dead/unreserved rows land there and
+  it is never read.  A zeroed page table is therefore safe by construction.
+* ``cache_len`` is rounded up to a multiple of ``page_size`` so the gathered
+  per-slot view ``(batch, max_pages * page_size, *rest)`` has exactly the
+  fixed arena's shape — fp32 paged serving is bit-identical to fixed.
+* int8 pools carry a ``"<name>_scale"`` ``(stack, num_pages, page_size)``
+  float32 leaf: one scale per written token row (quantize-on-write /
+  dequantize-on-read, reusing optim/compression.py round/clip/scale).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+DUMP_PAGE = 0
+KV_DTYPES = ("fp32", "int8")
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedSpec:
+    """Static description of a paged arena (hashable; closed over by jits)."""
+    page_size: int
+    num_pages: int            # total physical pages, including DUMP page 0
+    max_pages: int            # page-table width = cache_len // page_size
+    cache_len: int            # rounded up to a multiple of page_size
+    kv_dtype: str             # "fp32" | "int8"
+    paged_keys: Tuple[str, ...]
+
+    @property
+    def usable_pages(self) -> int:
+        return self.num_pages - 1
+
+    def pages_needed(self, total_tokens: int) -> int:
+        """Physical pages covering positions ``0..total_tokens-1``."""
+        return -(-total_tokens // self.page_size)
+
+    def page_row(self, ids: Sequence[int]) -> np.ndarray:
+        """(max_pages,) int32 logical->physical row; unreserved -> DUMP."""
+        row = np.zeros((self.max_pages,), np.int32)
+        row[: len(ids)] = np.asarray(ids, np.int32)
+        return row
+
+
+def discover_paged_keys(api: Any, cache_len: int) -> Tuple[str, ...]:
+    """Top-level cache keys whose seq extent tracks ``cache_len`` exactly.
+
+    Probes ``init_cache`` shapes at two lengths: a leaf is pageable iff the
+    only differing axis is axis 2, equal to the probe length at both probes
+    (so rolling-window caches, encoder cross-KV, and recurrent state all
+    stay fixed), and its batch axis is axis 1.
+    """
+    if cache_len < 2:
+        return ()
+    alt = cache_len // 2
+    t1 = jax.eval_shape(lambda: api.init_cache(2, cache_len))
+    t2 = jax.eval_shape(lambda: api.init_cache(2, alt))
+    tb = jax.eval_shape(lambda: api.init_cache(1, cache_len))
+    if not isinstance(t1, dict):
+        return ()
+    keys = []
+    for key, leaf in t1.items():
+        s1 = getattr(leaf, "shape", ())
+        s2 = getattr(t2[key], "shape", ())
+        sb = getattr(tb[key], "shape", ())
+        if len(s1) != len(s2) or len(s1) < 3:
+            continue
+        diff = [i for i in range(len(s1)) if s1[i] != s2[i]]
+        if diff != [2] or s1[2] != cache_len or s2[2] != alt:
+            continue
+        bdiff = [i for i in range(len(s1)) if s1[i] != sb[i]]
+        if bdiff != [1]:
+            continue
+        keys.append(key)
+    return tuple(sorted(keys))
+
+
+def build_spec(api: Any, num_slots: int, cache_len: int,
+               page_size: Optional[int], num_pages: Optional[int] = None,
+               kv_dtype: str = "fp32") -> Tuple[Optional[PagedSpec], int]:
+    """Resolve (spec, effective cache_len) for an engine's arena.
+
+    Returns ``(None, cache_len)`` when paging is off or the family exposes no
+    pageable leaf (fixed-arena degradation).  Otherwise cache_len is rounded
+    up to a multiple of page_size so pooled views match fixed-arena shapes.
+    """
+    if not page_size:
+        return None, cache_len
+    if page_size < 1 or page_size & (page_size - 1):
+        raise ValueError(f"page_size must be a power of two, got {page_size}")
+    if kv_dtype not in KV_DTYPES:
+        raise ValueError(f"kv_dtype must be one of {KV_DTYPES}, got {kv_dtype!r}")
+    clen = -(-cache_len // page_size) * page_size
+    keys = discover_paged_keys(api, clen)
+    if not keys:
+        return None, cache_len
+    maxp = clen // page_size
+    if num_pages is None:
+        num_pages = num_slots * maxp + 1          # fixed-arena capacity + DUMP
+    if num_pages < maxp + 1:
+        raise ValueError(
+            f"num_pages={num_pages} cannot hold one full slot "
+            f"({maxp} pages) plus the DUMP page")
+    spec = PagedSpec(page_size=page_size, num_pages=num_pages,
+                     max_pages=maxp, cache_len=clen, kv_dtype=kv_dtype,
+                     paged_keys=keys)
+    return spec, clen
+
+
+def _make(ref: Any, shape: Tuple[int, ...], dtype: Any) -> Any:
+    if isinstance(ref, jax.ShapeDtypeStruct):
+        return jax.ShapeDtypeStruct(shape, dtype)
+    return jnp.zeros(shape, dtype)
+
+
+def paged_tree(base: Dict[str, Any], num_slots: int, spec: PagedSpec
+               ) -> Dict[str, Any]:
+    """Rewrite a (promoted) fixed arena tree into its paged form.
+
+    Paged leaves become pools ``(stack, num_pages, page_size, *rest)``; int8
+    pools gain a ``<key>_scale`` leaf; a zeroed (= all-DUMP) ``"pages"``
+    table is added.  Works on concrete arrays and on eval_shape trees.
+    """
+    out: Dict[str, Any] = {}
+    ref = None
+    for key, leaf in base.items():
+        if key in spec.paged_keys:
+            shape = leaf.shape
+            assert shape[1] == num_slots and shape[2] == spec.cache_len, (
+                key, shape)
+            rest = tuple(shape[3:])
+            pool_shape = (shape[0], spec.num_pages, spec.page_size) + rest
+            if spec.kv_dtype == "int8":
+                out[key] = _make(leaf, pool_shape, jnp.int8)
+                out[key + "_scale"] = _make(
+                    leaf, pool_shape[:3], jnp.float32)
+            else:
+                out[key] = _make(leaf, pool_shape, leaf.dtype)
+            ref = leaf
+        else:
+            out[key] = leaf
+            ref = ref if ref is not None else leaf
+    out["pages"] = _make(ref, (num_slots, spec.max_pages), jnp.int32)
+    return out
+
+
+class PageAllocator:
+    """Host-side physical-page accounting: deterministic lowest-id-first.
+
+    Pages ``1..num_pages-1`` are allocatable (0 is the DUMP page).  Reserve
+    happens at admission time (head-of-line blocking when the pool is
+    exhausted), free at finish/cancel.  ``state_dict`` round-trips through
+    engine snapshots and checkpoint manifests so rollback-and-replay recovery
+    (DESIGN.md Section 11) reproduces the exact same page assignments.
+    """
+
+    def __init__(self, num_pages: int):
+        self.num_pages = num_pages
+        self._free: List[int] = list(range(1, num_pages))
+        heapq.heapify(self._free)
+        self._held: set = set()
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def reserve(self, n: int) -> Optional[List[int]]:
+        """Lowest-id ``n`` free pages, or None if the pool can't cover it."""
+        if n < 0 or n > len(self._free):
+            return None
+        ids = [heapq.heappop(self._free) for _ in range(n)]
+        self._held.update(ids)
+        return ids
+
+    def free(self, ids: Sequence[int]) -> None:
+        for i in ids:
+            if i not in self._held:
+                raise ValueError(f"freeing page {i} that is not reserved")
+            self._held.discard(i)
+            heapq.heappush(self._free, i)
+
+    def state_dict(self) -> Dict[str, Any]:
+        return {"num_pages": self.num_pages, "held": sorted(self._held)}
+
+    @classmethod
+    def from_state_dict(cls, state: Dict[str, Any]) -> "PageAllocator":
+        alloc = cls(int(state["num_pages"]))
+        held = [int(i) for i in state["held"]]
+        alloc._held = set(held)
+        alloc._free = [i for i in range(1, alloc.num_pages)
+                       if i not in alloc._held]
+        heapq.heapify(alloc._free)
+        return alloc

@@ -177,7 +177,8 @@ def shard_batch(batch: Any, mesh: Mesh) -> Any:
 
 
 def cache_spec(path: str, leaf, mesh: Mesh, batch: int,
-               decode: bool = False, heads: int = 0) -> P:
+               decode: bool = False, heads: int = 0,
+               paged: frozenset = frozenset()) -> P:
     """KV caches and recurrent state.
 
     Default (train/long-context) layout: batch dim -> dp axes; the
@@ -210,6 +211,28 @@ def cache_spec(path: str, leaf, mesh: Mesh, batch: int,
     spec: list = [None] * len(shape)
     if len(shape) == 0:
         return P()
+    # paged-arena leaves (runtime/paging.py) never match the slot-batch
+    # scan below — the page table is (num_slots, max_pages) and a pool's
+    # first data axis is num_pages — so they are classified by name before
+    # it: the table replicates (every shard gathers with the same ids),
+    # pools shard their *page* axis over dp (pages are batch-like: no
+    # reduction crosses them) plus the KV-head axis on "model" in the
+    # decode layout, and scale vectors follow their pool's page axis.
+    if paged and "'" in path:
+        name = path.rstrip("']").split("'")[-1]
+        if name == "pages":
+            return P(*spec)
+        base = name[:-6] if name.endswith("_scale") else name
+        if base in paged:
+            if len(shape) >= 2 and _divides(shape[1], dpn):
+                spec[1] = dp
+            if decode and not name.endswith("_scale") and mdl > 1 \
+                    and heads > 0 and _divides(heads, mdl):
+                for i in range(len(shape) - 2, 1, -1):
+                    if shape[i] == heads:
+                        spec[i] = "model"
+                        break
+            return P(*spec)
     placed_dp = None
     for i, d in enumerate(shape):
         if d == batch and _divides(d, dpn):
@@ -245,10 +268,12 @@ def cache_spec(path: str, leaf, mesh: Mesh, batch: int,
 
 
 def shard_cache(cache: Any, mesh: Mesh, batch: int,
-                decode: bool = False, heads: int = 0) -> Any:
+                decode: bool = False, heads: int = 0,
+                paged: frozenset = frozenset()) -> Any:
     flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
     specs = [NamedSharding(mesh, cache_spec(jax.tree_util.keystr(p), leaf,
-                                            mesh, batch, decode, heads))
+                                            mesh, batch, decode, heads,
+                                            paged))
              for p, leaf in flat]
     return jax.tree_util.tree_unflatten(treedef, specs)
 

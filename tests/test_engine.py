@@ -498,3 +498,71 @@ def test_engine_parity_dense_stepwise_chunk1(family):
 @pytest.mark.parametrize("family", SPARSE_FAMILIES)
 def test_engine_parity_sparse(family):
     _family_parity(FAMILY_ARCHS[family], sparse=True, num_requests=3)
+
+
+# ---------------------------------------------------------------------------
+# EngineConfig (runtime/config.py)
+# ---------------------------------------------------------------------------
+
+def test_engine_config_json_roundtrip():
+    from repro.runtime.config import ArenaConfig, EngineConfig
+    from repro.runtime.config import RouterConfig
+    cfg = EngineConfig(arena=ArenaConfig(num_slots=8, cache_len=96,
+                                         page_size=16, kv_dtype="int8"),
+                       router=RouterConfig(replicas=3, queue_bound=7),
+                       mesh="2x2").with_fields(decode_chunk=4)
+    assert EngineConfig.from_json(cfg.to_json()) == cfg
+
+
+def test_engine_config_json_rejects_unknown():
+    from repro.runtime.config import EngineConfig
+    with pytest.raises(ValueError):
+        EngineConfig.from_json('{"nope": {}}')
+    with pytest.raises(ValueError):
+        EngineConfig.from_json('{"arena": {"slotz": 4}}')
+
+
+def test_engine_config_with_fields_routes_and_rejects():
+    from repro.runtime.config import EngineConfig
+    cfg = EngineConfig().with_fields(num_slots=6, use_kernels=True,
+                                     mesh="4x1")
+    assert cfg.arena.num_slots == 6
+    assert cfg.kernels.use_kernels is True
+    assert cfg.mesh == "4x1"
+    with pytest.raises(TypeError):
+        EngineConfig().with_fields(slotz=6)
+
+
+def test_engine_config_derive_cache_len():
+    from repro.runtime.config import EngineConfig
+    assert EngineConfig.derive_cache_len((8, 16, 24), (12, 112)) == 137
+    # heavy tail: cap = 2 * max gen, the bench_serve workload bound
+    assert EngineConfig.heavy_gen_cap((12, 112)) == 224
+    assert EngineConfig.derive_cache_len((8, 16, 24), (12, 112),
+                                         "heavy") == 249
+
+
+def test_engine_legacy_kwargs_warn_and_match_config():
+    from repro.runtime.config import ArenaConfig, EngineConfig
+    api = fake_api()
+    params = api.init(jax.random.PRNGKey(0))
+    with pytest.warns(DeprecationWarning, match="EngineConfig"):
+        legacy = ServeEngine(api, params, num_slots=3, cache_len=24,
+                             decode_chunk=2)
+    cfg = EngineConfig(arena=ArenaConfig(num_slots=3, cache_len=24)
+                       ).with_fields(decode_chunk=2)
+    modern = ServeEngine(api, params, config=cfg)
+    assert (legacy.num_slots, legacy.cache_len) == (3, 24)
+    trace = lambda: [Request(rid=i, tokens=np.arange(1, 5 + i, dtype=np.int32),
+                             max_new_tokens=3) for i in range(3)]
+    outs_l = legacy.run(trace())
+    outs_m = modern.run(trace())
+    assert {r: o.tokens for r, o in outs_l.items()} == \
+           {r: o.tokens for r, o in outs_m.items()}
+
+
+def test_engine_unknown_kwarg_raises():
+    api = fake_api()
+    params = api.init(jax.random.PRNGKey(0))
+    with pytest.raises(TypeError, match="num_slotz"):
+        ServeEngine(api, params, num_slotz=3)

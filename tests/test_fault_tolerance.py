@@ -44,6 +44,7 @@ from repro.runtime.engine import (Attribution, Request, Scheduler,
 from repro.runtime.fault import (DeviceLoss, FaultInjector, ReplicaFault,
                                  parse_fault_spec)
 from repro.runtime.mesh_serve import MeshServeEngine, serve_shardings
+from repro.runtime.paging import PageAllocator
 from repro.runtime.router import RouterEngine
 from repro.runtime.straggler import StragglerConfig, StragglerDetector
 from repro.sparsity import sparsify_params
@@ -556,3 +557,100 @@ def test_chaos_checkpoint_reshards_2x2_to_1x2(tmp_path):
     devs = {dv for leaf in jax.tree_util.tree_leaves(out)
             for dv in leaf.sharding.device_set}
     assert devs <= set(np.asarray(small_mesh.devices).flat)
+
+
+# ---------------------------------------------------------------------------
+# paged arena under faults (DESIGN.md Section 14): the page table, allocator
+# state and int8 scales must ride snapshot -> rollback -> replay exactly
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("phase", ["admission", "prefill", "decode"])
+def test_single_device_kill_recovers_paged_token_exact(small, reference,
+                                                       phase):
+    """fp32 paged + kill at any phase must replay to the FIXED arena's
+    reference tokens (paged fp32 is bit-exact, and recovery restores the
+    pool + page table + host allocator from the tick-start snapshot)."""
+    cfg, api, params = small
+    inj = FaultInjector(kill_devices=(0,), at_step=2, phase=phase)
+    eng = ServeEngine(api, params, num_slots=3, cache_len=24,
+                      decode_chunk=4, page_size=8, fault_injector=inj)
+    assert eng._paged is not None
+    out = eng.run(_trace(cfg, 5))
+    assert inj.fired and eng.recoveries == 1
+    assert _tokens(out) == reference
+    # replay rebuilt the same page bookkeeping state machine: every page
+    # is either free or parked on a dead slot awaiting the next tick-start
+    # flush (the drained trace never starts another tick)
+    parked = sum(len(ids) for ids in eng._slot_pages.values())
+    assert eng._page_alloc.free_pages + parked == eng._paged.usable_pages
+    assert set(eng._slot_pages) <= eng._dirty_slots
+
+
+def test_single_device_kill_recovers_paged_int8(small):
+    """int8 paged kill -> replay must match the *unfaulted int8 paged* run
+    token for token: quantized pools and their per-row scales are restored
+    bit-exactly, so requantization never happens on replay."""
+    cfg, api, params = small
+
+    def engine(inj=None):
+        return ServeEngine(api, params, num_slots=3, cache_len=24,
+                           decode_chunk=4, page_size=8, kv_dtype="int8",
+                           fault_injector=inj)
+
+    ref = _tokens(engine().run(_trace(cfg, 5)))
+    inj = FaultInjector(kill_devices=(0,), at_step=3, phase="decode")
+    eng = engine(inj)
+    out = eng.run(_trace(cfg, 5))
+    assert inj.fired and eng.recoveries == 1
+    assert _tokens(out) == ref
+
+
+def test_snapshot_dir_carries_paging_state(tmp_path, small, reference):
+    """Disk snapshots must carry the paged host state in the manifest
+    (allocator + slot->pages + dirty set) next to the device pool/table,
+    and disk recovery must land on the reference tokens."""
+    cfg, api, params = small
+    d = str(tmp_path / "snap")
+    inj = FaultInjector(kill_devices=(0,), at_step=3, phase="decode")
+    eng = ServeEngine(api, params, num_slots=3, cache_len=24,
+                      decode_chunk=4, page_size=8, fault_injector=inj,
+                      snapshot_dir=d)
+    out = eng.run(_trace(cfg, 5))
+    assert eng.recoveries == 1 and _tokens(out) == reference
+    man = read_manifest(d)
+    paging = man["extra"]["paging"]
+    assert paging["allocator"]["num_pages"] == eng._paged.num_pages
+    restored = PageAllocator.from_state_dict(paging["allocator"])
+    held = {i for ids in paging["slot_pages"].values() for i in ids}
+    assert held <= set(paging["allocator"]["held"])
+    assert restored.free_pages == eng._paged.num_pages - 1 - \
+        len(paging["allocator"]["held"])
+
+
+@pytest.mark.chaos
+@_needs_devices(8)
+@pytest.mark.parametrize("kv_dtype", ["fp32", "int8"])
+@pytest.mark.parametrize("phase", ["admission", "prefill", "decode"])
+def test_chaos_paged_mesh_kill(phase, kv_dtype):
+    """Paged arena on a 2x2 mesh, kill one device at every injection point:
+    the dp-sharded page pool + replicated page table must snapshot,
+    reshard onto the 1x2 survivor mesh, and replay token-identical to the
+    *uninterrupted unsharded paged* run with the same kv_dtype (fp32 also
+    equals the fixed-arena reference by bit-exactness)."""
+    api, params, fixed_ref = _reference8("llama3.2-1b", False)
+    paged_eng = ServeEngine(api, params, num_slots=4, cache_len=16,
+                            decode_chunk=3, page_size=8, kv_dtype=kv_dtype)
+    assert paged_eng._paged is not None
+    ref = _tokens(paged_eng.run(_trace(api.cfg, 4)))
+    if kv_dtype == "fp32":
+        assert ref == fixed_ref
+    mesh = serve_mesh("2x2")
+    kill = int(np.asarray(mesh.devices).flat[-1].id)
+    inj = FaultInjector(kill_devices=(kill,), at_step=3, phase=phase)
+    eng = MeshServeEngine(api, params, mesh=mesh, num_slots=4, cache_len=16,
+                          decode_chunk=3, page_size=8, kv_dtype=kv_dtype,
+                          fault_injector=inj)
+    out = eng.run(_trace(api.cfg, 4))
+    assert inj.fired and eng.recoveries == 1
+    assert mesh_spec(eng.mesh) == "1x2"
+    assert _tokens(out) == ref, (phase, kv_dtype)

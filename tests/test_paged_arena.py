@@ -1,0 +1,369 @@
+"""Paged KV arena tests (DESIGN.md Section 14).
+
+Four layers, mirroring the subsystem's own:
+
+* ``PageAllocator`` units — deterministic lowest-first reuse, exhaustion,
+  double-free detection, state round-trip, and the admission-order
+  property (any interleaving of reserve/free yields non-overlapping
+  reservations that never include the DUMP page) — seeded deterministic
+  sweep always, hypothesis sweep when installed;
+* discovery — which cache leaves page per family (the eval_shape probe of
+  ``runtime.paging.discover_paged_keys``), cache_len rounding, and the
+  fixed-arena degradation for families with no pageable leaves (xlstm) or
+  a window smaller than the cache (rglru at long cache_len);
+* engine parity — fixed vs paged ``ServeEngine`` on the same trace must be
+  token-identical for fp32 pages (the gathered paged view has exactly the
+  fixed arena's shape, so reductions are bit-equal); transformer + the
+  xlstm degradation run tier-1, the full five-family x chunk matrix is the
+  tier-2 sweep;
+* int8 — per-row quantization error bound, and the teacher-forced logit
+  tolerance gate: int8-paged decode logits within INT8_LOGIT_RTOL of the
+  fp32-paged run on identical token inputs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.optim.compression import dequantize_rows, quantize_rows
+from repro.runtime.config import ArenaConfig, EngineConfig
+from repro.runtime.engine import (ServeEngine, _batch_axes,
+                                  _make_paged_insert, _promote_arena,
+                                  synthetic_trace)
+from repro.runtime.paging import (DUMP_PAGE, PageAllocator, build_spec,
+                                  discover_paged_keys, paged_tree)
+
+FAMILY_ARCHS = {
+    "transformer": "llama3.2-1b",
+    "moe": "mixtral-8x7b",
+    "whisper": "whisper-large-v3",
+    "xlstm": "xlstm-1.3b",
+    "hybrid": "recurrentgemma-9b",
+}
+
+# teacher-forced int8-vs-fp32 decode logit gap, relative to the fp32 logit
+# scale.  Measured ~0.003 on the reduced transformer; 0.02 leaves ~7x
+# headroom while still catching a broken quantization path outright
+# (mis-scaled pages blow past 0.1 immediately).
+INT8_LOGIT_RTOL = 0.02
+
+_API_CACHE = {}
+
+
+def _api(arch):
+    if arch not in _API_CACHE:
+        cfg = get_config(arch).reduced()
+        api = build_model(cfg)
+        _API_CACHE[arch] = (cfg, api, api.init(jax.random.PRNGKey(0)))
+    return _API_CACHE[arch]
+
+
+# ---------------------------------------------------------------------------
+# PageAllocator units
+# ---------------------------------------------------------------------------
+
+def test_allocator_lowest_first_and_deterministic_reuse():
+    alloc = PageAllocator(9)                    # pages 1..8 usable, 0 = DUMP
+    a = alloc.reserve(3)
+    b = alloc.reserve(3)
+    assert a == [1, 2, 3] and b == [4, 5, 6]
+    alloc.free(a)
+    # freed pages are reused lowest-first: same request, same pages
+    assert alloc.reserve(2) == [1, 2]
+    assert alloc.reserve(2) == [3, 7]
+
+
+def test_allocator_never_hands_out_dump():
+    alloc = PageAllocator(5)
+    ids = alloc.reserve(4)
+    assert DUMP_PAGE not in ids
+    assert alloc.reserve(1) is None             # pool exhausted, 0 stays out
+
+
+def test_allocator_exhaustion_is_all_or_nothing():
+    alloc = PageAllocator(9)
+    assert alloc.reserve(8) is not None
+    before = alloc.free_pages
+    assert alloc.reserve(1) is None
+    assert alloc.free_pages == before           # failed reserve takes nothing
+
+
+def test_allocator_double_free_raises():
+    alloc = PageAllocator(9)
+    ids = alloc.reserve(2)
+    alloc.free(ids)
+    with pytest.raises(ValueError):
+        alloc.free(ids)
+    with pytest.raises(ValueError):
+        alloc.free([7])                         # never reserved
+
+
+def test_allocator_state_roundtrip():
+    alloc = PageAllocator(17)
+    a = alloc.reserve(4)
+    b = alloc.reserve(5)
+    alloc.free(a)
+    clone = PageAllocator.from_state_dict(alloc.state_dict())
+    assert clone.free_pages == alloc.free_pages
+    # identical future behavior: same reservations in the same order
+    for _ in range(3):
+        assert clone.reserve(3) == alloc.reserve(3)
+    clone.free(b)
+    alloc.free(b)
+    assert clone.state_dict() == alloc.state_dict()
+
+
+def _run_alloc_ops(ops, num_pages=17):
+    """Admission-order property: under ANY interleaving of reserve/free,
+    live reservations never overlap each other and never include DUMP."""
+    alloc = PageAllocator(num_pages)
+    held = []
+    for kind, val in ops:
+        if kind == 0:
+            ids = alloc.reserve(1 + val % 6)
+            if ids is not None:
+                assert DUMP_PAGE not in ids
+                live = {i for h in held for i in h}
+                assert not live & set(ids), "overlapping page assignment"
+                held.append(ids)
+        elif held:
+            alloc.free(held.pop(val % len(held)))
+    live = [i for h in held for i in h]
+    assert len(live) == len(set(live))
+    for h in held:
+        alloc.free(h)
+    assert alloc.free_pages == num_pages - 1    # all pages come home
+
+
+def test_allocator_admission_order_property_seeded():
+    for seed in range(20):
+        rng = np.random.default_rng(seed)
+        ops = [(int(rng.integers(0, 2)), int(rng.integers(0, 64)))
+               for _ in range(60)]
+        _run_alloc_ops(ops)
+
+
+def test_allocator_admission_order_property_hypothesis():
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @hyp.given(st.lists(st.tuples(st.integers(0, 1), st.integers(0, 63)),
+                        max_size=80))
+    @hyp.settings(max_examples=60, deadline=None)
+    def prop(ops):
+        _run_alloc_ops(ops)
+
+    prop()
+
+
+# ---------------------------------------------------------------------------
+# discovery + spec
+# ---------------------------------------------------------------------------
+
+def test_discovery_per_family():
+    for family, arch in FAMILY_ARCHS.items():
+        _, api, _ = _api(arch)
+        keys = discover_paged_keys(api, 16)
+        if family == "xlstm":
+            assert keys == (), (family, keys)   # pure recurrent state
+        else:
+            assert keys == ("k", "v"), (family, keys)
+
+
+def test_whisper_cross_attention_stays_fixed():
+    # xk/xv (encoder K/V) are written once at admission and never grow —
+    # they must not be classified as pageable
+    _, api, _ = _api(FAMILY_ARCHS["whisper"])
+    assert "xk" not in discover_paged_keys(api, 16)
+
+
+def test_build_spec_rounds_cache_len_to_page_multiple():
+    _, api, _ = _api(FAMILY_ARCHS["transformer"])
+    spec, clen = build_spec(api, 2, 10, 4)
+    assert clen == 12 and spec.cache_len == 12
+    assert spec.max_pages == 3
+    assert spec.max_pages * spec.page_size == clen
+
+
+def test_build_spec_degrades_when_window_below_cache():
+    # rglru window (32, reduced) < cache_len 64: the rolling cache caps at
+    # the window, the length probes cannot differ, paging degrades to the
+    # fixed arena at the ORIGINAL cache_len
+    _, api, _ = _api(FAMILY_ARCHS["hybrid"])
+    spec, clen = build_spec(api, 2, 64, 4)
+    assert spec is None and clen == 64
+
+
+def test_build_spec_validates_page_size_and_dtype():
+    _, api, _ = _api(FAMILY_ARCHS["transformer"])
+    with pytest.raises(ValueError):
+        build_spec(api, 2, 16, 3)               # not a power of two
+    with pytest.raises(ValueError):
+        build_spec(api, 2, 16, 4, kv_dtype="fp8")
+
+
+def test_paged_tree_shapes_and_dtypes():
+    cfg, api, _ = _api(FAMILY_ARCHS["transformer"])
+    for kv_dtype, pool_dt in (("fp32", None), ("int8", jnp.int8)):
+        spec, clen = build_spec(api, 2, 16, 4, kv_dtype=kv_dtype)
+        arena = paged_tree(_promote_arena(api.init_cache(2, clen), 2),
+                           2, spec)
+        assert arena["pages"].shape == (2, spec.max_pages)
+        assert arena["pages"].dtype == jnp.int32
+        L = cfg.num_layers
+        assert arena["k"].shape[:3] == (L, spec.num_pages, spec.page_size)
+        if kv_dtype == "int8":
+            assert arena["k"].dtype == pool_dt
+            assert arena["k_scale"].shape == (L, spec.num_pages,
+                                              spec.page_size)
+            assert arena["k_scale"].dtype == jnp.float32
+        else:
+            assert "k_scale" not in arena
+
+
+# ---------------------------------------------------------------------------
+# fixed vs paged engine parity
+# ---------------------------------------------------------------------------
+
+def _engine(api, params, *, page_size=None, kv_dtype="fp32", decode_chunk=3,
+            num_slots=2, cache_len=16):
+    return ServeEngine(api, params, config=EngineConfig(
+        arena=ArenaConfig(num_slots=num_slots, cache_len=cache_len,
+                          page_size=page_size, kv_dtype=kv_dtype)
+    ).with_fields(decode_chunk=decode_chunk))
+
+
+def _fixed_vs_paged(arch, decode_chunk, kv_dtype="fp32", num_requests=4):
+    cfg, api, params = _api(arch)
+
+    def trace():
+        return synthetic_trace(cfg, num_requests=num_requests, seed=11,
+                               prompt_lens=(6, 10), gen_lens=(2, 4),
+                               arrival_every=1)
+
+    fixed = _engine(api, params, decode_chunk=decode_chunk)
+    outs_f = fixed.run(trace())
+    paged = _engine(api, params, page_size=4, kv_dtype=kv_dtype,
+                    decode_chunk=decode_chunk)
+    assert paged._paged is not None
+    outs_p = paged.run(trace())
+    return [(r.rid, outs_f[r.rid].tokens, outs_p[r.rid].tokens)
+            for r in trace()]
+
+
+@pytest.mark.parametrize("decode_chunk", [1, 3])
+def test_paged_parity_transformer(decode_chunk):
+    for rid, fixed, paged in _fixed_vs_paged(FAMILY_ARCHS["transformer"],
+                                             decode_chunk):
+        assert fixed == paged, rid
+
+
+def test_paged_engine_degrades_for_xlstm():
+    cfg, api, params = _api(FAMILY_ARCHS["xlstm"])
+    eng = _engine(api, params, page_size=4)
+    assert eng._paged is None                   # fixed-arena degradation
+    outs = eng.run(synthetic_trace(cfg, num_requests=3, seed=11,
+                                   prompt_lens=(6, 10), gen_lens=(2, 4),
+                                   arrival_every=1))
+    assert all(len(o.tokens) > 0 for o in outs.values())
+
+
+@pytest.mark.tier2
+@pytest.mark.parametrize("decode_chunk", [1, 3])
+@pytest.mark.parametrize("family", sorted(FAMILY_ARCHS))
+def test_paged_parity_all_families(family, decode_chunk):
+    if family == "xlstm":
+        pytest.skip("no pageable leaves — covered by the degradation test")
+    for rid, fixed, paged in _fixed_vs_paged(FAMILY_ARCHS[family],
+                                             decode_chunk):
+        assert fixed == paged, (family, rid)
+
+
+def test_paged_parity_survives_slot_reuse():
+    # more requests than slots x pages headroom: slots and pages recycle
+    # through the dirty-flush path mid-run and parity must hold throughout
+    for rid, fixed, paged in _fixed_vs_paged(FAMILY_ARCHS["transformer"],
+                                             decode_chunk=3,
+                                             num_requests=8):
+        assert fixed == paged, rid
+
+
+def test_paging_state_roundtrip():
+    _, api, params = _api(FAMILY_ARCHS["transformer"])
+    eng = _engine(api, params, page_size=4)
+    eng._page_alloc.reserve(3)
+    ids = eng._page_alloc.reserve(2)
+    eng._slot_pages[1] = ids
+    eng._dirty_slots.add(0)
+    state = eng._paging_state()
+    eng2 = _engine(api, params, page_size=4)
+    eng2._restore_paging(state)
+    assert eng2._paging_state() == state
+    assert eng2._reserved_pages == {}           # in-flight gates never ride
+
+
+# ---------------------------------------------------------------------------
+# int8 pages
+# ---------------------------------------------------------------------------
+
+def test_quantize_rows_error_bound():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(3, 5, 4, 8)) * 10.0, jnp.float32)
+    q, scale = quantize_rows(x, 2)
+    assert q.dtype == jnp.int8 and scale.shape == (3, 5)
+    err = jnp.max(jnp.abs(dequantize_rows(q, scale) - x))
+    # half-step rounding error at the per-row scale
+    assert float(err) <= float(jnp.max(scale)) * 0.5 + 1e-6
+
+
+def _paged_decode_logits(api, params, kv_dtype, prompt, steps, clen=16,
+                         page_size=4, forced=None):
+    """Raw paged decode loop: admit one prompt through the paged insert,
+    then decode ``steps`` tokens (teacher-forced when ``forced`` given),
+    returning the (steps+1, vocab) logit trajectory."""
+    spec, clen = build_spec(api, 1, clen, page_size, None, kv_dtype)
+    arena = paged_tree(_promote_arena(api.init_cache(1, clen), 1), 1, spec)
+    sub, logits0 = api.prefill(params, {"tokens": prompt}, cache_len=clen)
+    alloc = PageAllocator(spec.num_pages)
+    ids = alloc.reserve(spec.pages_needed(prompt.shape[1] + steps))
+    insert = _make_paged_insert(_batch_axes(api, clen), spec)
+    cache, _, _, tok = insert(
+        arena, jnp.zeros((1, 1), jnp.int32), jnp.zeros((1,), jnp.int32),
+        sub, logits0, jnp.asarray(0), jnp.asarray(steps),
+        jnp.asarray(spec.page_row(ids)))
+    outs = [logits0[0]]
+    nxt = tok[:, None]
+    for t in range(steps):
+        if forced is not None:
+            nxt = forced[t][None, None]
+        logits, cache = api.decode_step(params, cache, nxt)
+        outs.append(logits[0])
+        nxt = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+    return jnp.stack(outs)
+
+
+def test_int8_logit_tolerance_gate():
+    cfg, api, params = _api(FAMILY_ARCHS["transformer"])
+    prompt = jnp.asarray(
+        np.random.default_rng(3).integers(1, cfg.vocab_size, (1, 6)),
+        jnp.int32)
+    l32 = _paged_decode_logits(api, params, "fp32", prompt, steps=8)
+    toks = jnp.argmax(l32, -1).astype(jnp.int32)
+    l8 = _paged_decode_logits(api, params, "int8", prompt, steps=8,
+                              forced=toks)
+    rel = float(jnp.max(jnp.abs(l8 - l32)) / jnp.max(jnp.abs(l32)))
+    assert rel <= INT8_LOGIT_RTOL, rel
+
+
+def test_int8_parity_transformer_reduced():
+    # not guaranteed in general (int8 is gated by logit tolerance, not
+    # token equality) but deterministic on this seed-pinned reduced config
+    # — a regression here means the quantization path moved
+    for rid, fixed, paged in _fixed_vs_paged(FAMILY_ARCHS["transformer"],
+                                             decode_chunk=3,
+                                             kv_dtype="int8"):
+        assert fixed == paged, rid
